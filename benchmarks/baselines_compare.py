@@ -1,0 +1,82 @@
+"""Game-theoretic refinement vs the §2 literature baselines.
+
+Compares C_0 / Ct_0 / cut / weighted load imbalance at convergence against:
+random, greedy LPT (load-only), Kernighan–Lin (cut-only), spectral
+bisection, and Nandy–Loucks gain-only single-migration (the paper's closest
+prior work).  Also measures the §4.4 escape mechanisms (annealing, cluster
+moves) on top of the Nash equilibrium.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.annealing import simulated_annealing
+from repro.core.cluster import cluster_move_pass
+from repro.core.initial import initial_partition
+from repro.core.problem import make_problem
+from repro.core.refine import refine
+from repro.graphs.generators import random_degree_graph, random_weights
+from repro.partitioners import baselines
+
+from .common import section, table
+
+
+def _metrics(prob, assignment):
+    a = jnp.asarray(assignment, jnp.int32)
+    c0 = float(costs.global_cost_c0(prob, a))
+    ct0 = float(costs.global_cost_ct0(prob, a))
+    cut = float(costs.total_cut(prob.adjacency, a))
+    imb = float(costs.load_imbalance(prob, a)) * prob.num_machines
+    return c0, ct0, cut, imb
+
+
+def run(quick: bool = False):
+    section("Game refinement vs centralized baselines (§2)")
+    n = 120 if quick else 230
+    k = 5
+    adj = random_degree_graph(n, seed=1, dmin=3, dmax=6)
+    b, c = random_weights(adj, seed=2, mean=5.0)
+    prob = make_problem(c, b, np.ones(k) / k, mu=8.0)
+    r0 = np.asarray(initial_partition(jnp.asarray(adj), k,
+                                      jax.random.PRNGKey(0)))
+
+    game = refine(prob, jnp.asarray(r0), "c", max_turns=4000)
+    game_r = np.asarray(game.assignment)
+
+    anneal = simulated_annealing(prob, game.assignment,
+                                 jax.random.PRNGKey(1),
+                                 steps=512 if quick else 2048)
+    cluster = cluster_move_pass(prob, game.assignment, "c", hops=1)
+
+    candidates = {
+        "initial (App. A expansion)": r0,
+        "random": baselines.random_partition(n, k, 3),
+        "greedy LPT (load only)": baselines.greedy_load_partition(
+            np.asarray(prob.node_weights), np.ones(k) / k),
+        "Kernighan-Lin (cut only)": baselines.kernighan_lin_refine(
+            np.asarray(prob.adjacency), r0),
+        "spectral bisection": baselines.spectral_bisection(
+            np.asarray(prob.adjacency), k),
+        "Nandy-Loucks 1993": baselines.nandy_loucks_refine(
+            np.asarray(prob.adjacency), r0),
+        "GAME refine (C_i)": game_r,
+        "GAME + annealing (§4.4)": np.asarray(anneal.assignment),
+        "GAME + cluster move (§7)": np.asarray(cluster.assignment),
+    }
+    rows = []
+    for name, r in candidates.items():
+        c0, ct0, cut, imb = _metrics(prob, r)
+        rows.append([name, f"{c0:.0f}", f"{ct0:.0f}", f"{cut:.0f}",
+                     f"{imb:.2f}"])
+    table(["partitioner", "C_0", "Ct_0", "cut", "max-load/ideal"], rows)
+    print("\nthe game descends C_0 with machine-level state only; "
+          "cut-only baselines ignore load and load-only ignores the cut.")
+    return dict(zip(candidates, rows))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of ``fn(*args)`` after ``warmup`` calls."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def section(title: str):
+    bar = "=" * max(8, 74 - len(title))
+    print(f"\n==== {title} {bar[:74 - 6 - len(title)]}")
+
+
+def table(header: list[str], rows: list[list]):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(header)]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    print(fmt.format(*header))
+    print(fmt.format(*["-" * w for w in widths]))
+    for r in rows:
+        print(fmt.format(*[str(c) for c in r]))

@@ -1,0 +1,72 @@
+"""Paper Figs. 9 & 10: per-machine load traces with and without periodic
+refinement.  The paper shows visibly more balanced loads with refinement;
+we quantify with the time-averaged cross-machine coefficient of variation
+of the mean event-list length.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.initial import initial_partition
+from repro.des.engine import DESConfig, make_initial_state, run_simulation
+from repro.des.workload import flooded_packet_workload
+from repro.graphs.generators import preferential_attachment
+
+from .common import section, table
+
+
+def trace_run(adj, refine_freq: int, seed: int = 3, num_machines: int = 4):
+    n = adj.shape[0]
+    t = 24
+    spec = flooded_packet_workload(adj, seed, num_threads=t, num_windows=4,
+                                   scope=2, window_sim_time=60.0,
+                                   max_per_lp=3)
+    deg = int((adj > 0).sum(1).max())
+    cfg = DESConfig(num_lps=n, num_machines=num_machines, num_threads=t,
+                    event_capacity=max(48, 2 * deg + 8),
+                    history_capacity=max(96, 4 * deg + 16),
+                    inter_delay=8, intra_delay=1,
+                    refine_freq=refine_freq, trace_stride=25,
+                    max_ticks=120_000)
+    m0 = initial_partition(jnp.asarray(adj), num_machines,
+                           jax.random.PRNGKey(seed))
+    state = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+    tr = np.asarray(out.trace)[:int(out.trace_ptr)]
+    return out, tr
+
+
+def cv(trace: np.ndarray) -> float:
+    """Time-averaged coefficient of variation across machines (only ticks
+    with any load)."""
+    mean = trace.mean(axis=1)
+    active = mean > 1e-6
+    if not active.any():
+        return 0.0
+    std = trace[active].std(axis=1)
+    return float(np.mean(std / np.maximum(mean[active], 1e-6)))
+
+
+def run(quick: bool = False):
+    section("Figs. 9/10 — machine load balance without/with refinement")
+    n = 48 if quick else 96
+    adj = preferential_attachment(n, 5, m=2)
+    rows = []
+    out0, tr0 = trace_run(adj, refine_freq=0)
+    out1, tr1 = trace_run(adj, refine_freq=500)
+    for name, out, tr in (("no refinement (Fig. 9)", out0, tr0),
+                          ("refine every 500 ticks (Fig. 10)", out1, tr1)):
+        rows.append([name, int(out.tick), int(out.refines),
+                     int(out.moves), f"{cv(tr):.3f}"])
+    table(["run", "sim time", "refines", "migrations",
+           "load CV (lower = more balanced)"], rows)
+    print("\npaper claim: the refined run's load trace is visibly more "
+          "balanced; we check CV(refined) < CV(static).")
+    return {"cv_static": cv(tr0), "cv_refined": cv(tr1)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,84 @@
+"""Beyond-paper benchmark: the partition game as an MoE expert placer and
+pipeline-stage balancer (DESIGN.md §4).
+
+Expert placement: skewed (Zipf) expert loads with block co-activation;
+reports weighted-load imbalance and cross-group co-activation traffic
+before/after the game, vs a random and a greedy (sorted round-robin)
+placement.  Pipeline stages: heterogeneous layer costs vs the interval-DP
+optimum.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.planner import expert_placement, stage_assignment
+
+from .common import section, table
+
+
+def _imbalance(load, assign, g):
+    per = np.zeros(g)
+    np.add.at(per, assign, load)
+    return per.max() / (load.sum() / g)
+
+
+def _cross_traffic(coact, assign):
+    diff = assign[:, None] != assign[None, :]
+    return float((coact * diff).sum() / 2)
+
+
+def run(quick: bool = False):
+    section("Expert placement via the partition game (MoE EP)")
+    rng = np.random.default_rng(0)
+    e, g = (32, 4) if quick else (128, 16)
+    # Zipf-skewed loads + block co-activation (correlated expert pairs)
+    load = (1.0 / np.arange(1, e + 1) ** 1.1).astype(np.float32)
+    load = load / load.sum() * e
+    coact = np.zeros((e, e), np.float32)
+    for blk in range(0, e, 8):
+        idx = np.arange(blk, min(blk + 8, e))
+        coact[np.ix_(idx, idx)] = rng.uniform(0.5, 1.0, (idx.size, idx.size))
+    np.fill_diagonal(coact, 0)
+    coact = 0.5 * (coact + coact.T)
+
+    naive = np.arange(e) % g                          # hot experts colocated
+    greedy = np.empty(e, np.int64)                    # sorted round-robin
+    order = np.argsort(-load)
+    per = np.zeros(g)
+    for i in order:
+        j = int(np.argmin(per))
+        greedy[i] = j
+        per[j] += load[i]
+
+    perm, game, stats = expert_placement(jnp.asarray(load),
+                                         jnp.asarray(coact), g, mu=1.0,
+                                         current=jnp.asarray(naive, jnp.int32))
+    game = np.asarray(game)
+    rows = []
+    for name, a in (("naive (id % G)", naive), ("greedy LPT", greedy),
+                    ("GAME (Nash refine + repair)", game)):
+        rows.append([name, f"{_imbalance(load, a, g):.3f}",
+                     f"{_cross_traffic(coact, a):.1f}"])
+    table(["placement", "weighted imbalance (1.0 = perfect)",
+           "cross-group co-activation"], rows)
+    print(f"game moves: {stats['moves']}; imbalance "
+          f"{stats['imbalance_before']:.3f} -> {stats['imbalance_after']:.3f}")
+
+    section("Pipeline-stage assignment via the partition game (PP)")
+    L, S = (24, 4) if quick else (94, 8)
+    cost = rng.uniform(1.0, 1.2, L).astype(np.float32)
+    cost[:: max(L // 6, 1)] *= 3.0                    # heavy layers
+    assign, game_max, dp_max = stage_assignment(cost, 4.0, S)
+    rows = [["interval DP (oracle)", f"{dp_max:.2f}", "-"],
+            ["GAME (contiguous projection)", f"{game_max:.2f}",
+             f"{100 * (game_max / dp_max - 1):.1f}%"]]
+    table(["stage balancer", "max stage load", "gap vs optimal"], rows)
+    return {"imbalance_game": _imbalance(load, game, g),
+            "pp_gap": game_max / dp_max - 1}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Aggregate the dry-run JSONs into the §Roofline table.
+
+Reads benchmarks/results/dryrun_*.json (produced by repro.launch.dryrun),
+prints the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck, and emits the markdown table consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import section, table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str | None = None, mode: str = "tuned"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.json"))):
+        is_baseline = path.endswith("_baseline.json")
+        if (mode == "baseline") != is_baseline:
+            continue
+        with open(path) as f:
+            cell = json.load(f)
+        if mesh is None or cell.get("mesh") == mesh:
+            cells.append(cell)
+    cells.sort(key=lambda c: (c["arch"], SHAPE_ORDER.index(c["shape"])
+                              if c["shape"] in SHAPE_ORDER else 99,
+                              c.get("mesh", "")))
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+HEADER = ["arch", "shape", "mesh", "status", "compute", "mem floor",
+          "mem xla-ub", "collective", "dominant", "roof frac", "temp GB",
+          "useful FLOPs"]
+
+
+def row_for(cell):
+    if cell["status"] == "SKIP":
+        return [cell["arch"], cell["shape"], cell["mesh"], "SKIP"] \
+            + ["-"] * (len(HEADER) - 4)
+    if cell["status"] != "OK":
+        return [cell["arch"], cell["shape"], cell["mesh"], "FAIL"] \
+            + ["-"] * (len(HEADER) - 4)
+    frac = cell.get("useful_flop_ratio")
+    floor_mem = cell.get("analytic_memory_term_s")
+    if floor_mem is not None:
+        dom = cell.get("dominant_floor", cell["dominant"])
+        roof = cell.get("roofline_fraction_floor")
+    else:   # older records (pre-floor-model)
+        dom = cell["dominant"]
+        dom_s = {"compute": cell["compute_term_s"],
+                 "memory": cell["memory_term_s"],
+                 "collective": cell["collective_term_s"]}[dom]
+        roof = cell["compute_term_s"] / max(dom_s, 1e-30)
+    temp = cell.get("memory_analysis", {}).get("temp_size_in_bytes")
+    return [cell["arch"], cell["shape"], cell["mesh"], "OK",
+            fmt_s(cell["compute_term_s"]),
+            fmt_s(floor_mem) if floor_mem is not None else "-",
+            fmt_s(cell["memory_term_s"]),
+            fmt_s(cell["collective_term_s"]), dom,
+            f"{roof * 100:.1f}%" if roof is not None else "-",
+            f"{temp / 1e9:.1f}" if temp else "-",
+            f"{frac * 100:.0f}%" if frac else "-"]
+
+
+def run(quick: bool = False, mesh: str = "16x16", mode: str = "tuned"):
+    section(f"Roofline table from dry-run artifacts ({mesh} mesh, {mode})")
+    cells = load_cells(mesh, mode)
+    if not cells:
+        print("no dry-run results found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--mesh both --out benchmarks/results [--mode baseline]")
+        return {}
+    rows = [row_for(c) for c in cells]
+    table(HEADER, rows)
+    ok = [c for c in cells if c["status"] == "OK"]
+    doms = {}
+    for c in ok:
+        d = c.get("dominant_floor", c["dominant"])
+        doms[d] = doms.get(d, 0) + 1
+    print(f"\n{len(ok)} OK cells; dominant terms (floor view): {doms}")
+    fracs = [(c.get("roofline_fraction_floor", 0.0), c["arch"], c["shape"])
+             for c in ok]
+    fracs.sort()
+    print("worst roofline fractions:", [(a, s) for _, a, s in fracs[:3]])
+    # before/after comparison when both sweeps exist
+    base = {(c["arch"], c["shape"], c["mesh"]): c
+            for c in load_cells(mesh, "baseline") if c["status"] == "OK"}
+    if base and mode == "tuned":
+        print("\nbaseline -> tuned (collective_term_s | memory_term_s):")
+        for c in ok:
+            b = base.get((c["arch"], c["shape"], c["mesh"]))
+            if b is None:
+                continue
+            print(f"  {c['arch']:>22} {c['shape']:<12} "
+                  f"coll {b['collective_term_s']:9.2f} -> "
+                  f"{c['collective_term_s']:8.2f}   "
+                  f"mem {b['memory_term_s']:9.2f} -> "
+                  f"{c['memory_term_s']:8.2f}")
+    return {"cells": len(cells), "ok": len(ok)}
+
+
+def markdown(mesh: str = "16x16", mode: str = "tuned") -> str:
+    cells = load_cells(mesh, mode)
+    lines = ["| " + " | ".join(HEADER[:3] + HEADER[3:]) + " |",
+             "|" + "---|" * len(HEADER)]
+    for c in cells:
+        lines.append("| " + " | ".join(str(x) for x in row_for(c)) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1] if len(sys.argv) > 1 else "tuned"
+    run(mode=mode)
+    print()
+    run(mesh="2x16x16", mode=mode)

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+framework-level benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+  PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (baselines_compare, batch_study, fig7_8_simtime,
+               fig9_10_load_traces, kernel_bench, planner_bench, roofline,
+               table1_cost_frameworks, train_bench)
+
+SUITES = {
+    "table1": table1_cost_frameworks.run,
+    "batch": batch_study.run,
+    "fig7_8": fig7_8_simtime.run,
+    "fig9_10": fig9_10_load_traces.run,
+    "baselines": baselines_compare.run,
+    "planner": planner_bench.run,
+    "kernel": kernel_bench.run,
+    "train": train_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    t0 = time.time()
+    failures = []
+    for name in names:
+        t = time.time()
+        try:
+            SUITES[name](quick=args.quick)
+        except Exception:
+            failures.append(name)
+            print(f"[FAIL] suite {name}:")
+            traceback.print_exc()
+        print(f"[{name}: {time.time() - t:.1f}s]")
+    print(f"\ntotal: {time.time() - t0:.1f}s; "
+          f"{len(names) - len(failures)}/{len(names)} suites OK"
+          + (f"; FAILED: {failures}" if failures else ""))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

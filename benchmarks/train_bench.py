@@ -1,0 +1,60 @@
+"""End-to-end trainer benchmark on CPU (smoke configs): steps/s per family
+plus the expert-replanning path, and serving throughput.  The real-scale
+performance story lives in the dry-run roofline (benchmarks/roofline.py);
+this suite proves the full drivers run end to end.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.train import train
+from repro.models import init_params
+from repro.serving import Request, ServeConfig, ServingEngine
+
+from .common import section, table
+
+
+def run(quick: bool = False):
+    section("End-to-end training (smoke configs, CPU)")
+    steps = 12 if quick else 30
+    archs = ["qwen1.5-4b", "granite-moe-1b-a400m", "mamba2-1.3b",
+             "zamba2-7b"]
+    if quick:
+        archs = archs[:2]
+    rows = []
+    for arch in archs:
+        t0 = time.time()
+        _, losses = train(arch, smoke=True, steps=steps, global_batch=8,
+                          seq_len=64, log_every=10**9)
+        wall = time.time() - t0
+        rows.append([arch, steps, f"{losses[0]:.3f}", f"{losses[-1]:.3f}",
+                     f"{steps / wall:.2f}"])
+    table(["arch (smoke)", "steps", "loss[0]", "loss[-1]", "steps/s"], rows)
+
+    section("Serving throughput (continuous batching, smoke config, CPU)")
+    cfg = configs.get_smoke_config("qwen1.5-4b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(max_batch=4, max_len=96,
+                                                 cache_dtype="float32"))
+    rng = np.random.default_rng(0)
+    n_req = 6 if quick else 12
+    for i in range(n_req):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size,
+                                           int(rng.integers(4, 16))
+                                           ).astype(np.int32),
+                           max_new_tokens=16))
+    stats = eng.run()
+    table(["requests", "decode steps", "generated tokens", "tok/s (CPU)"],
+          [[stats["requests"], stats["decode_steps"],
+            stats["generated_tokens"], f"{stats['tok_per_s']:.1f}"]])
+    return {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper §6 end-to-end: optimistic parallel DES with dynamic repartitioning.
+
+Runs the limited-scope flooded packet-flow workload (moving hot spots) on
+the Time-Warp archetype twice — once with the initial partition only, once
+with periodic game-theoretic refinement — and reports simulation execution
+time, rollbacks and per-machine load balance (Figs. 7/9/10 in miniature).
+
+  PYTHONPATH=src python examples/des_partitioning.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.initial import initial_partition
+from repro.des.engine import DESConfig, make_initial_state, run_simulation
+from repro.des.workload import flooded_packet_workload
+from repro.graphs.generators import preferential_attachment
+
+
+def simulate(adj, refine_freq: int):
+    n = adj.shape[0]
+    spec = flooded_packet_workload(adj, seed=3, num_threads=16,
+                                   num_windows=4, scope=2,
+                                   window_sim_time=60.0, max_per_lp=3)
+    deg = int((adj > 0).sum(1).max())
+    cfg = DESConfig(num_lps=n, num_machines=4, num_threads=16,
+                    event_capacity=max(48, 2 * deg + 8),
+                    history_capacity=max(96, 4 * deg + 16),
+                    inter_delay=8, intra_delay=1,
+                    refine_freq=refine_freq, trace_stride=25,
+                    max_ticks=100_000)
+    m0 = initial_partition(jnp.asarray(adj), 4, jax.random.PRNGKey(1))
+    state = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
+    return run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+
+
+def main():
+    adj = preferential_attachment(64, seed=2, m=2)
+    static = simulate(adj, refine_freq=0)
+    dynamic = simulate(adj, refine_freq=400)
+    for name, out in (("static partition ", static),
+                      ("refine @400 ticks", dynamic)):
+        tr = np.asarray(out.trace)[:int(out.trace_ptr)]
+        active = tr.mean(1) > 1e-6
+        cv = float(np.mean(tr[active].std(1)
+                           / np.maximum(tr[active].mean(1), 1e-6))) \
+            if active.any() else 0.0
+        print(f"{name}: sim time = {int(out.tick):6d} ticks   "
+              f"rollbacks = {int(out.rollbacks):5d}   "
+              f"refines = {int(out.refines):2d}   "
+              f"migrations = {int(out.moves):3d}   load CV = {cv:.3f}")
+    speedup = (int(static.tick) - int(dynamic.tick)) / int(static.tick)
+    print(f"\ndynamic repartitioning changed simulation time by "
+          f"{100 * speedup:+.1f}% (paper Figs. 7/8: faster with frequent "
+          f"refinement)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's game-theoretic partitioner in 40 lines.
+
+Builds the §5.1 setup (230 LPs, 5 machines of unequal speed, mu=8), runs
+Appendix-A initial partitioning followed by iterative best-response
+refinement, and prints the potential descent + the equilibrium check.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.initial import initial_partition
+from repro.core.problem import make_problem, make_state
+from repro.core.refine import refine
+from repro.graphs.generators import random_degree_graph, random_weights
+
+
+def main():
+    # 1. the network model under simulation: a random graph of LPs
+    adj = random_degree_graph(230, seed=0, dmin=3, dmax=6)
+    node_w, edge_w = random_weights(adj, seed=1, mean=5.0)
+
+    # 2. the partition game: 5 machines with speeds (0.1..0.3), mu = 8
+    problem = make_problem(edge_w, node_w,
+                           speeds=[0.1, 0.2, 0.3, 0.3, 0.1], mu=8.0)
+
+    # 3. Appendix-A initial partition: focal nodes + hop-by-hop expansion
+    r0 = initial_partition(jnp.asarray(adj), 5, jax.random.PRNGKey(0))
+    print(f"initial  C_0 = {costs.global_cost_c0(problem, r0):12.0f}   "
+          f"Ct_0 = {costs.global_cost_ct0(problem, r0):10.0f}")
+
+    # 4. iterative refinement: machines take turns moving their most
+    #    dissatisfied node to its best-response machine (Thm 4.1 descent)
+    result = refine(problem, r0, framework="c")
+    r = result.assignment
+    print(f"refined  C_0 = {costs.global_cost_c0(problem, r):12.0f}   "
+          f"Ct_0 = {costs.global_cost_ct0(problem, r):10.0f}   "
+          f"({int(result.num_moves)} node transfers, "
+          f"converged={bool(result.converged)})")
+
+    # 5. Nash check: at the equilibrium no LP can improve unilaterally
+    dis, _ = costs.dissatisfaction(problem, make_state(problem, r), "c")
+    print(f"max dissatisfaction at equilibrium: {float(jnp.max(dis)):.2e} "
+          f"(Eq. 3 holds)")
+
+    loads = jnp.zeros(5).at[r].add(problem.node_weights) / problem.speeds
+    print("weighted machine loads:", [f"{float(x):.0f}" for x in loads])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Core contribution of Kurve et al. 2011: the partitioning game.
+
+Public API:
+  * PartitionProblem / PartitionState / make_problem / make_state
+  * cost frameworks (costs.C_FRAMEWORK / costs.CT_FRAMEWORK), cost_matrix,
+    dissatisfaction, global potentials C_0 / Ct_0
+  * refine / refine_traced / refine_simultaneous — iterative improvement
+  * initial_partition (focal nodes + hop expansion), er_cluster_growth
+  * simulated_annealing, cluster_move_pass — §4.4/§7 meta-heuristics
+"""
+from . import costs  # noqa: F401
+from .annealing import AnnealResult, simulated_annealing  # noqa: F401
+from .constrained import (  # noqa: F401
+    contiguous_stage_dp,
+    equalize_cardinality,
+    make_contiguous,
+)
+from .cluster import ClusterMoveResult, cluster_move_pass  # noqa: F401
+from .costs import (  # noqa: F401
+    C_FRAMEWORK,
+    CT_FRAMEWORK,
+    FRAMEWORKS,
+    adjacency_aggregate,
+    cost_matrix,
+    dissatisfaction,
+    global_cost,
+    global_cost_c0,
+    global_cost_ct0,
+    load_imbalance,
+    node_costs,
+    total_cut,
+)
+from .initial import (  # noqa: F401
+    bfs_distances,
+    er_cluster_growth,
+    expand_partitions,
+    initial_partition,
+    select_focal_nodes,
+)
+from .problem import (  # noqa: F401
+    PartitionProblem,
+    PartitionState,
+    machine_loads,
+    make_problem,
+    make_state,
+)
+from .refine import (  # noqa: F401
+    RefineResult,
+    Trace,
+    count_discrepancies,
+    refine,
+    refine_simultaneous,
+    refine_traced,
+)

@@ -1,0 +1,87 @@
+"""Coordinated cluster transfers (paper §7 future work, §4.4 discussion).
+
+Single-node best-response converges to a Nash equilibrium that may be a poor
+local optimum of the potential.  The paper proposes moving *groups of
+connected nodes* to escape such equilibria.  Exhaustive joint search is
+exponential, so — following the §4.4 suggestion of restricting the joint
+strategy space — we evaluate, for the most dissatisfied node of each
+machine, the joint transfer of its h-hop same-machine neighborhood to each
+destination machine, accepting the best potential-decreasing move.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import costs
+from .problem import PartitionProblem, make_state
+
+Array = jax.Array
+
+
+class ClusterMoveResult(NamedTuple):
+    assignment: Array
+    moved: Array       # bool — whether any cluster move was applied
+    gain: Array        # potential decrease achieved (>= 0)
+
+
+def _h_hop_mask(adj: Array, seed_node: Array, hops: int) -> Array:
+    """Boolean mask of nodes within ``hops`` of ``seed_node`` (inclusive)."""
+    n = adj.shape[0]
+    nbr = adj > 0
+    mask = jnp.zeros((n,), bool).at[seed_node].set(True)
+
+    def body(_, m):
+        return m | (m @ nbr)
+
+    return jax.lax.fori_loop(0, hops, body, mask)
+
+
+@partial(jax.jit, static_argnames=("framework", "hops"))
+def cluster_move_pass(problem: PartitionProblem, assignment: Array,
+                      framework: str = costs.C_FRAMEWORK,
+                      hops: int = 1) -> ClusterMoveResult:
+    """One pass: for every machine's most dissatisfied node, try moving its
+    h-hop owned neighborhood jointly to every machine; apply the single best
+    strictly-improving move found across all machines (sequential semantics
+    keep the potential-descent property).
+    """
+    K = problem.num_machines
+    state = make_state(problem, assignment)
+    cost = costs.cost_matrix(problem, state, framework)
+    dissat, _ = costs.dissatisfaction(problem, state, framework, cost=cost)
+    base = costs.global_cost(problem, assignment, framework)
+
+    owned = jax.nn.one_hot(assignment, K, dtype=cost.dtype)          # (N, K)
+    masked = jnp.where(owned.T > 0, dissat[None, :], -jnp.inf)       # (K, N)
+    seeds = jnp.argmax(masked, axis=1).astype(jnp.int32)             # (K,)
+
+    def eval_machine(m):
+        seed = seeds[m]
+        cluster = _h_hop_mask(problem.adjacency, seed, hops)
+        cluster = cluster & (assignment == assignment[seed])
+
+        def eval_dest(k):
+            cand = jnp.where(cluster, k, assignment).astype(jnp.int32)
+            return costs.global_cost(problem, cand, framework)
+
+        dest_costs = jax.vmap(eval_dest)(jnp.arange(K, dtype=jnp.int32))
+        dest_costs = dest_costs.at[assignment[seed]].set(jnp.inf)
+        best_k = jnp.argmin(dest_costs).astype(jnp.int32)
+        return dest_costs[best_k], best_k, cluster
+
+    dest_cost, dest_k, clusters = jax.vmap(eval_machine)(
+        jnp.arange(K, dtype=jnp.int32))
+    best_m = jnp.argmin(dest_cost).astype(jnp.int32)
+    gain = base - dest_cost[best_m]
+    moved = gain > 1e-6
+    new_assignment = jnp.where(
+        moved & clusters[best_m],
+        dest_k[best_m],
+        assignment,
+    ).astype(jnp.int32)
+    return ClusterMoveResult(assignment=new_assignment, moved=moved,
+                             gain=jnp.maximum(gain, 0.0))

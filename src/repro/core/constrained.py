@@ -1,0 +1,102 @@
+"""Capacity-constrained repair for game partitions.
+
+The Nash refinement balances *weighted* load but leaves partition
+cardinalities free.  Expert-parallel placement needs exactly E/K experts
+per device group (the weight arrays are evenly sharded), and pipeline
+stages need contiguous layer blocks.  These repairs project a refined
+assignment onto the constraint set while disturbing the potential as little
+as possible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import costs
+from .problem import PartitionProblem, make_state
+
+Array = jax.Array
+
+
+def equalize_cardinality(problem: PartitionProblem, assignment: Array,
+                         framework: str = costs.C_FRAMEWORK) -> Array:
+    """Repair to exactly-equal partition sizes (N must divide by K).
+
+    Greedy: while some machine is over-full, move its *least dissatisfied-
+    to-stay* node (the one whose cost increases least) to the under-full
+    machine that minimizes the node's cost.  O(N) moves, each O(NK).
+    """
+    n, k = problem.num_nodes, problem.num_machines
+    assert n % k == 0, (n, k)
+    target = n // k
+
+    def cond(carry):
+        r, moves = carry
+        counts = jnp.zeros((k,), jnp.int32).at[r].add(1)
+        return jnp.any(counts > target) & (moves < n)
+
+    def body(carry):
+        r, moves = carry
+        counts = jnp.zeros((k,), jnp.int32).at[r].add(1)
+        over = counts > target
+        under = counts < target
+        state = make_state(problem, r)
+        cost = costs.cost_matrix(problem, state, framework)
+        current = jnp.take_along_axis(cost, r[:, None], axis=1)[:, 0]
+        # candidate destination cost restricted to under-full machines
+        dest_cost = jnp.where(under[None, :], cost, jnp.inf)
+        best_dest = jnp.argmin(dest_cost, axis=1).astype(jnp.int32)
+        min_dest = jnp.min(dest_cost, axis=1)
+        regret = min_dest - current          # cost increase if forced out
+        movable = over[r]
+        pick = jnp.argmin(jnp.where(movable, regret, jnp.inf)).astype(jnp.int32)
+        r = r.at[pick].set(best_dest[pick])
+        return r, moves + 1
+
+    r, _ = jax.lax.while_loop(cond, body,
+                              (jnp.asarray(assignment, jnp.int32),
+                               jnp.zeros((), jnp.int32)))
+    return r
+
+
+def contiguous_stage_dp(weights, num_stages: int):
+    """Optimal contiguous partition of a chain (minimize max stage load).
+
+    Classic O(L^2 * K) interval DP — the oracle the game-based stage
+    assignment is compared against in tests and benchmarks.  Host-side.
+    """
+    import numpy as np
+    w = np.asarray(weights, np.float64)
+    L = w.shape[0]
+    K = num_stages
+    prefix = np.concatenate([[0.0], np.cumsum(w)])
+
+    def seg(i, j):                       # load of layers [i, j)
+        return prefix[j] - prefix[i]
+
+    dp = np.full((K + 1, L + 1), np.inf)
+    cut = np.zeros((K + 1, L + 1), np.int64)
+    dp[0, 0] = 0.0
+    for k in range(1, K + 1):
+        for j in range(1, L + 1):
+            for i in range(k - 1, j):
+                val = max(dp[k - 1, i], seg(i, j))
+                if val < dp[k, j]:
+                    dp[k, j] = val
+                    cut[k, j] = i
+    bounds = [L]
+    j = L
+    for k in range(K, 0, -1):
+        j = int(cut[k, j])
+        bounds.append(j)
+    bounds = bounds[::-1]
+    assignment = np.zeros(L, np.int32)
+    for s in range(K):
+        assignment[bounds[s]:bounds[s + 1]] = s
+    return assignment, float(dp[K, L])
+
+
+def make_contiguous(assignment: Array, num_stages: int) -> Array:
+    """Project an arbitrary chain assignment onto contiguous stages by
+    sorting stage ids along the chain (stable, preserves stage sizes)."""
+    return jnp.sort(jnp.asarray(assignment, jnp.int32))

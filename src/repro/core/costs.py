@@ -1,0 +1,158 @@
+"""The paper's two node-level cost frameworks and their global potentials.
+
+Framework 1 (Eq. 1):
+    C_i(r) = (b_i / w_{r_i}) * sum_{j != i, r_j = r_i} b_j
+             + (mu/2) * sum_{j: r_j != r_i} c_ij
+  Global potential (Thm. 3.1):  C_0(r) = sum_i C_i(r),
+  with the exact-potential identity  Delta C_0 = 2 * Delta C_l  for a
+  unilateral move of node l.
+
+Framework 2 (Eq. 6):
+    Ct_i(r) = b_i^2/w_{r_i}^2 + (2 b_i / w_{r_i}^2) * sum_{j != i, r_j=r_i} b_j
+              - (2 b_i / w_{r_i}) * B + (mu/2) * sum_{j: r_j != r_i} c_ij
+  Global objective (Eq. 8, centralized load-variance + cut):
+    Ct_0(r) = sum_k (L_k / w_k - B)^2 + (mu/2) * cut(r)
+  with the exact-potential identity  Delta Ct_0 = Delta Ct_l  (Thm. 5.1).
+
+Convention note (DESIGN.md §8): Eq. 8 as printed sums ordered pairs, which
+double-counts each cut edge and breaks the Thm. 5.1 identity by a factor of
+two.  We use the (mu/2) * unordered-cut convention, under which the identity
+is *exact*; tests/test_game_theory.py asserts both identities numerically.
+
+Everything here is O(N*K) given the aggregate matrix A[i,k] = sum_j c_ij
+1[r_j = k], itself an (N,N)x(N,K) matmul — the refinement hot spot that
+``repro/kernels/dissatisfaction.py`` implements as a fused Pallas kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .problem import PartitionProblem, PartitionState, machine_loads
+
+Array = jax.Array
+
+C_FRAMEWORK = "c"     # Eq. 1
+CT_FRAMEWORK = "ct"   # Eq. 6
+FRAMEWORKS = (C_FRAMEWORK, CT_FRAMEWORK)
+
+
+def adjacency_aggregate(adjacency: Array, assignment: Array, num_machines: int) -> Array:
+    """A[i, k] = sum_j c_ij * 1[r_j = k]; computed as C @ one_hot(r)."""
+    onehot = jax.nn.one_hot(assignment, num_machines, dtype=adjacency.dtype)
+    return adjacency @ onehot
+
+
+def _hypothetical_other_loads(b: Array, loads: Array, assignment: Array) -> Array:
+    """others[i, k] = sum_{j != i, r_j = k} b_j if node i were moved to k.
+
+    Only node i's own weight must be subtracted, and only on its *current*
+    machine — for any other machine k the existing load L_k already excludes i.
+    """
+    K = loads.shape[0]
+    own = jax.nn.one_hot(assignment, K, dtype=b.dtype)       # (N, K)
+    return loads[None, :] - b[:, None] * own
+
+
+def cut_matrix(adjacency: Array, assignment: Array, num_machines: int,
+               aggregate: Array | None = None) -> Array:
+    """cut[i, k] = (1) * sum_{j: r_j != k} c_ij  (the mu/2 factor applied later)."""
+    if aggregate is None:
+        aggregate = adjacency_aggregate(adjacency, assignment, num_machines)
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)       # = sum_j c_ij
+    return degree - aggregate
+
+
+def cost_matrix(problem: PartitionProblem, state: PartitionState,
+                framework: str = C_FRAMEWORK,
+                aggregate: Array | None = None) -> Array:
+    """(N, K) matrix of node costs: entry [i, k] = cost of node i if on machine k.
+
+    Column r_i of row i is the node's *current* cost; other columns are the
+    hypothetical post-move costs (all other assignments held fixed), exactly
+    the quantities a machine needs to compute dissatisfaction (Eq. 4).
+    """
+    b = problem.node_weights
+    w = problem.speeds
+    K = problem.num_machines
+    others = _hypothetical_other_loads(b, state.loads, state.assignment)
+    cut = cut_matrix(problem.adjacency, state.assignment, K, aggregate)
+    cut_term = 0.5 * problem.mu * cut
+    if framework == C_FRAMEWORK:
+        load_term = (b[:, None] / w[None, :]) * others
+        return load_term + cut_term
+    elif framework == CT_FRAMEWORK:
+        total = jnp.sum(b)
+        inv_w = 1.0 / w[None, :]
+        load_term = (b[:, None] ** 2) * inv_w**2 \
+            + 2.0 * b[:, None] * inv_w**2 * others \
+            - 2.0 * b[:, None] * inv_w * total
+        return load_term + cut_term
+    raise ValueError(f"unknown framework {framework!r}")
+
+
+def node_costs(problem: PartitionProblem, state: PartitionState,
+               framework: str = C_FRAMEWORK) -> Array:
+    """(N,) current cost of every node under its current assignment."""
+    cm = cost_matrix(problem, state, framework)
+    return jnp.take_along_axis(cm, state.assignment[:, None], axis=1)[:, 0]
+
+
+def dissatisfaction(problem: PartitionProblem, state: PartitionState,
+                    framework: str = C_FRAMEWORK,
+                    cost: Array | None = None):
+    """Eq. 4:  I(i) = C_i(r_i) - min_k C_i(k), with the arg-best machine.
+
+    Returns (dissat (N,), best_machine (N,)).  Ties break toward the lowest
+    machine index (deterministic, DESIGN.md §7).
+    """
+    if cost is None:
+        cost = cost_matrix(problem, state, framework)
+    current = jnp.take_along_axis(cost, state.assignment[:, None], axis=1)[:, 0]
+    best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    best = jnp.min(cost, axis=1)
+    return current - best, best_machine
+
+
+# ---------------------------------------------------------------------------
+# Global potentials
+# ---------------------------------------------------------------------------
+
+def total_cut(adjacency: Array, assignment: Array) -> Array:
+    """Unordered cut weight: (1/2) sum_{i,j} c_ij 1[r_i != r_j]."""
+    diff = assignment[:, None] != assignment[None, :]
+    return 0.5 * jnp.sum(adjacency * diff)
+
+
+def global_cost_c0(problem: PartitionProblem, assignment: Array) -> Array:
+    """C_0(r) = sum_i C_i(r)  (Thm. 3.1 potential, social welfare)."""
+    state = PartitionState(assignment,
+                           machine_loads(problem.node_weights, assignment,
+                                         problem.num_machines))
+    return jnp.sum(node_costs(problem, state, C_FRAMEWORK))
+
+
+def global_cost_ct0(problem: PartitionProblem, assignment: Array) -> Array:
+    """Ct_0(r) = sum_k (L_k / w_k - B)^2 + (mu/2) cut(r)  (Eq. 8, see note)."""
+    b = problem.node_weights
+    loads = machine_loads(b, assignment, problem.num_machines)
+    total = jnp.sum(b)
+    variance = jnp.sum((loads / problem.speeds - total) ** 2)
+    return variance + 0.5 * problem.mu * total_cut(problem.adjacency, assignment)
+
+
+def global_cost(problem: PartitionProblem, assignment: Array, framework: str) -> Array:
+    if framework == C_FRAMEWORK:
+        return global_cost_c0(problem, assignment)
+    if framework == CT_FRAMEWORK:
+        return global_cost_ct0(problem, assignment)
+    raise ValueError(f"unknown framework {framework!r}")
+
+
+def load_imbalance(problem: PartitionProblem, assignment: Array) -> Array:
+    """max_k L_k/w_k divided by B — 1.0 means perfectly balanced."""
+    loads = machine_loads(problem.node_weights, assignment, problem.num_machines)
+    total = jnp.sum(problem.node_weights)
+    return jnp.max(loads / problem.speeds) / total

@@ -1,0 +1,175 @@
+"""Initial partitioning (paper §4.1 + Appendix A).
+
+1. Focal-node selection: find K nodes approximately maximizing the minimum
+   pairwise geodesic distance (Eq. 11) via the paper's round-robin local
+   improvement over neighbors, restarted from several random seeds.
+2. Hop-by-hop expansion: every machine grows a BFS cluster from its focal
+   node; contested frontier nodes are arbitrated deterministically (the
+   paper uses random back-off + semaphores — DESIGN.md §3.5 explains the
+   substitution) with a per-round random priority so no machine is
+   systematically favored.
+3. Theorem A.1: the Erdős–Rényi expected-cluster-growth recursion, used as a
+   property-test oracle for the expansion code.
+
+Unit node/edge weights are assumed during initial partitioning (§4.1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_INF = jnp.int32(0x3FFFFFFF)
+
+
+@partial(jax.jit, static_argnames=("max_hops",))
+def bfs_distances(adj: Array, sources: Array, max_hops: int | None = None) -> Array:
+    """Geodesic hop distances from each source via frontier matmuls.
+
+    adj: (N, N) nonzero-where-edge matrix.  sources: (S,) int32.
+    Returns (S, N) int32 distances (_INF where unreachable).
+    """
+    n = adj.shape[0]
+    max_hops = n if max_hops is None else max_hops
+    nbr = (adj > 0)
+
+    def one(src):
+        dist = jnp.full((n,), _INF, jnp.int32).at[src].set(0)
+        frontier = jnp.zeros((n,), bool).at[src].set(True)
+
+        def cond(c):
+            _, frontier, hop = c
+            return jnp.any(frontier) & (hop < max_hops)
+
+        def body(c):
+            dist, frontier, hop = c
+            nxt = (frontier @ nbr) & (dist == _INF)
+            dist = jnp.where(nxt, hop + 1, dist)
+            return dist, nxt, hop + 1
+
+        dist, _, _ = jax.lax.while_loop(cond, body, (dist, frontier, jnp.int32(0)))
+        return dist
+
+    return jax.vmap(one)(jnp.asarray(sources, jnp.int32))
+
+
+def _min_pairwise(dist_fk: Array) -> Array:
+    """Minimum pairwise distance among focal nodes given (K, K) distances."""
+    K = dist_fk.shape[0]
+    off = dist_fk + jnp.where(jnp.eye(K, dtype=bool), _INF, 0)
+    return jnp.min(off)
+
+
+@partial(jax.jit, static_argnames=("num_machines", "num_restarts", "max_rounds"))
+def select_focal_nodes(adj: Array, num_machines: int, key: Array,
+                       num_restarts: int = 4, max_rounds: int = 16) -> Array:
+    """Appendix-A heuristic for Eq. 11 (max-min geodesic focal set)."""
+    n = adj.shape[0]
+    all_dist = bfs_distances(adj, jnp.arange(n))      # (N, N) — reused heavily
+    nbr = adj > 0
+
+    def objective(focals):
+        d = all_dist[focals][:, focals]
+        return _min_pairwise(d)
+
+    def improve_round(focals, _):
+        # Round-robin: each machine tries to move its focal to a neighbor that
+        # increases the min distance to the other focals.
+        def per_machine(m, focals):
+            cur = focals[m]
+            # distance of each candidate node to every other focal
+            d_to_others = all_dist[:, focals]                      # (N, K)
+            d_to_others = jnp.where(
+                (jnp.arange(num_machines) == m)[None, :], _INF, d_to_others)
+            score = jnp.min(d_to_others, axis=1)                   # (N,)
+            cand_mask = nbr[cur] | (jnp.arange(n) == cur)
+            score = jnp.where(cand_mask, score, -1)
+            best = jnp.argmax(score).astype(jnp.int32)
+            take = score[best] > score[cur]
+            return focals.at[m].set(jnp.where(take, best, cur))
+
+        focals = jax.lax.fori_loop(
+            0, num_machines, lambda m, f: per_machine(m, f), focals)
+        return focals, None
+
+    def one_restart(k):
+        focals = jax.random.choice(k, n, (num_machines,), replace=False).astype(jnp.int32)
+        focals, _ = jax.lax.scan(improve_round, focals, None, length=max_rounds)
+        return focals, objective(focals)
+
+    keys = jax.random.split(key, num_restarts)
+    focal_sets, scores = jax.vmap(one_restart)(keys)
+    return focal_sets[jnp.argmax(scores)]
+
+
+@partial(jax.jit, static_argnames=("num_machines", "max_hops"))
+def expand_partitions(adj: Array, focals: Array, key: Array,
+                      num_machines: int, max_hops: int | None = None) -> Array:
+    """Hop-by-hop cluster growth from focal nodes with contention arbitration.
+
+    Each round every machine claims unowned nodes adjacent to its cluster;
+    a node claimed by several machines goes to the one with the highest
+    random priority that round (stands in for the paper's random back-off).
+    Disconnected leftovers are assigned to the smallest cluster.
+    Returns (N,) int32 assignment.
+    """
+    n = adj.shape[0]
+    max_hops = n if max_hops is None else max_hops
+    nbr = adj > 0
+    owner = jnp.full((n,), -1, jnp.int32).at[focals].set(
+        jnp.arange(num_machines, dtype=jnp.int32))
+
+    def cond(c):
+        owner, hop, _ = c
+        return jnp.any(owner < 0) & (hop < max_hops)
+
+    def body(c):
+        owner, hop, key = c
+        key, sub = jax.random.split(key)
+        prio = jax.random.uniform(sub, (num_machines,))
+        member = jax.nn.one_hot(owner, num_machines, dtype=jnp.float32)   # (N,K), zero row if unowned
+        member = jnp.where((owner >= 0)[:, None], member, 0.0)
+        reach = (nbr.astype(jnp.float32).T @ member) > 0                  # (N,K) claimable by k
+        claim_score = jnp.where(reach, prio[None, :], -1.0)
+        best_k = jnp.argmax(claim_score, axis=1).astype(jnp.int32)
+        claimable = jnp.max(claim_score, axis=1) >= 0
+        grew = jnp.any(claimable & (owner < 0))
+        new_owner = jnp.where((owner < 0) & claimable, best_k, owner)
+        # If nothing grew but unowned nodes remain, the graph is disconnected:
+        # dump remaining nodes on the smallest cluster and finish.
+        sizes = jnp.zeros((num_machines,), jnp.int32).at[
+            jnp.clip(new_owner, 0)].add((new_owner >= 0).astype(jnp.int32))
+        smallest = jnp.argmin(sizes).astype(jnp.int32)
+        new_owner = jnp.where(
+            grew, new_owner,
+            jnp.where(new_owner < 0, smallest, new_owner))
+        return new_owner, hop + 1, key
+
+    owner, _, _ = jax.lax.while_loop(cond, body, (owner, jnp.int32(0), key))
+    return owner
+
+
+def initial_partition(adj: Array, num_machines: int, key: Array,
+                      num_restarts: int = 4) -> Array:
+    """Full Appendix-A pipeline: focal selection + expansion."""
+    k1, k2 = jax.random.split(jnp.asarray(key))
+    focals = select_focal_nodes(adj, num_machines, k1, num_restarts=num_restarts)
+    return expand_partitions(adj, focals, k2, num_machines)
+
+
+def er_cluster_growth(num_nodes: int, p: float, hops: int):
+    """Theorem A.1 recursion: expected BFS cluster size on G(n, p) per hop.
+
+    N_{k+1} = N_k + (|V| - N_k) * (1 - (1-p)^(N_k - N_{k-1})),  N_1 = 1.
+    Returns an array of expected cluster sizes for hops 0..hops.
+    """
+    sizes = [1.0]
+    prev, cur = 0.0, 1.0
+    for _ in range(hops):
+        nxt = cur + (num_nodes - cur) * (1.0 - (1.0 - p) ** (cur - prev))
+        prev, cur = cur, nxt
+        sizes.append(cur)
+    return jnp.asarray(sizes)

@@ -1,0 +1,99 @@
+"""Partition-game problem container.
+
+The paper partitions an undirected weighted graph G = (V, E) of logical
+processes among K machines.  ``PartitionProblem`` carries everything the
+two cost frameworks (Eq. 1 and Eq. 6) need:
+
+  * ``adjacency``  — dense symmetric (N, N) float matrix of edge weights
+                     ``c_ij`` (zero diagonal).  Dense is the TPU-native
+                     representation: the refinement hot spot is
+                     ``adjacency @ one_hot(r)`` which maps onto the MXU.
+  * ``node_weights`` — (N,) computational load ``b_i`` per LP.
+  * ``speeds``       — (K,) normalized machine capacities ``w_k`` (sum 1).
+  * ``mu``           — relative weight of the inter-machine potential
+                       rollback-delay cost (paper §3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionProblem:
+    adjacency: Array      # (N, N) float, symmetric, zero diagonal
+    node_weights: Array   # (N,)  float
+    speeds: Array         # (K,)  float, sums to 1
+    mu: Array             # scalar float
+
+    @property
+    def num_nodes(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def num_machines(self) -> int:
+        return self.speeds.shape[0]
+
+    def validate(self) -> None:
+        n = self.num_nodes
+        assert self.adjacency.shape == (n, n), self.adjacency.shape
+        assert self.node_weights.shape == (n,), self.node_weights.shape
+        assert self.speeds.ndim == 1
+
+
+def make_problem(
+    adjacency,
+    node_weights,
+    speeds,
+    mu: float = 8.0,
+    *,
+    normalize_speeds: bool = True,
+    dtype=jnp.float32,
+) -> PartitionProblem:
+    """Build a :class:`PartitionProblem`, symmetrizing and normalizing inputs."""
+    adjacency = jnp.asarray(adjacency, dtype)
+    # Symmetrize and clear the diagonal: the paper's graph is undirected and
+    # self-edges are meaningless for a cut.
+    adjacency = 0.5 * (adjacency + adjacency.T)
+    adjacency = adjacency * (1.0 - jnp.eye(adjacency.shape[0], dtype=dtype))
+    node_weights = jnp.asarray(node_weights, dtype)
+    speeds = jnp.asarray(speeds, dtype)
+    if normalize_speeds:
+        speeds = speeds / jnp.sum(speeds)
+    prob = PartitionProblem(adjacency, node_weights, speeds, jnp.asarray(mu, dtype))
+    prob.validate()
+    return prob
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionState:
+    """Assignment vector plus the machine-level aggregate the paper exchanges.
+
+    ``loads`` is the only *global* state a machine needs (paper §4.5): the
+    per-machine sums ``L_k = sum_{j: r_j = k} b_j``.  Keeping it in the state
+    (instead of recomputing) mirrors the paper's ``common variable array``.
+    """
+    assignment: Array  # (N,) int32 in [0, K)
+    loads: Array       # (K,) float
+
+    @property
+    def num_machines(self) -> int:
+        return self.loads.shape[0]
+
+
+def machine_loads(node_weights: Array, assignment: Array, num_machines: int) -> Array:
+    """L_k = sum of b_j over nodes assigned to machine k."""
+    return jnp.zeros((num_machines,), node_weights.dtype).at[assignment].add(node_weights)
+
+
+def make_state(problem: PartitionProblem, assignment) -> PartitionState:
+    assignment = jnp.asarray(assignment, jnp.int32)
+    loads = machine_loads(problem.node_weights, assignment, problem.num_machines)
+    return PartitionState(assignment=assignment, loads=loads)

@@ -1,0 +1,10 @@
+from .engine import (  # noqa: F401
+    NORMAL,
+    ROLLBACK,
+    DESConfig,
+    DESState,
+    des_tick,
+    make_initial_state,
+    run_simulation,
+)
+from .workload import ThreadSpec, flooded_packet_workload  # noqa: F401

@@ -1,0 +1,607 @@
+"""Software archetype of an optimistic (Time Warp) parallel DES (paper §6 + App. B).
+
+This is the paper's evaluation substrate, re-expressed as a vectorized JAX
+program: one wall-clock tick is one fused XLA computation over all LPs
+(DESIGN.md §3.1).  The model implements, faithfully to the paper's Fig. 3-6
+pseudocode:
+
+  * per-LP event lists / histories with ``event-tick`` wall-clock transfer
+    delays (inter-machine > intra-machine — the rollback-risk mechanism),
+  * optimistic execution: an idle LP picks its lowest-timestamp ready event
+    and advances its local virtual time,
+  * ``busy-time = (#LPs on my machine) x process_time(type)`` — the paper's
+    machine-speed model (speed inversely proportional to resident LPs),
+  * non-causal stragglers -> rollback: history entries with time > the
+    straggler's timestamp are restored to the event list and re-executed,
+  * anti-messages: a rolling-back LP sends a ROLLBACK event to its neighbors
+    carrying the minimum invalidated child timestamp; the receiver cancels
+    matching unprocessed events and cascades if it already processed them
+    (classic rollback-announcement Time Warp, see DESIGN.md §3),
+  * GVT = min(local times, event timestamps) and fossil collection of
+    history entries older than GVT,
+  * the limited-scope flooded packet-flow workload: completed events with
+    hop count > 0 forward to every neighbor that has not yet seen the
+    thread,
+  * periodic partition refinement: every ``refine_freq`` ticks node/edge
+    weights are measured from the live event lists (b_i = event-list length,
+    c_ij = mutual pending-spawn counts, §6.1) and the game-theoretic
+    refinement reassigns LPs to machines.
+
+Deviations from the prose (documented in DESIGN.md §3/§8):
+
+  * per (sender, receiver) pair at most one message per tick — multiple
+    anti-messages coalesce into one announcement carrying the min cancelled
+    timestamp, which is the standard Time Warp optimization;
+  * the paper's Fig. 6 dedup ("if current-event not present in event list
+    or history of neighbor") reads the receiver's *optimistic wall-clock*
+    state, which is not causally safe: a node that optimistically received
+    a thread via a long path would refuse the (simulation-time-earlier)
+    short-path copy and flood with a smaller hop budget than sequential
+    execution would — the one thing a Time Warp simulator must never do.
+    We implement the timestamp-aware variant: ``seen_time[n, t]`` tracks
+    the earliest receipt timestamp per (LP, thread); a copy is forwarded
+    iff strictly earlier than the receiver's current earliest, received
+    later copies are consumed as duplicates (recorded in history so
+    cancellations can revive them), and ``seen_time`` is recomputed from
+    the live records each tick so rollbacks restore it automatically.
+    tests/test_des.py::test_flood_closure_oracle proves the result: the
+    final seen-sets equal the exact k-hop closures under any placement,
+    delays, stragglers and rollbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import costs as game_costs
+from ..core.problem import PartitionProblem
+from ..core.refine import refine
+
+Array = jax.Array
+
+NORMAL = 0
+ROLLBACK = 1
+
+_INF = jnp.float32(3.0e38)
+_BIG_I = jnp.int32(0x3FFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class DESConfig:
+    num_lps: int
+    num_machines: int
+    num_threads: int
+    event_capacity: int = 24
+    history_capacity: int = 48
+    proc_ticks: int = 2           # get_process_time(NORMAL) base cost
+    inter_delay: int = 6          # event-tick for cross-machine transfer
+    intra_delay: int = 1          # event-tick for same-machine transfer
+    hop_sim_latency: float = 1.0  # simulation-time increment per hop
+    max_ticks: int = 20_000
+    # partition refinement
+    refine_freq: int = 0          # 0 = never refine
+    refine_framework: str = game_costs.C_FRAMEWORK
+    refine_max_turns: int = 256
+    refine_mu: float = 8.0
+    # load trace (Figs 9/10)
+    trace_stride: int = 50
+    max_trace: int = 512
+
+
+class EventLists(NamedTuple):
+    time: Array     # (N, E) f32 — simulation timestamp
+    thread: Array   # (N, E) i32 — flood-thread id (-1 for rollback events)
+    typ: Array      # (N, E) i32 — NORMAL / ROLLBACK
+    tick: Array     # (N, E) i32 — wall ticks before the event is processable
+    count: Array    # (N, E) i32 — remaining hop count (NORMAL) or the
+                    #              invalidated send-epoch (ROLLBACK)
+    sender: Array   # (N, E) i32 — LP that sent the event (-1 = initial)
+    epoch: Array    # (N, E) i32 — sender's send-epoch when the message left
+    valid: Array    # (N, E) bool
+
+
+class History(NamedTuple):
+    time: Array     # (N, H) f32
+    thread: Array   # (N, H) i32
+    count: Array    # (N, H) i32
+    sender: Array   # (N, H) i32
+    epoch: Array    # (N, H) i32
+    dup: Array      # (N, H) bool — consumed as duplicate (never processed/
+                    #               forwarded); revived if the canonical copy
+                    #               is cancelled
+    valid: Array    # (N, H) bool
+
+
+class DESState(NamedTuple):
+    ev: EventLists
+    hist: History
+    local_time: Array   # (N,) f32
+    busy: Array         # (N,) bool
+    busy_tick: Array    # (N,) i32
+    cur_time: Array     # (N,) f32 — event currently being processed
+    cur_thread: Array   # (N,) i32
+    cur_count: Array    # (N,) i32
+    cur_sender: Array   # (N,) i32 — sender of the event being processed
+    machine: Array      # (N,) i32
+    seen_time: Array    # (N, T) f32 — earliest receipt timestamp (_INF = never)
+    epoch: Array        # (N,) i32 — per-LP send epoch; bumped on every
+                        #            rollback so anti-messages cancel ONLY
+                        #            messages sent before the rollback
+                        #            (re-sends carry the new epoch and are
+                        #            immune — the 1:1 anti-message pairing
+                        #            of classic Time Warp, aggregated)
+    tick: Array         # ()  i32 — wall clock
+    gvt: Array          # ()  f32 — global virtual time
+    done: Array         # ()  bool
+    # statistics
+    rollbacks: Array    # () i32 — rollback occurrences (straggler + anti-msg)
+    processed: Array    # () i32 — events processed to completion
+    dropped: Array      # () i32 — proposals dropped for capacity (should be 0)
+    hist_evict: Array   # () i32 — history evictions (should be 0)
+    refines: Array      # () i32 — refinement rounds executed
+    moves: Array        # () i32 — LP migrations applied by refinement
+    # load trace (Figs 9/10): mean event-list length per machine over time
+    trace: Array        # (max_trace, K) f32
+    trace_ptr: Array    # () i32
+
+    @property
+    def seen(self) -> Array:
+        """(N, T) bool — which LPs have (validly) received each thread."""
+        return self.seen_time < _INF / 2
+
+
+def make_initial_state(cfg: DESConfig, machine0: Array,
+                       thread_src: Array, thread_time: Array,
+                       thread_count: Array) -> DESState:
+    """Seed each flood thread into its source LP's event list at t=0."""
+    N, E, H, T = (cfg.num_lps, cfg.event_capacity, cfg.history_capacity,
+                  cfg.num_threads)
+    ev = EventLists(
+        time=jnp.full((N, E), _INF),
+        thread=jnp.full((N, E), -1, jnp.int32),
+        typ=jnp.zeros((N, E), jnp.int32),
+        tick=jnp.zeros((N, E), jnp.int32),
+        count=jnp.zeros((N, E), jnp.int32),
+        sender=jnp.full((N, E), -1, jnp.int32),
+        epoch=jnp.zeros((N, E), jnp.int32),
+        valid=jnp.zeros((N, E), bool),
+    )
+    # place thread t into slot = running count of earlier threads at the
+    # same source (host-side guarantees counts fit in E)
+    thread_src = jnp.asarray(thread_src, jnp.int32)
+    same_src_before = jnp.sum(
+        (thread_src[None, :] == thread_src[:, None])
+        & (jnp.arange(T)[None, :] < jnp.arange(T)[:, None]), axis=1)
+    slots = same_src_before.astype(jnp.int32)
+    ev = ev._replace(
+        time=ev.time.at[thread_src, slots].set(jnp.asarray(thread_time, jnp.float32)),
+        thread=ev.thread.at[thread_src, slots].set(jnp.arange(T, dtype=jnp.int32)),
+        count=ev.count.at[thread_src, slots].set(jnp.asarray(thread_count, jnp.int32)),
+        valid=ev.valid.at[thread_src, slots].set(True),
+    )
+    # seen_time starts unknown everywhere; the injected event-list records
+    # themselves define the sources' receipt times (recomputed every tick).
+    seen_time0 = jnp.full((N, T), _INF)
+    hist = History(
+        time=jnp.full((N, H), _INF),
+        thread=jnp.full((N, H), -1, jnp.int32),
+        count=jnp.zeros((N, H), jnp.int32),
+        sender=jnp.full((N, H), -1, jnp.int32),
+        epoch=jnp.zeros((N, H), jnp.int32),
+        dup=jnp.zeros((N, H), bool),
+        valid=jnp.zeros((N, H), bool),
+    )
+    K = cfg.num_machines
+    return DESState(
+        ev=ev, hist=hist,
+        local_time=jnp.zeros((N,), jnp.float32),
+        busy=jnp.zeros((N,), bool),
+        busy_tick=jnp.zeros((N,), jnp.int32),
+        cur_time=jnp.full((N,), _INF),
+        cur_thread=jnp.full((N,), -1, jnp.int32),
+        cur_count=jnp.zeros((N,), jnp.int32),
+        cur_sender=jnp.full((N,), -1, jnp.int32),
+        machine=jnp.asarray(machine0, jnp.int32),
+        seen_time=seen_time0,
+        epoch=jnp.zeros((N,), jnp.int32),
+        tick=jnp.zeros((), jnp.int32),
+        gvt=jnp.zeros((), jnp.float32),
+        done=jnp.zeros((), bool),
+        rollbacks=jnp.zeros((), jnp.int32),
+        processed=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+        hist_evict=jnp.zeros((), jnp.int32),
+        refines=jnp.zeros((), jnp.int32),
+        moves=jnp.zeros((), jnp.int32),
+        trace=jnp.zeros((cfg.max_trace, K), jnp.float32),
+        trace_ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One wall-clock tick
+# ---------------------------------------------------------------------------
+
+def _select_events(ev: EventLists, idle: Array):
+    """Per LP: pick the lowest-timestamp ready event (tick == 0); among ties
+    prefer ROLLBACK events, then the lowest slot.  Returns (has, slot)."""
+    ready = ev.valid & (ev.tick == 0)
+    ts = jnp.where(ready, ev.time, _INF)
+    mints = jnp.min(ts, axis=1)
+    has = idle & (mints < _INF)
+    E = ev.time.shape[1]
+    cand = ready & (ts <= mints[:, None])
+    score = jnp.where(cand,
+                      (ev.typ == ROLLBACK).astype(jnp.int32) * (2 * E)
+                      + (E - 1 - jnp.arange(E)[None, :]),
+                      -1)
+    slot = jnp.argmax(score, axis=1).astype(jnp.int32)
+    return has, slot
+
+
+def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
+    """Advance the simulator by one wall-clock tick."""
+    N, E, H = cfg.num_lps, cfg.event_capacity, cfg.history_capacity
+    K = cfg.num_machines
+    ev, hist = state.ev, state.hist
+    nbr = adj > 0
+    rows = jnp.arange(N)
+
+    # ---- P0: transfer-delay countdown (only events already in lists) -------
+    ev = ev._replace(tick=jnp.maximum(ev.tick - (ev.valid & (ev.tick > 0)), 0))
+
+    # ---- P0b: recompute seen_time from the live records --------------------
+    # seen_time[n, t] = earliest receipt timestamp of thread t at LP n,
+    # derived from (a) pending event-list copies, (b) history (processed or
+    # duplicate) copies, (c) the permanent part: receipts older than GVT can
+    # never be rolled back (their records fossil-collect at exactly the same
+    # threshold).  Recomputing instead of patching makes cancellation /
+    # restore automatically consistent (DESIGN.md deviation note).
+    Tn = cfg.num_threads
+    tids = jnp.arange(Tn, dtype=jnp.int32)
+    ev_match = ev.valid[:, :, None] & (ev.thread[:, :, None] == tids)
+    ev_seen = jnp.min(jnp.where(ev_match, ev.time[:, :, None], _INF), axis=1)
+    hist_match = hist.valid[:, :, None] & (hist.thread[:, :, None] == tids)
+    hist_seen = jnp.min(jnp.where(hist_match, hist.time[:, :, None], _INF),
+                        axis=1)
+    perm = jnp.where(state.seen_time < state.gvt, state.seen_time, _INF)
+    seen_time = jnp.minimum(jnp.minimum(ev_seen, hist_seen), perm)
+
+    # ---- P1: busy LPs advance; completions forward the flood ---------------
+    was_busy = state.busy
+    busy_tick = jnp.where(was_busy, state.busy_tick - 1, state.busy_tick)
+    completed = was_busy & (busy_tick <= 0)
+    still_busy = was_busy & ~completed
+    processed = state.processed + jnp.sum(completed.astype(jnp.int32))
+
+    fwd_send = completed & (state.cur_count > 0)
+    fwd_thread = state.cur_thread
+    fwd_time = state.cur_time + cfg.hop_sim_latency
+    fwd_count = state.cur_count - 1
+
+    # ---- P2: idle LPs select and locally handle one event ------------------
+    idle = ~was_busy
+    has, slot = _select_events(ev, idle)
+    sel_time = ev.time[rows, slot]
+    sel_thread = ev.thread[rows, slot]
+    sel_typ = ev.typ[rows, slot]
+    sel_count = ev.count[rows, slot]
+    sel_sender = ev.sender[rows, slot]
+
+    # duplicate: a strictly earlier copy of this thread is already known —
+    # consume without processing (sequential semantics discard duplicates).
+    # Recorded in history below so a cancellation of the earlier copy can
+    # restore and re-canonicalize this one.
+    sel_seen = seen_time[rows, jnp.clip(sel_thread, 0)]
+    dup = has & (sel_typ == NORMAL) & (sel_time > sel_seen + 1e-6)
+
+    is_rb = has & (sel_typ == ROLLBACK)
+    normal = has & (sel_typ == NORMAL) & ~dup \
+        & (sel_time >= state.local_time)
+    straggler = has & (sel_typ == NORMAL) & ~dup \
+        & (sel_time < state.local_time)
+
+    # consume the selected slot
+    ev_valid = ev.valid.at[rows, slot].set(
+        jnp.where(has, False, ev.valid[rows, slot]))
+    ev = ev._replace(valid=ev_valid)
+
+    # -- rollback-event handling (anti-message with threshold sel_time) -----
+    # A ROLLBACK event carries the sender's invalidated send-epoch in its
+    # ``count`` field: only messages sent at-or-before that epoch cancel.
+    # Messages the sender re-emits AFTER rolling back carry a later epoch
+    # and must survive (classic Time Warp 1:1 message/anti-message pairing,
+    # aggregated per (sender, epoch, time-threshold)).
+    rb_epoch = sel_count
+    # cancel unprocessed events from that sender at/after the threshold
+    cancel_ev = (is_rb[:, None] & ev.valid
+                 & (ev.sender == sel_sender[:, None])
+                 & (ev.typ == NORMAL)
+                 & (ev.epoch <= rb_epoch[:, None])
+                 & (ev.time >= sel_time[:, None] - 1e-6))
+    # cascaded rollback: processed events from that sender at/after threshold
+    cancel_hist = (is_rb[:, None] & hist.valid
+                   & (hist.sender == sel_sender[:, None])
+                   & (hist.epoch <= rb_epoch[:, None])
+                   & (hist.time >= sel_time[:, None] - 1e-6))
+    any_casc = jnp.any(cancel_hist, axis=1)
+    t_inv = jnp.min(jnp.where(cancel_hist, hist.time, _INF), axis=1)
+
+    # restore masks: straggler restores history strictly after its timestamp;
+    # cascaded rollback restores history at/after the first invalidated time
+    # (minus the cancelled entries themselves, which are deleted).
+    restore = jnp.where(
+        straggler[:, None], hist.valid & (hist.time > sel_time[:, None]),
+        jnp.where((is_rb & any_casc)[:, None],
+                  hist.valid & (hist.time >= t_inv[:, None]) & ~cancel_hist,
+                  False))
+
+    rolled_back = straggler | (is_rb & any_casc)
+    rollbacks = state.rollbacks + jnp.sum(rolled_back.astype(jnp.int32))
+
+    # duplicate revival: if a cancellation removed copies of thread t at this
+    # LP, any surviving history entry consumed as a DUPLICATE of that thread
+    # becomes a candidate canonical again — push it back to the event list.
+    Tn_ = cfg.num_threads
+    tids_ = jnp.arange(Tn_, dtype=jnp.int32)
+    cancelled_threads = (
+        jnp.any(cancel_ev[:, :, None]
+                & (ev.thread[:, :, None] == tids_), axis=1)
+        | jnp.any(cancel_hist[:, :, None]
+                  & (hist.thread[:, :, None] == tids_), axis=1))  # (N, T)
+    revive = (hist.valid & hist.dup & (hist.thread >= 0) & ~cancel_hist
+              & jnp.take_along_axis(
+                  cancelled_threads, jnp.clip(hist.thread, 0), axis=1))
+    restore = restore | revive
+
+    # announcements: min invalidated *child* timestamp per rolling-back LP.
+    # children were forwarded only for PROCESSED entries with hop count > 0
+    # (duplicate entries never forwarded — excluding them keeps the cancel
+    # threshold tight so valid earlier sends are not over-cancelled).
+    inval = (restore | cancel_hist) & (hist.count > 0) & ~hist.dup
+    ann_time = jnp.min(jnp.where(inval, hist.time, _INF), axis=1) \
+        + cfg.hop_sim_latency
+    ann_send = rolled_back & jnp.any(inval, axis=1)
+    # the announcement invalidates everything this LP sent up to its CURRENT
+    # epoch; the rollback itself then opens a new epoch for the re-sends
+    ann_epoch = state.epoch
+    new_epoch = state.epoch + rolled_back.astype(jnp.int32)
+
+    # apply cancellations / deletions (seen_time recomputes next tick, so
+    # cancelled copies automatically stop counting as received)
+    ev = ev._replace(valid=ev.valid & ~cancel_ev)
+    hist = hist._replace(valid=hist.valid & ~cancel_hist & ~restore)
+
+    # -- start processing (normal + straggler) -------------------------------
+    starts = normal | straggler
+    nlps = jnp.zeros((K,), jnp.int32).at[state.machine].add(1)
+    busy_cost = nlps[state.machine] * cfg.proc_ticks
+    busy = still_busy | starts
+    busy_tick = jnp.where(starts, busy_cost, busy_tick)
+    cur_time = jnp.where(starts, sel_time, state.cur_time)
+    cur_thread = jnp.where(starts, sel_thread, state.cur_thread)
+    cur_count = jnp.where(starts, sel_count, state.cur_count)
+    cur_sender = jnp.where(starts, sel_sender, state.cur_sender)
+    local_time = jnp.where(starts, sel_time, state.local_time)
+    local_time = jnp.where(is_rb & any_casc,
+                           jnp.minimum(local_time, t_inv), local_time)
+
+    # push started + duplicate events into history (first free slot; evict
+    # oldest if full).  Duplicates are retained so that cancellation of the
+    # canonical copy restores them as the new canonical.
+    free_h = ~hist.valid
+    has_free = jnp.any(free_h, axis=1)
+    first_free = jnp.argmax(free_h, axis=1)
+    oldest = jnp.argmin(jnp.where(hist.valid, hist.time, _INF), axis=1)
+    hslot = jnp.where(has_free, first_free, oldest).astype(jnp.int32)
+    put = starts | dup
+    hist_evict = state.hist_evict + jnp.sum(
+        (put & ~has_free).astype(jnp.int32))
+    sel_epoch = ev.epoch[rows, slot]
+    hist = History(
+        time=hist.time.at[rows, hslot].set(
+            jnp.where(put, sel_time, hist.time[rows, hslot])),
+        thread=hist.thread.at[rows, hslot].set(
+            jnp.where(put, sel_thread, hist.thread[rows, hslot])),
+        count=hist.count.at[rows, hslot].set(
+            jnp.where(put, sel_count, hist.count[rows, hslot])),
+        sender=hist.sender.at[rows, hslot].set(
+            jnp.where(put, sel_sender, hist.sender[rows, hslot])),
+        epoch=hist.epoch.at[rows, hslot].set(
+            jnp.where(put, sel_epoch, hist.epoch[rows, hslot])),
+        dup=hist.dup.at[rows, hslot].set(
+            jnp.where(put, dup, hist.dup[rows, hslot])),
+        valid=hist.valid.at[rows, hslot].set(
+            jnp.where(put, True, hist.valid[rows, hslot])),
+    )
+
+    # ---- P3: proposals (forwards + announcements + self-restores) ----------
+    same_machine = state.machine[:, None] == state.machine[None, :]
+    link_tick = jnp.where(same_machine, cfg.intra_delay, cfg.inter_delay
+                          ).astype(jnp.int32)
+
+    # forwards: ALWAYS re-forward except where suppression is provably safe.
+    # Optimistic reads of the receiver's state (the paper's Fig. 6 check)
+    # lose messages under rollback races, so the only two safe gates are:
+    #   (a) echo suppression — never send back along the edge the copy
+    #       arrived on (the parent's receipt is a causal ancestor of this
+    #       send, so if this send is valid the parent has the thread);
+    #   (b) permanent receipt — the receiver's earliest receipt is older
+    #       than GVT, hence can never be rolled back.
+    # Everything else is delivered and consumed as a duplicate at the
+    # receiver (recorded in history, revivable on cancellation).
+    s_grid = jnp.arange(N, dtype=jnp.int32)[:, None]
+    fwd_pair = fwd_send[:, None] & nbr                       # (S, R)
+    fwd_pair = fwd_pair & (jnp.arange(N)[None, :] != cur_sender[:, None])
+    perm_seen = jnp.where(seen_time < state.gvt, seen_time, _INF)
+    recv_perm = perm_seen.T[fwd_thread.clip(0)]              # (S, R)
+    fwd_pair = fwd_pair & ~(recv_perm <= fwd_time[:, None] + 1e-6)
+
+    ann_pair = ann_send[:, None] & nbr                       # (S, R)
+
+    # Coalesce announcements: if the receiver already holds a ROLLBACK event
+    # from the same sender *and the same epoch*, lower its threshold in
+    # place instead of queueing a second one (only the minimum cancel-time
+    # matters within an epoch; across epochs the events must stay distinct
+    # or re-sends would be over-cancelled).
+    sender_ids = jnp.arange(N, dtype=jnp.int32)
+    rb_match = (ev.valid & (ev.typ == ROLLBACK))[:, :, None] \
+        & (ev.sender[:, :, None] == sender_ids[None, None, :]) \
+        & (ev.count[:, :, None] == ann_epoch[None, None, :])     # (R, E, S)
+    has_rb = jnp.any(rb_match, axis=1)                           # (R, S)
+    slot_rb = jnp.argmax(rb_match, axis=1).astype(jnp.int32)     # (R, S)
+    coalesce = ann_pair.T & has_rb                               # (R, S)
+    upd = jnp.where(coalesce, ann_time[None, :], _INF)
+    r_idx = jnp.broadcast_to(jnp.arange(N)[:, None], (N, N))
+    ev = ev._replace(time=ev.time.at[r_idx, slot_rb].min(upd))
+    ann_pair = ann_pair & ~coalesce.T
+
+    P = N + H
+    prop_valid = jnp.zeros((P, N), bool)
+    prop_valid = prop_valid.at[:N].set(fwd_pair | ann_pair)
+    prop_valid = prop_valid.at[N:].set(restore.T)
+
+    def sender_field(fwd_f, ann_f):
+        return jnp.where(fwd_pair, fwd_f[:, None],
+                         jnp.where(ann_pair, ann_f[:, None], 0))
+
+    prop_time = jnp.concatenate([
+        jnp.where(fwd_pair, fwd_time[:, None],
+                  jnp.where(ann_pair, ann_time[:, None], _INF)),
+        jnp.where(restore.T, state.hist.time.T, _INF),
+    ], axis=0)
+    prop_thread = jnp.concatenate([
+        sender_field(fwd_thread, jnp.full((N,), -1, jnp.int32)),
+        jnp.where(restore.T, state.hist.thread.T, -1),
+    ], axis=0).astype(jnp.int32)
+    prop_typ = jnp.concatenate([
+        jnp.where(ann_pair, ROLLBACK, NORMAL).astype(jnp.int32),
+        jnp.zeros((H, N), jnp.int32),
+    ], axis=0)
+    prop_count = jnp.concatenate([
+        sender_field(fwd_count, ann_epoch),          # RB carries its epoch
+        jnp.where(restore.T, state.hist.count.T, 0),
+    ], axis=0).astype(jnp.int32)
+    prop_tick = jnp.concatenate([
+        jnp.where(fwd_pair | ann_pair, link_tick, 0),
+        jnp.zeros((H, N), jnp.int32),
+    ], axis=0).astype(jnp.int32)
+    prop_sender = jnp.concatenate([
+        jnp.where(fwd_pair | ann_pair, s_grid, -1),
+        jnp.where(restore.T, state.hist.sender.T, -1),
+    ], axis=0).astype(jnp.int32)
+    # forwards are stamped with the sender's POST-rollback epoch (a sender
+    # never both completes a forward and rolls back in the same tick, so
+    # for actual forwarders new_epoch == old epoch); restores keep the
+    # original message's epoch so later anti-messages still match them.
+    prop_epoch = jnp.concatenate([
+        jnp.where(fwd_pair | ann_pair, new_epoch[:, None], 0),
+        jnp.where(restore.T, state.hist.epoch.T, 0),
+    ], axis=0).astype(jnp.int32)
+
+    # ---- P4: capacity-ranked insertion -------------------------------------
+    free = ~ev.valid                                          # (N, E)
+    free_count = jnp.sum(free, axis=1)
+    order_key = jnp.where(free, jnp.arange(E)[None, :],
+                          E + jnp.arange(E)[None, :])
+    free_pos = jnp.argsort(order_key, axis=1).astype(jnp.int32)  # (N, E)
+    prop_rank = jnp.cumsum(prop_valid.astype(jnp.int32), axis=0) - 1  # (P, N)
+    accept = prop_valid & (prop_rank < free_count[None, :]) & (prop_rank < E)
+    dropped = state.dropped + jnp.sum((prop_valid & ~accept).astype(jnp.int32))
+
+    r_grid = jnp.broadcast_to(jnp.arange(N)[None, :], (P, N))
+    slot_idx = free_pos[r_grid, jnp.clip(prop_rank, 0, E - 1)]   # (P, N)
+    flat = jnp.where(accept, r_grid * E + slot_idx, N * E)       # dummy last
+
+    def scatter(field_2d, updates, fill):
+        padded = jnp.concatenate(
+            [field_2d.reshape(-1), jnp.array([fill], field_2d.dtype)])
+        padded = padded.at[flat.reshape(-1)].set(
+            jnp.where(accept, updates, fill).reshape(-1).astype(field_2d.dtype))
+        return padded[:-1].reshape(N, E)
+
+    # non-accepted proposals all write to the dummy slot N*E (unique target),
+    # accepted ones write to unique (receiver, slot) pairs by construction.
+    ev = EventLists(
+        time=scatter(ev.time, prop_time, 0.0),
+        thread=scatter(ev.thread, prop_thread, 0),
+        typ=scatter(ev.typ, prop_typ, 0),
+        tick=scatter(ev.tick, prop_tick, 0),
+        count=scatter(ev.count, prop_count, 0),
+        sender=scatter(ev.sender, prop_sender, 0),
+        epoch=scatter(ev.epoch, prop_epoch, 0),
+        valid=scatter(ev.valid, jnp.ones((P, N), bool), False),
+    )
+
+    # accepted forwards enter the receiver's event list, so next tick's
+    # seen_time recomputation picks them up automatically.
+
+    # ---- P5: GVT, fossil collection, termination, trace ---------------------
+    ev_min = jnp.min(jnp.where(ev.valid, ev.time, _INF))
+    busy_min = jnp.min(jnp.where(busy, cur_time, _INF))
+    lt_min = jnp.min(local_time)
+    gvt = jnp.minimum(jnp.minimum(ev_min, busy_min), lt_min)
+    hist = hist._replace(valid=hist.valid & (hist.time >= gvt))
+    done = (~jnp.any(ev.valid)) & (~jnp.any(busy))
+
+    tick = state.tick + 1
+    lens = jnp.sum(ev.valid, axis=1).astype(jnp.float32)
+    nlps_f = jnp.maximum(
+        jnp.zeros((K,), jnp.float32).at[state.machine].add(1.0), 1.0)
+    mean_len = jnp.zeros((K,), jnp.float32).at[state.machine].add(lens) / nlps_f
+    do_trace = (tick % cfg.trace_stride == 0)
+    ptr = jnp.clip(state.trace_ptr, 0, cfg.max_trace - 1)
+    trace = jnp.where(do_trace,
+                      state.trace.at[ptr].set(mean_len), state.trace)
+    trace_ptr = state.trace_ptr + do_trace.astype(jnp.int32)
+
+    new_state = state._replace(
+        ev=ev, hist=hist, local_time=local_time, busy=busy,
+        busy_tick=busy_tick, cur_time=cur_time, cur_thread=cur_thread,
+        cur_count=cur_count, cur_sender=cur_sender, seen_time=seen_time,
+        epoch=new_epoch, tick=tick, gvt=gvt, done=done,
+        rollbacks=rollbacks, processed=processed, dropped=dropped,
+        hist_evict=hist_evict, trace=trace, trace_ptr=trace_ptr)
+
+    # ---- P6: periodic partition refinement (the paper's contribution) ------
+    if cfg.refine_freq > 0:
+        new_state = jax.lax.cond(
+            (tick % cfg.refine_freq == 0) & ~done,
+            lambda s: _refine_partition(cfg, adj, s),
+            lambda s: s, new_state)
+    return new_state
+
+
+def _refine_partition(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
+    """Measure node/edge weights from live event lists and refine (§6.1)."""
+    K = cfg.num_machines
+    b = jnp.sum(state.ev.valid, axis=1).astype(jnp.float32)
+    spawn = jnp.sum(state.ev.valid & (state.ev.count > 0),
+                    axis=1).astype(jnp.float32)
+    c = (adj > 0).astype(jnp.float32) * (spawn[:, None] + spawn[None, :])
+    prob = PartitionProblem(
+        adjacency=c, node_weights=b,
+        speeds=jnp.full((K,), 1.0 / K, jnp.float32),
+        mu=jnp.asarray(cfg.refine_mu, jnp.float32))
+    res = refine(prob, state.machine, cfg.refine_framework,
+                 max_turns=cfg.refine_max_turns)
+    moved = jnp.sum((res.assignment != state.machine).astype(jnp.int32))
+    return state._replace(machine=res.assignment,
+                          refines=state.refines + 1,
+                          moves=state.moves + moved)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run_simulation(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
+    """Run ticks until all event lists drain (or max_ticks)."""
+    def cond(s):
+        return (~s.done) & (s.tick < cfg.max_ticks)
+
+    def body(s):
+        return des_tick(cfg, adj, s)
+
+    return jax.lax.while_loop(cond, body, state)

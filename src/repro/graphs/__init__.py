@@ -1,0 +1,7 @@
+from .generators import (  # noqa: F401
+    erdos_renyi,
+    preferential_attachment,
+    random_degree_graph,
+    specialized_geometric,
+    random_weights,
+)

@@ -1,0 +1,135 @@
+"""Random graph models used in the paper's experiments (§5.1, §6.1).
+
+Host-side (numpy) generation — graphs are *data* fed to the JAX programs, so
+this lives in the data-pipeline layer, mirroring how token pipelines sit
+outside jit.  All generators return a dense symmetric float32 adjacency
+matrix with zero diagonal (1.0 marks an edge; weights applied separately).
+
+  * ``random_degree_graph``      — §5.1 study: per-node degree drawn from
+                                   [dmin, dmax], random distinct targets.
+  * ``preferential_attachment``  — §6 Fig. 7: Barabási–Albert style model
+                                   (Bu–Towsley's Internet-like generator).
+  * ``specialized_geometric``    — §6 Fig. 8: nodes get 2-D coordinates and
+                                   link to nodes chosen among their 15
+                                   nearest neighbors.
+  * ``erdos_renyi``              — Appendix A / Thm A.1 property tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed) -> np.random.Generator:
+    if isinstance(seed, np.random.Generator):
+        return seed
+    return np.random.default_rng(seed)
+
+
+def _empty(n: int) -> np.ndarray:
+    return np.zeros((n, n), np.float32)
+
+
+def _ensure_connected(adj: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Stitch components together with zero-cost... no — unit edges.
+
+    The paper (§3) notes a disconnected graph can be connected by adding
+    zero-weight edges; for topology generation we instead add a unit edge
+    from each stranded component to the giant component, which keeps BFS
+    utilities simple.  Components are found with a simple label propagation.
+    """
+    n = adj.shape[0]
+    labels = np.arange(n)
+    nbr = adj > 0
+    changed = True
+    while changed:
+        changed = False
+        for i in range(n):
+            m = labels[nbr[i]].min(initial=labels[i])
+            if m < labels[i]:
+                labels[i] = m
+                changed = True
+    roots = np.unique(labels)
+    if roots.size > 1:
+        counts = np.array([(labels == r).sum() for r in roots])
+        giant = roots[np.argmax(counts)]
+        for r in roots:
+            if r == giant:
+                continue
+            a = rng.choice(np.flatnonzero(labels == r))
+            b = rng.choice(np.flatnonzero(labels == giant))
+            adj[a, b] = adj[b, a] = 1.0
+            labels[labels == r] = giant
+    return adj
+
+
+def random_degree_graph(n: int, seed, dmin: int = 3, dmax: int = 6) -> np.ndarray:
+    """Each node connects to d ~ U{dmin..dmax} random distinct others (§5.1)."""
+    rng = _rng(seed)
+    adj = _empty(n)
+    for i in range(n):
+        d = rng.integers(dmin, dmax + 1)
+        targets = rng.choice(n - 1, size=d, replace=False)
+        targets = targets + (targets >= i)  # skip self
+        adj[i, targets] = 1.0
+        adj[targets, i] = 1.0
+    return _ensure_connected(adj, rng)
+
+
+def preferential_attachment(n: int, seed, m: int = 2) -> np.ndarray:
+    """Barabási–Albert: each new node attaches m edges ∝ current degree."""
+    rng = _rng(seed)
+    adj = _empty(n)
+    seed_size = m + 1
+    for i in range(seed_size):
+        for j in range(i + 1, seed_size):
+            adj[i, j] = adj[j, i] = 1.0
+    degree = adj.sum(axis=1)
+    for i in range(seed_size, n):
+        probs = degree[:i] / degree[:i].sum()
+        targets = rng.choice(i, size=min(m, i), replace=False, p=probs)
+        adj[i, targets] = 1.0
+        adj[targets, i] = 1.0
+        degree[targets] += 1.0
+        degree[i] = len(targets)
+    return adj
+
+
+def specialized_geometric(n: int, seed, links_per_node: int = 3,
+                          neighborhood: int = 15) -> np.ndarray:
+    """§6 geometric model: nodes in the unit square; each node randomly links
+    to ``links_per_node`` nodes from its ``neighborhood`` nearest (L2)."""
+    rng = _rng(seed)
+    coords = rng.random((n, 2)).astype(np.float32)
+    d2 = ((coords[:, None, :] - coords[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    adj = _empty(n)
+    for i in range(n):
+        near = np.argsort(d2[i])[:neighborhood]
+        chosen = rng.choice(near, size=min(links_per_node, near.size),
+                            replace=False)
+        adj[i, chosen] = 1.0
+        adj[chosen, i] = 1.0
+    return _ensure_connected(adj, rng)
+
+
+def erdos_renyi(n: int, p: float, seed) -> np.ndarray:
+    rng = _rng(seed)
+    upper = rng.random((n, n)) < p
+    adj = np.triu(upper, k=1).astype(np.float32)
+    return adj + adj.T
+
+
+def random_weights(adj: np.ndarray, seed, mean: float = 5.0):
+    """Node and edge weights with the §5.1 distribution (mean ``mean``).
+
+    The paper says only "randomly generated ... with mean 5"; we use
+    U(0, 2*mean), documented in EXPERIMENTS.md.
+    Returns (node_weights (N,), weighted_adjacency (N, N)).
+    """
+    rng = _rng(seed)
+    n = adj.shape[0]
+    node_w = rng.uniform(0.0, 2.0 * mean, size=n).astype(np.float32)
+    edge_w = rng.uniform(0.0, 2.0 * mean, size=(n, n)).astype(np.float32)
+    edge_w = np.triu(edge_w, 1)
+    edge_w = edge_w + edge_w.T
+    return node_w, (edge_w * (adj > 0)).astype(np.float32)

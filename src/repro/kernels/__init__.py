@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  * dissatisfaction.py  — fused adjacency-aggregation + cost-matrix kernel
+    for the partition game's refinement loop (the paper's §4.5 hot spot).
+  * flash_attention.py  — blocked causal GQA attention forward (online
+    softmax, causal block-skip) for train/prefill.
+  * decode_attention.py — flash-decoding GQA attention for serve_step.
+  * ssd_scan.py         — Mamba2 SSD chunked scan with the recurrent state
+    resident in VMEM across chunks.
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jitted wrapper in
+ops.py; tests sweep shapes/dtypes and assert allclose (interpret=True on
+this CPU-only container, compiled on real TPUs).
+"""
+from . import ops, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    cost_matrix,
+    decode_attention,
+    flash_attention,
+    make_core_cost_matrix_fn,
+    ssd_scan,
+)

@@ -1,0 +1,110 @@
+"""Flash-decoding style Pallas kernel: single-token GQA attention over a
+long KV cache (the serve_step hot spot for decode_32k / long_500k shapes).
+
+One grid cell handles one (batch, kv-head) pair; the KV cache is streamed
+through VMEM in (TS, D) chunks with an online-softmax accumulator, so HBM
+traffic is exactly one read of K and V — the roofline minimum for decode
+(decode attention is memory-bound: ~2*S*D bytes moved for ~2*S*D*G FLOPs).
+
+Layouts:
+  q   (B, Hkv, G, D)  — query heads grouped under their kv head
+  k,v (B, S, Hkv, D)
+  out (B, Hkv, G, D)
+Grid (B, Hkv, S/TS), s innermost; scratch: acc (G, D), m/l (G, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_TILE_S = 512
+_NEG_INF = -1.0e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref,
+            *, tile_s: int, num_s: int, scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale                # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                  # (TS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                  # (TS, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (G, TS)
+    offs = s * tile_s + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    valid = offs < len_ref[0, 0]
+    logits = jnp.where(valid, logits, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                                      # (G, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                                # (G, TS)
+    corr = jnp.exp(m_prev - m_new)                             # (G, 1)
+    l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(s == num_s - 1)
+    def _finish():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[:, :1], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+def decode_attention_pallas(q: Array, k: Array, v: Array, length: Array, *,
+                            tile_s: int = DEFAULT_TILE_S,
+                            interpret: bool = True) -> Array:
+    """q (B,H,D), k/v (B,S,Hkv,D), length (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    g_pad = max(8, -(-G // 8) * 8)
+    d_pad = -(-D // 128) * 128
+    tile_s = min(tile_s, -(-S // 128) * 128)
+    s_pad = -(-S // tile_s) * tile_s
+
+    qg = q.reshape(B, Hkv, G, D)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - G), (0, d_pad - D)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+    lens = jnp.asarray(length, jnp.int32).reshape(B, 1)
+
+    num_s = s_pad // tile_s
+    out = pl.pallas_call(
+        functools.partial(_kernel, tile_s=tile_s, num_s=num_s,
+                          scale=1.0 / (D ** 0.5)),
+        grid=(B, Hkv, num_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),              # length
+            pl.BlockSpec((1, 1, g_pad, d_pad), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, tile_s, 1, d_pad), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, tile_s, 1, d_pad), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d_pad),
+                               lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g_pad, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, d_pad), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qg, kp, vp)
+    return out[:, :, :G, :D].reshape(B, H, D)

@@ -1,0 +1,125 @@
+"""Fused Pallas TPU kernel for the refinement hot spot (DESIGN.md §3.2).
+
+Every refinement turn needs the full (N, K) node-cost matrix, whose dominant
+work is the adjacency aggregation  A[i, k] = sum_j c_ij * 1[r_j = k]  — an
+(N x N) @ (N x K) matmul.  Computing A with jnp and then assembling costs
+reads the (N, K) intermediates from HBM several times; this kernel tiles the
+adjacency into VMEM blocks, accumulates A on the MXU, and fuses the entire
+cost assembly (load term + cut term for either framework) into the final
+grid step, so the adjacency is read exactly once and nothing but the (N, K)
+cost matrix is written back.
+
+Grid: (N/TN, N/TJ), j innermost.  Per (i, j) step:
+  * build the one-hot of the column block's assignments (TJ, K) in VREGs,
+  * acc(TN, K) += C_block(TN, TJ) @ onehot  (MXU),
+  * at j == last: assemble the cost block and write it out.
+
+All tile dims are multiples of the 128-lane MXU width; K is padded to 128
+lanes by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_TILE_N = 128
+DEFAULT_TILE_J = 128
+
+
+def _kernel(c_ref, r_cols_ref, r_rows_ref, b_rows_ref, loads_ref, speeds_ref,
+            scalars_ref, out_ref, acc_ref, *, framework: str, num_j: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpad = loads_ref.shape[-1]
+    r_cols = r_cols_ref[0, :]                                  # (TJ,) int32
+    onehot = (r_cols[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, kpad), 1)
+              ).astype(jnp.float32)                            # (TJ, K)
+    acc_ref[...] += jax.lax.dot(
+        c_ref[...].astype(jnp.float32), onehot,
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_j - 1)
+    def _finish():
+        aggregate = acc_ref[...]                               # (TN, K)
+        mu = scalars_ref[0, 0]
+        total_b = scalars_ref[0, 1]
+        b = b_rows_ref[0, :].astype(jnp.float32)[:, None]      # (TN, 1)
+        r_rows = r_rows_ref[0, :]                              # (TN,)
+        own = (r_rows[:, None]
+               == jax.lax.broadcasted_iota(jnp.int32, (1, kpad), 1)
+               ).astype(jnp.float32)
+        loads = loads_ref[0, :][None, :]                       # (1, K)
+        inv_w = 1.0 / speeds_ref[0, :][None, :]
+        degree = jnp.sum(aggregate, axis=-1, keepdims=True)
+        others = loads - b * own
+        cut_term = 0.5 * mu * (degree - aggregate)
+        if framework == "c":
+            cost = (b * inv_w) * others + cut_term
+        else:
+            cost = (b * b) * inv_w * inv_w \
+                + 2.0 * b * inv_w * inv_w * others \
+                - 2.0 * b * inv_w * total_b + cut_term
+        out_ref[...] = cost
+
+
+def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
+                       loads: Array, speeds: Array, mu,
+                       framework: str = "c", *,
+                       tile_n: int = DEFAULT_TILE_N,
+                       tile_j: int = DEFAULT_TILE_J,
+                       interpret: bool = True) -> Array:
+    """Padded + tiled pallas_call; returns the (N, K) cost matrix.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container has no TPU); on real hardware pass interpret=False.
+    """
+    n = adjacency.shape[0]
+    k = loads.shape[0]
+    n_pad = -(-n // tile_n) * tile_n
+    j_pad = -(-n // tile_j) * tile_j
+    npad = max(n_pad, j_pad)
+    k_pad = -(-k // 128) * 128
+
+    c = jnp.zeros((npad, npad), adjacency.dtype).at[:n, :n].set(adjacency)
+    # padded columns point at a padded machine so they never pollute real K
+    r = jnp.full((1, npad), k_pad - 1, jnp.int32).at[0, :n].set(
+        jnp.asarray(assignment, jnp.int32))
+    b = jnp.zeros((1, npad), jnp.float32).at[0, :n].set(
+        node_weights.astype(jnp.float32))
+    l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
+        loads.astype(jnp.float32))
+    w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
+        speeds.astype(jnp.float32))
+    scalars = jnp.array([[mu, jnp.sum(node_weights)]], jnp.float32)
+
+    num_i = npad // tile_n
+    num_j = npad // tile_j
+    out = pl.pallas_call(
+        functools.partial(_kernel, framework=framework, num_j=num_j),
+        grid=(num_i, num_j),
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_j), lambda i, j: (i, j)),   # adjacency
+            pl.BlockSpec((1, tile_j), lambda i, j: (0, j)),        # r (cols)
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, i)),        # r (rows)
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, i)),        # b (rows)
+            pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),         # loads
+            pl.BlockSpec((1, k_pad), lambda i, j: (0, 0)),         # speeds
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),             # mu, B
+        ],
+        out_specs=pl.BlockSpec((tile_n, k_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, k_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile_n, k_pad), jnp.float32)],
+        interpret=interpret,
+    )(c, r, r, b, l_pad, w_pad, scalars)
+    return out[:n, :k]

@@ -1,0 +1,141 @@
+"""Flash-attention FORWARD Pallas kernel: blocked causal GQA attention.
+
+This is the hardware realization of the §Perf analytic memory floor for
+train/prefill attention: Q, K, V stream through VMEM in blocks with an
+online-softmax accumulator, so the S x S logits never touch HBM — the
+XLA-level `attn_q_chunks` path (models/attention.py) bounds peak memory
+but still pays the S² HBM traffic; this kernel removes it (HBM traffic =
+one Q/K/V read + one O write, the roofline minimum).
+
+Layouts (one grid cell per (batch, kv-head, q-block); k innermost):
+  q   (B, S, Hkv, G, D)  — query heads grouped under their kv head
+  k,v (B, S, Hkv, D)
+  out (B, S, Hkv, G, D)
+Block shapes: q (1, TQ, 1, G, D) flattened to (TQ*G, D) rows for the MXU;
+k/v (1, TK, 1, D).  Scratch: acc (TQ*G, D), m/l (TQ*G, 128) f32.
+
+Causality: k-blocks strictly in the future of a q-block are skipped with
+``pl.when`` (half the blocks at long S — the FLOP skip the XLA path
+cannot express); the diagonal blocks mask per element via iota.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_TILE_Q = 128
+DEFAULT_TILE_K = 128
+_NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+            tile_q: int, tile_k: int, num_k: int, groups: int,
+            scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal block skip: this k block starts after the q block ends
+    q_start = qi * tile_q
+    k_start = ki * tile_k
+
+    @pl.when(k_start <= q_start + tile_q - 1)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale   # (TQ, G, D)
+        q2 = q.reshape(tile_q * groups, q.shape[-1])     # (TQ*G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (TK, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (TK, D)
+
+        logits = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (TQ*G, TK)
+        # causal mask on absolute positions: row r belongs to q position
+        # q_start + r // G; column c is k position k_start + c
+        rows = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        q_pos = q_start + rows // groups
+        k_pos = k_start + cols
+        logits = jnp.where(q_pos >= k_pos, logits, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                            # (TQ*G, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)                      # (TQ*G, TK)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ki == num_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        out = (acc_ref[...] / denom).astype(out_ref.dtype)
+        out_ref[0, :, 0] = out.reshape(tile_q, groups, out.shape[-1])
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           tile_q: int = DEFAULT_TILE_Q,
+                           tile_k: int = DEFAULT_TILE_K,
+                           interpret: bool = True) -> Array:
+    """Causal GQA attention.  q (B,S,H,D), k/v (B,S,Hkv,D) -> (B,S,H,D).
+
+    ``interpret=True`` executes on CPU for validation; on TPU pass
+    interpret=False for the compiled kernel.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+
+    tile_q = min(tile_q, S)
+    tile_k = min(tile_k, S)
+    s_pad_q = -(-S // tile_q) * tile_q
+    s_pad_k = -(-S // tile_k) * tile_k
+    s_pad = max(s_pad_q, s_pad_k)
+    d_pad = -(-D // 128) * 128
+
+    qg = q.reshape(B, S, Hkv, G, D)
+    qg = jnp.pad(qg, ((0, 0), (0, s_pad - S), (0, 0), (0, 0),
+                      (0, d_pad - D)))
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+
+    num_q = s_pad // tile_q
+    num_k = s_pad // tile_k
+    out = pl.pallas_call(
+        functools.partial(_kernel, tile_q=tile_q, tile_k=tile_k,
+                          num_k=num_k, groups=G, scale=1.0 / (D ** 0.5)),
+        grid=(B, Hkv, num_q, num_k),
+        in_specs=[
+            pl.BlockSpec((1, tile_q, 1, G, d_pad),
+                         lambda b, h, qi, ki: (b, qi, h, 0, 0)),
+            pl.BlockSpec((1, tile_k, 1, d_pad),
+                         lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, tile_k, 1, d_pad),
+                         lambda b, h, qi, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, 1, G, d_pad),
+                               lambda b, h, qi, ki: (b, qi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, s_pad, Hkv, G, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q * G, d_pad), jnp.float32),
+            pltpu.VMEM((tile_q * G, 128), jnp.float32),
+            pltpu.VMEM((tile_q * G, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp)
+    return out[:, :S, :, :, :D].reshape(B, S, H, D)

@@ -1,0 +1,95 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container executes on CPU; on a
+TPU runtime pass ``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to run
+the compiled kernels.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_pallas
+from .dissatisfaction import cost_matrix_pallas
+
+Array = jax.Array
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("framework", "interpret"))
+def cost_matrix(adjacency: Array, assignment: Array, node_weights: Array,
+                loads: Array, speeds: Array, mu, framework: str = "c",
+                interpret: bool | None = None) -> Array:
+    """(N, K) node-cost matrix via the fused Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return cost_matrix_pallas(adjacency, assignment, node_weights, loads,
+                              speeds, mu, framework, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("framework",))
+def cost_matrix_reference(adjacency: Array, assignment: Array,
+                          node_weights: Array, loads: Array, speeds: Array,
+                          mu, framework: str = "c") -> Array:
+    return ref.cost_matrix_ref(adjacency, assignment, node_weights, loads,
+                               speeds, mu, framework)
+
+
+def make_core_cost_matrix_fn(interpret: bool | None = None):
+    """Adapter with the (problem, state, framework) signature expected by
+    repro.core.refine(..., cost_matrix_fn=...), so the refinement loop can
+    run on the Pallas kernel instead of the jnp path."""
+    def fn(problem, state, framework):
+        return cost_matrix(problem.adjacency, state.assignment,
+                           problem.node_weights, state.loads, problem.speeds,
+                           problem.mu, framework, interpret=interpret)
+    return fn
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q: Array, k: Array, v: Array, length: Array,
+                     interpret: bool | None = None) -> Array:
+    """GQA single-token decode attention (flash-decoding style)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return decode_attention_pallas(q, k, v, length, interpret=interpret)
+
+
+decode_attention_reference = jax.jit(ref.decode_attention_ref)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flash_attention(q: Array, k: Array, v: Array,
+                    interpret: bool | None = None) -> Array:
+    """Blocked causal GQA attention (flash-attention forward) — the
+    train/prefill hot-spot kernel; S x S logits never touch HBM."""
+    from .flash_attention import flash_attention_pallas
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_pallas(q, k, v, interpret=interpret)
+
+
+flash_attention_reference = jax.jit(ref.flash_attention_ref)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: Array, dt: Array, a: Array, bm: Array, cm: Array,
+             chunk: int = 128, interpret: bool | None = None):
+    """Mamba2 SSD chunked scan — the SSM train/prefill hot-spot kernel;
+    the recurrent state lives in VMEM across chunks."""
+    from .ssd_scan import ssd_scan_pallas
+    if interpret is None:
+        interpret = _default_interpret()
+    return ssd_scan_pallas(x, dt, a, bm, cm, chunk, interpret=interpret)
+
+
+ssd_scan_reference = jax.jit(ref.ssd_scan_ref)

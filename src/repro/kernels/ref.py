@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground-truth implementations every kernel is validated
+against (tests sweep shapes/dtypes and assert allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cost_matrix_ref(adjacency: Array, assignment: Array, node_weights: Array,
+                    loads: Array, speeds: Array, mu, framework: str) -> Array:
+    """(N, K) node-cost matrix — reference for kernels/dissatisfaction.py.
+
+    Mirrors repro.core.costs.cost_matrix but takes raw arrays (the kernel
+    layer is independent of the problem containers).
+    """
+    K = speeds.shape[0]
+    f32 = jnp.float32
+    adjacency = adjacency.astype(f32)
+    b = node_weights.astype(f32)
+    onehot = jax.nn.one_hot(assignment, K, dtype=f32)
+    aggregate = adjacency @ onehot                               # (N, K)
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)
+    own = onehot
+    others = loads.astype(f32)[None, :] - b[:, None] * own
+    cut_term = 0.5 * jnp.asarray(mu, f32) * (degree - aggregate)
+    inv_w = 1.0 / speeds.astype(f32)[None, :]
+    if framework == "c":
+        return (b[:, None] * inv_w) * others + cut_term
+    if framework == "ct":
+        total = jnp.sum(b)
+        return ((b[:, None] ** 2) * inv_w**2
+                + 2.0 * b[:, None] * inv_w**2 * others
+                - 2.0 * b[:, None] * inv_w * total) + cut_term
+    raise ValueError(framework)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, length) -> Array:
+    """Single-token decode attention — reference for kernels/decode_attention.py.
+
+    q: (B, H, D); k/v: (B, S, Hkv, D) with Hkv | H (GQA); ``length`` (B,)
+    gives the valid prefix of the cache.  Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    mask = jnp.arange(S)[None, None, None, :] < jnp.asarray(length)[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array) -> Array:
+    """Causal GQA attention — reference for kernels/flash_attention.py.
+
+    q: (B, S, H, D); k/v: (B, S, Hkv, D) with Hkv | H.  Full-materialized
+    f32 softmax over the S x S logits (the thing the kernel never builds).
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x: Array, dt: Array, a: Array, bm: Array, cm: Array):
+    """Naive per-token SSD recurrence — reference for kernels/ssd_scan.py.
+
+    s_t = exp(dt_t a) s_{t-1} + dt_t · B_t ⊗ x_t;  y_t = C_t · s_t.
+    Independent of the chunked formulation (pure sequential scan).
+    """
+    B, L, H, P = x.shape
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None, :])                        # (B, H)
+        s = s * decay[:, :, None, None] \
+            + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((B, H, P, bm.shape[-1]), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cm.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,125 @@
+"""Pallas kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+One grid cell per (batch, head, chunk); chunks iterate innermost and carry
+the (P, N) recurrent state in VMEM scratch, so the state never round-trips
+HBM between chunks — the memory floor for SSM train/prefill (the pure-JAX
+path in models/ssm.py stages the inter-chunk states through a lax.scan
+carry in HBM).
+
+Per chunk (all f32, following arXiv:2405.21060 §6):
+  da       = dt * a                      (Q,)  — precomputed outside
+  cum      = cumsum(da)                  (Q,)
+  L[i, j]  = exp(cum_i - cum_j) · 1[i >= j]
+  scores   = (C B^T) ⊙ L ⊙ dt_j          (Q, Q)
+  y        = scores @ x                      — intra-chunk (quadratic) part
+           + (C ⊙ exp(cum)) @ state^T        — inter-chunk (recurrent) part
+  state   <- state · exp(cum_Q) + x^T @ (B ⊙ exp(cum_Q - cum) ⊙ dt)
+
+Layouts: x/y (B, L, H, P); dt/da pre-transposed to (B, H, L) so the block's
+last dim is the 128-long chunk; bm/cm (B, L, N) shared across heads; the
+final state (B, H, P, N) is a second output written at the last chunk
+(prefill hands it to the decode cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(x_ref, da_ref, dt_ref, bm_ref, cm_ref, y_ref, state_out_ref,
+            state_ref, *, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)            # (Q, P)
+    da = da_ref[0, 0].astype(jnp.float32)             # (Q,)
+    dt = dt_ref[0, 0].astype(jnp.float32)             # (Q,)
+    bm = bm_ref[0].astype(jnp.float32)                # (Q, N)
+    cm = cm_ref[0].astype(jnp.float32)                # (Q, N)
+
+    cum = jnp.cumsum(da)                              # (Q,)
+    decay = jnp.exp(cum[:, None] - cum[None, :])      # (Q, Q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, decay.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, decay.shape, 1)
+    lmat = jnp.where(rows >= cols, decay, 0.0)
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    scores = cb * lmat * dt[None, :]
+    y_diag = jax.lax.dot(scores, x, preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                            # (P, N)
+    y_off = jax.lax.dot_general(
+        cm * jnp.exp(cum)[:, None], state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (Q, P)
+
+    total = jnp.exp(cum[-1])
+    wts = jnp.exp(cum[-1] - cum) * dt                 # (Q,)
+    inc = jax.lax.dot_general(
+        x, bm * wts[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (P, N)
+    state_ref[...] = state * total + inc
+
+    y_ref[0, :, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_pallas(x: Array, dt: Array, a: Array, bm: Array, cm: Array,
+                    chunk: int = DEFAULT_CHUNK, *,
+                    interpret: bool = True):
+    """x (B,L,H,P), dt (B,L,H), a (H,), bm/cm (B,L,N) ->
+    (y (B,L,H,P) f32, final_state (B,H,P,N) f32).
+
+    Arbitrary L: zero-padded to a chunk multiple (dt=0 on the pad leaves
+    the state untouched, padded outputs are sliced off).
+    """
+    B, L, H, P = x.shape
+    N = bm.shape[-1]
+    Q = min(chunk, L)
+    L_pad = -(-L // Q) * Q
+    if L_pad != L:
+        x = jnp.pad(x, ((0, 0), (0, L_pad - L), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, L_pad - L), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, L_pad - L), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, L_pad - L), (0, 0)))
+    nc = L_pad // Q
+
+    da_t = jnp.moveaxis(dt * a[None, None, :], 1, 2)   # (B, H, L)
+    dt_t = jnp.moveaxis(dt, 1, 2)                      # (B, H, L)
+
+    y, final = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),   # x
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),         # da
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),         # dt
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),         # bm
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),         # cm
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L_pad, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, da_t, dt_t, bm, cm)
+    return y[:, :L], final

@@ -1,0 +1,157 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but NOT collective traffic,
+so we parse ``compiled.as_text()``: sum the (per-device) result sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, and multiply ops living inside while-loop bodies
+(lax.scan over layers, microbatch loops) by the loop trip count recovered
+from the loop-condition's comparison constant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[128,256]' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> list of instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers may contain NESTED parens (tuple-typed loop
+        # carries): ``%region_0.2 (arg: (s32[], f32[8,8])) -> (...) {`` —
+        # so take the name before the first '(' on any '{'-terminated
+        # header line containing '->' (and no '=', which would mark an
+        # instruction like fusion(...) { ... }).
+        if stripped.endswith("{") and "->" in stripped \
+                and "=" not in stripped.split("(", 1)[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_computation(hlo: str) -> str | None:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def collective_stats(hlo: str) -> dict:
+    """Returns {'total_bytes', 'by_kind': {kind: bytes}, 'count'} with
+    while-loop trip counts applied."""
+    comps = _split_computations(hlo)
+
+    # direct collective bytes per computation
+    direct = {}
+    counts = defaultdict(int)
+    by_kind_direct = {}
+    for name, lines in comps.items():
+        total = 0
+        kinds = defaultdict(int)
+        for line in lines:
+            for kind in COLLECTIVES:
+                # match '= <shape> kind(' — the result shape precedes the op
+                m = re.search(r"=\s+([^=]*?)\s+%?" + kind + r"(?:-start)?\(",
+                              line)
+                if m:
+                    nbytes = _shape_bytes(m.group(1))
+                    total += nbytes
+                    kinds[kind] += nbytes
+                    counts[kind] += 1
+                    break
+        direct[name] = total
+        by_kind_direct[name] = kinds
+
+    # while-loop structure: body/condition computation references
+    calls = defaultdict(list)        # comp -> [(callee, trip)]
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?\).*?condition=%?([\w\.\-]+),\s*"
+                          r"body=%?([\w\.\-]+)", line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                calls[name].append((body, trip))
+            # fusion/call/conditional computations execute once
+            for ref in re.findall(
+                    r"(?:calls|to_apply|body|branch_computations)="
+                    r"\{?%?([\w\.\-]+)", line):
+                if ref in comps and "condition" not in line:
+                    calls[name].append((ref, 1))
+
+    def total_bytes(name, kinds_acc, mult, seen):
+        if name in seen or name not in comps:
+            return 0
+        seen = seen | {name}
+        out = direct.get(name, 0) * mult
+        for kind, b in by_kind_direct.get(name, {}).items():
+            kinds_acc[kind] += b * mult
+        for callee, trip in calls.get(name, []):
+            out += total_bytes(callee, kinds_acc, mult * trip, seen)
+        return out
+
+    entry = _entry_computation(hlo)
+    kinds_acc = defaultdict(int)
+    if entry is None:
+        total = sum(direct.values())
+        for km in by_kind_direct.values():
+            for kind, b in km.items():
+                kinds_acc[kind] += b
+    else:
+        total = total_bytes(entry, kinds_acc, 1, frozenset())
+    return {"total_bytes": int(total),
+            "by_kind": {k: int(v) for k, v in kinds_acc.items()},
+            "count": dict(counts)}
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Recover a scan trip count from the loop condition: the comparison
+    constant in 'compare(..., constant(N)), direction=LT'."""
+    consts = []
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def flops_and_bytes(compiled) -> tuple[float, float]:
+    """HLO FLOPs and HBM bytes from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    return flops, nbytes

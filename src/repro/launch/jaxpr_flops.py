@@ -1,0 +1,150 @@
+"""Exact FLOP/byte accounting by walking the jaxpr.
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE, so for scan-over-layers
+programs ``compiled.cost_analysis()`` under-reports FLOPs by ~num_layers x.
+The jaxpr still has the static trip counts, so we count there:
+
+  * dot_general  — 2 * batch * M * N * K exact
+  * conv / scatter / gather — bytes-ish ops, counted elementwise
+  * elementwise / transcendental — one (or a few) flops per output element
+  * scan         — body flops x length
+  * while        — body x (cap; not used in the LM paths)
+  * cond         — max over branches (upper bound)
+  * pjit / remat / custom_* — recurse
+
+Also accumulates a naive bytes-touched estimate per primitive (inputs +
+outputs), used only as a relative-correction signal for the fused HLO bytes
+(see dryrun.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+_TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                   "sin", "cos", "pow", "cbrt", "log1p", "expm1"}
+_CHEAP = {"add", "sub", "mul", "div", "max", "min", "neg", "abs", "and", "or",
+          "xor", "not", "select_n", "clamp", "floor", "ceil", "round",
+          "rem", "sign", "gt", "lt", "ge", "le", "eq", "ne", "integer_pow",
+          "cumsum", "cumlogsumexp", "cummax", "cumprod"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs = eqn.invars[0].aval
+    batch = 1
+    for d in lb:
+        batch *= lhs.shape[d]
+    contract = 1
+    for d in lc:
+        contract *= lhs.shape[d]
+    m = _size(lhs) // max(batch * contract, 1)
+    rhs = eqn.invars[1].aval
+    rbatch = 1
+    for d in rb:
+        rbatch *= rhs.shape[d]
+    rcontract = 1
+    for d in rc:
+        rcontract *= rhs.shape[d]
+    n = _size(rhs) // max(rbatch * rcontract, 1)
+    return 2 * batch * m * n * contract
+
+
+def count_jaxpr(jaxpr, multiply_trips: bool = True) -> tuple[int, int]:
+    """Returns (flops, naive_bytes) for a (closed or open) jaxpr.
+
+    ``multiply_trips=False`` counts every scan body once — mirroring XLA's
+    HloCostAnalysis behaviour, so the ratio of the two runs is exactly the
+    loop-trip inflation factor to apply to HLO-reported quantities.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    flops = 0
+    nbytes = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out_size = sum(_size(v.aval) for v in eqn.outvars)
+        out_bytes = sum(_bytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+            nbytes += in_bytes + out_bytes
+        elif name == "scan":
+            body_f, body_b = count_jaxpr(eqn.params["jaxpr"],
+                                         multiply_trips)
+            length = eqn.params["length"] if multiply_trips else 1
+            flops += body_f * length
+            nbytes += body_b * length
+        elif name == "while":
+            body_f, body_b = count_jaxpr(eqn.params["body_jaxpr"], multiply_trips)
+            flops += body_f          # trip unknown; count once (documented)
+            nbytes += body_b
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            sub = [count_jaxpr(b, multiply_trips) for b in branches]
+            flops += max(s[0] for s in sub)
+            nbytes += max(s[1] for s in sub)
+        elif name in ("pjit", "closed_call", "core_call", "remat2",
+                      "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr"):
+            inner = (eqn.params.get("jaxpr")
+                     or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                f, b = count_jaxpr(inner, multiply_trips)
+                flops += f
+                nbytes += b
+        elif name in _TRANSCENDENTAL:
+            flops += 8 * out_size    # polynomial approx cost on VPU
+            nbytes += in_bytes + out_bytes
+        elif name in _CHEAP:
+            flops += out_size
+            nbytes += in_bytes + out_bytes
+        elif name in ("reduce_sum", "reduce_max", "reduce_min",
+                      "reduce_prod", "argmax", "argmin", "reduce_and",
+                      "reduce_or"):
+            flops += sum(_size(v.aval) for v in eqn.invars
+                         if hasattr(v, "aval"))
+            nbytes += in_bytes + out_bytes
+        elif name in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "dynamic_slice", "dynamic_update_slice", "sort",
+                      "top_k", "concatenate", "pad", "rev", "transpose",
+                      "reshape", "broadcast_in_dim", "convert_element_type",
+                      "slice", "iota", "select_and_scatter_add"):
+            nbytes += in_bytes + out_bytes
+        else:
+            nbytes += in_bytes + out_bytes
+    return flops, nbytes
+
+
+def count_fn(fn, *args) -> tuple[int, int]:
+    closed = jax.make_jaxpr(fn)(*args)
+    return count_jaxpr(closed)
+
+
+def count_fn_with_factor(fn, *args):
+    """Returns (flops, naive_bytes, trip_factor_flops, trip_factor_bytes)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    f1, b1 = count_jaxpr(closed, True)
+    f0, b0 = count_jaxpr(closed, False)
+    return f1, b1, (f1 / max(f0, 1)), (b1 / max(b0, 1))

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first init, and
+smoke tests must see 1 CPU device while the dry-run sees 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / reduced dry-runs)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BANDWIDTH = 819e9           # B/s
+ICI_BANDWIDTH = 50e9            # B/s per link

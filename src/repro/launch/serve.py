@@ -1,0 +1,80 @@
+"""Serving driver: continuous batching over the slot-pool engine.
+
+Production path (real TPU pod): params come from a training checkpoint and
+shard per `repro.sharding.rules` (model-only for inference — §Perf
+iteration 5); on this CPU container the example serves a reduced config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b \
+      --requests 16 --max-new 24 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro import configs
+from repro.models import init_params
+from repro.serving import Request, ServeConfig, ServingEngine
+from repro.serving.sampler import sample_logits
+from repro.training import checkpoint
+
+
+def serve(arch: str, *, smoke: bool = True, requests: int = 16,
+          max_new: int = 24, slots: int = 4, max_len: int = 256,
+          temperature: float = 0.0, ckpt_dir: str | None = None,
+          seed: int = 0):
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    if ckpt_dir:
+        restored, step = checkpoint.restore(ckpt_dir, params)
+        if restored is not None:
+            params = restored
+            print(f"[serve] loaded checkpoint step {step}")
+
+    sampler = None
+    if temperature > 0:
+        key = jax.random.PRNGKey(seed + 1)
+        sampler = lambda logits: sample_logits(key, logits,
+                                               temperature=temperature)
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=slots, max_len=max_len,
+                                    cache_dtype="float32"),
+                        **({"sampler": sampler} if sampler else {}))
+    rng = np.random.default_rng(seed)
+    for i in range(requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(4, max(5, max_len // 8)))
+                              ).astype(np.int32)
+        eng.submit(Request(i, prompt, max_new_tokens=max_new))
+    stats = eng.run()
+    print(f"[serve] {stats['requests']} requests | "
+          f"{stats['generated_tokens']} tokens | "
+          f"{stats['decode_steps']} batched decode steps | "
+          f"{stats['tok_per_s']:.1f} tok/s")
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    serve(args.arch, smoke=args.smoke, requests=args.requests,
+          max_new=args.max_new, slots=args.slots, max_len=args.max_len,
+          temperature=args.temperature, ckpt_dir=args.ckpt_dir,
+          seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from .config import DENSE, HYBRID, MOE, SSM, ModelConfig  # noqa: F401
+from .transformer import (  # noqa: F401
+    DecodeCache,
+    decode_step,
+    forward_logits,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)

@@ -1,0 +1,164 @@
+"""GQA attention: causal full-sequence (train/prefill) and cached decode.
+
+The decode path can route through the flash-decoding Pallas kernel
+(repro/kernels/decode_attention.py); the jnp path is the default because the
+dry-run compiles for the XLA backend (kernels run interpret-only on CPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.hints import DP, hint
+from .config import ModelConfig
+from .layers import apply_rope, normal_init
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array       # (B, S_max, Hkv, D)
+    v: Array       # (B, S_max, Hkv, D)
+    length: Array  # () or (B,) int32 — tokens currently cached
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    params = {
+        "wq": normal_init(ks[0], (d, h * hd), scale, cfg.pdtype()),
+        "wk": normal_init(ks[1], (d, hkv * hd), scale, cfg.pdtype()),
+        "wv": normal_init(ks[2], (d, hkv * hd), scale, cfg.pdtype()),
+        "wo": normal_init(ks[3], (h * hd, d), (h * hd) ** -0.5, cfg.pdtype()),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * hd,), cfg.pdtype())
+        params["bk"] = jnp.zeros((hkv * hd,), cfg.pdtype())
+        params["bv"] = jnp.zeros((hkv * hd,), cfg.pdtype())
+    return params
+
+
+def _project_qkv(params: dict, cfg: ModelConfig, x: Array, positions: Array):
+    B, S, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dtype = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _causal_core(q: Array, k: Array, v: Array, cfg: ModelConfig,
+                 q_chunks: int | None = None) -> Array:
+    """Causal softmax attention.  q: (B,S,H,D), k/v: (B,S,Hkv,D) -> (B,S,H,D).
+
+    SEQUENCE-PARALLEL layout (EXPERIMENTS.md §Perf, hillclimb #1): q is
+    sharded over 'model' on its SEQUENCE dim — always divisible, unlike
+    head counts (yi-34b: 56 heads vs a 16-wide axis) — and k/v replicate
+    over 'model'.  Both einsum contractions are then over unsharded dims,
+    so no S x S partial sums are ever all-reduced; logits shard on the
+    q-sequence dim instead.
+
+    ``q_chunks > 1`` (hillclimb #2) processes the query sequence in blocks
+    inside lax.map, so the S x S logits never exist as one HBM buffer —
+    flash-attention-style blocking at the XLA level (the Pallas kernel does
+    the same within VMEM on real hardware for decode).
+    """
+    B, S = q.shape[0], q.shape[1]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    group = h // hkv
+    if q_chunks is None:
+        q_chunks = cfg.attn_q_chunks
+    q = hint(q, DP, "model", None, None)
+    k = hint(k, DP, None, None, None)
+    v = hint(v, DP, None, None, None)
+    kf = k.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def block(q_blk, pos_blk):
+        """q_blk: (B, Sq, Hkv, G, D) at absolute positions pos_blk (Sq,)."""
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                            kf) * scale
+        logits = hint(logits, DP, None, None, "model", None)
+        mask = pos_blk[:, None] >= jnp.arange(S)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return hint(out, DP, "model", None, None, None)
+
+    qg = q.reshape(B, S, hkv, group, hd)
+    if q_chunks <= 1 or S % q_chunks != 0 \
+            or (S // q_chunks) % max(q_chunks, 1) == -1:
+        out = block(qg, jnp.arange(S))
+    else:
+        blk = S // q_chunks
+        qb = jnp.moveaxis(qg.reshape(B, q_chunks, blk, hkv, group, hd), 1, 0)
+        # reshard: the split puts the sequence sharding on the chunk dim
+        # (major); move it to each block's sequence dim so every chip works
+        # on every chunk (otherwise lax.map serializes over shards)
+        qb = hint(qb, None, DP, "model", None, None, None)
+        pos = jnp.arange(S).reshape(q_chunks, blk)
+        out = jax.lax.map(lambda args: block(*args), (qb, pos))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, hkv, group, hd)
+        out = hint(out, DP, "model", None, None, None)
+    return out.reshape(B, S, h, hd)
+
+
+def causal_attention(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    """Full causal self-attention for train/prefill.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = _causal_core(q, k, v, cfg).reshape(B, S, -1)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+
+
+def decode_attention_step(params: dict, cfg: ModelConfig, x: Array,
+                          cache: KVCache) -> tuple[Array, KVCache]:
+    """One-token decode.  x: (B, 1, d); returns (B, 1, d) and updated cache."""
+    B = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(cache.length, (B,))[:, None]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    idx = jnp.broadcast_to(cache.length, (B,))
+    k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))(cache.k, k_new, idx)
+    v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))(cache.v, v_new, idx)
+    new_len = cache.length + 1
+
+    S = k.shape[1]
+    group = h // hkv
+    qg = q.reshape(B, hkv, group, hd)                     # (B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(S)[None, None, None, :] < \
+        jnp.broadcast_to(new_len, (B,))[:, None, None, None]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v)
+    out = out.reshape(B, 1, h * hd)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return out, KVCache(k=k, v=v, length=new_len)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,71 @@
+"""Shared neural building blocks (pure-JAX functional style).
+
+Parameters are nested dicts of jnp arrays; every function takes the params
+subtree it owns.  Keeping the tree paths stable matters: the sharding rules
+in repro/sharding/rules.py pattern-match on them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: Array, weight: Array, eps: float) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    dtype = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    up = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(gate) * up,
+                      w_down.astype(dtype))
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    return {
+        "gate": normal_init(k1, (d_model, d_ff), scale_in, dtype),
+        "up": normal_init(k2, (d_model, d_ff), scale_in, dtype),
+        "down": normal_init(k3, (d_ff, d_model), scale_out, dtype),
+    }
+
+
+def causal_conv1d(x: Array, weight: Array) -> Array:
+    """Depthwise causal conv over time.  x: (B, L, C); weight: (C, W)."""
+    w = weight.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * weight[:, i][None, None, :].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts block with scatter-based grouped dispatch.
+
+Design (DESIGN.md §4): tokens are split into groups of ``moe_group_size``;
+within each group every token's top-k experts get the token scattered into a
+per-(group, expert) capacity buffer.  Dispatch/combine are gathers/scatters
+(zero matmul FLOPs — the einsum-dispatch formulation would add ~2*S_g/(3*d_ff)
+of the expert FLOPs as pure overhead), and the expert einsum runs on
+capacity-shaped buffers that shard cleanly: groups on the data axis, experts
+on the model axis (expert parallelism).
+
+The router also exposes per-expert load statistics consumed by the
+game-theoretic PartitionPlanner (repro/sharding/planner.py) for dynamic
+expert placement — the paper's dynamic load-balancing applied to MoE.
+
+``moe_impl="dense"`` computes every expert for every token (top-k combine
+only); it is the correctness oracle used by tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.hints import DP, hint
+from .config import ModelConfig
+from .layers import normal_init
+
+Array = jax.Array
+
+
+class MoEStats(NamedTuple):
+    aux_loss: Array       # load-balancing auxiliary loss (scalar)
+    expert_load: Array    # (E,) fraction of tokens routed to each expert
+    coactivation: Array   # (E, E) co-routing counts (edge weights for the
+                          # partition game's expert graph)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    return {
+        "router": normal_init(ks[0], (d, e), scale_in, cfg.pdtype()),
+        "gate": normal_init(ks[1], (e, d, f), scale_in, cfg.pdtype()),
+        "up": normal_init(ks[2], (e, d, f), scale_in, cfg.pdtype()),
+        "down": normal_init(ks[3], (e, f, d), f ** -0.5, cfg.pdtype()),
+    }
+
+
+def _route(params: dict, cfg: ModelConfig, x_flat: Array):
+    """Top-k routing.  x_flat: (T, d) -> weights/ids (T, k), stats."""
+    e, k = cfg.num_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)                  # (T, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    assign = jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32)
+    frac = jnp.mean(assign, axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+
+    # expert load + co-activation graph for the partition planner
+    full_assign = jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1)
+    load = jnp.mean(full_assign, axis=0)
+    coact = jnp.einsum("te,tf->ef", full_assign, full_assign) \
+        * (1.0 - jnp.eye(e))
+    return weights, ids, MoEStats(aux_loss=aux, expert_load=load,
+                                  coactivation=coact)
+
+
+def _experts(params: dict, buf: Array, dtype) -> Array:
+    """SwiGLU over capacity buffers.  buf: (G, E, C, d) -> (G, E, C, d)."""
+    gate = jnp.einsum("gecd,edf->gecf", buf, params["gate"].astype(dtype))
+    up = jnp.einsum("gecd,edf->gecf", buf, params["up"].astype(dtype))
+    return jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up,
+                      params["down"].astype(dtype))
+
+
+def moe_block(params: dict, cfg: ModelConfig, x: Array, *,
+              dropless: bool = False):
+    """x: (B, S, d) -> (B, S, d), MoEStats.
+
+    ``dropless=True`` sizes expert capacity to the worst case (all tokens to
+    one expert) — used by the decode path, where dropping tokens would
+    corrupt generation; cheap there because T = batch is small."""
+    B, S, d = x.shape
+    dtype = x.dtype
+    T = B * S
+    x_flat = x.reshape(T, d)
+    weights, ids, stats = _route(params, cfg, x_flat)
+    e, k = cfg.num_experts, cfg.top_k
+
+    if cfg.moe_impl == "dense":
+        # oracle: every expert on every token
+        gate = jnp.einsum("td,edf->tef", x_flat, params["gate"].astype(dtype))
+        up = jnp.einsum("td,edf->tef", x_flat, params["up"].astype(dtype))
+        y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(gate) * up,
+                           params["down"].astype(dtype))
+        combine = jnp.zeros((T, e), jnp.float32).at[
+            jnp.arange(T)[:, None], ids].add(weights)
+        y = jnp.einsum("te,ted->td", combine.astype(dtype), y_all)
+        return y.reshape(B, S, d), stats
+
+    # ---- scatter dispatch ------------------------------------------------
+    # pad the token stream to a multiple of the dispatch-group size (decode
+    # and ragged serving batches have arbitrary T); padded slots are masked
+    # out of the capacity cumsum so they never consume expert capacity.
+    sg = min(cfg.moe_group_size, T)
+    T_pad = -(-T // sg) * sg
+    if T_pad != T:
+        x_flat = jnp.pad(x_flat, ((0, T_pad - T), (0, 0)))
+        ids = jnp.pad(ids, ((0, T_pad - T), (0, 0)))
+        weights = jnp.pad(weights, ((0, T_pad - T), (0, 0)))
+    G = T_pad // sg
+    cap = sg if dropless else max(1, int(cfg.capacity_factor * sg * k / e))
+    xg = x_flat.reshape(G, sg, d)
+    idg = ids.reshape(G, sg, k)
+    wg = weights.reshape(G, sg, k)
+
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, sg * k))
+    tok_idx = jnp.broadcast_to(
+        (jnp.arange(sg * k) // k)[None, :], (G, sg * k))
+    real = (g_idx * sg + tok_idx) < T                           # not padding
+
+    # position of each (token, slot) within its expert's capacity buffer:
+    # cumulative count of earlier slots in the group routed to that expert.
+    slot_expert = idg.reshape(G, sg * k)                        # (G, S*k)
+    onehot = jax.nn.one_hot(slot_expert, e, dtype=jnp.int32) \
+        * real[..., None].astype(jnp.int32)                     # (G, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                   # exclusive
+    slot_pos = jnp.take_along_axis(
+        pos, slot_expert[..., None], axis=-1)[..., 0]           # (G, S*k)
+    keep = (slot_pos < cap) & real                              # overflow drop
+
+    safe_pos = jnp.where(keep, slot_pos, cap - 1)
+
+    if cfg.moe_impl == "einsum":
+        # GShard-style einsum dispatch — the layout GSPMD partitions
+        # natively (§Perf hillclimb #3): groups shard over the data axes,
+        # experts over 'model'.  dispatch/combine one-hot einsums become
+        # local block-einsums + one combine all-reduce; the scatter path
+        # below (CPU-efficient) forces GSPMD into replicated scatter-adds.
+        disp = (jax.nn.one_hot(idg, e, dtype=dtype)[..., :, None]
+                * jax.nn.one_hot(slot_pos.reshape(G, sg, k), cap,
+                                 dtype=dtype)[..., None, :]
+                * keep.reshape(G, sg, k, 1, 1).astype(dtype))   # (G,sg,k,e,c)
+        dispatch = jnp.sum(disp, axis=2)                         # (G,sg,e,c)
+        combine = jnp.sum(disp * wg[..., None, None].astype(dtype), axis=2)
+        xg = hint(xg, DP, None, None)
+        dispatch = hint(dispatch, DP, None, "model", None)
+        buf = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+        buf = hint(buf, DP, "model", None, None)
+        out_buf = _experts(params, buf, dtype)                   # (G,E,C,d)
+        out_buf = hint(out_buf, DP, "model", None, None)
+        y = jnp.einsum("gsec,gecd->gsd", combine, out_buf)
+        y = hint(y, DP, None, None)
+        return y.reshape(T_pad, d)[:T].reshape(B, S, d), stats
+
+    buf = jnp.zeros((G, e, cap, d), dtype)
+    src = xg[g_idx, tok_idx]                                    # (G, S*k, d)
+    buf = buf.at[g_idx, slot_expert, safe_pos].add(
+        jnp.where(keep[..., None], src, 0).astype(dtype))
+
+    out_buf = _experts(params, buf, dtype)                      # (G, E, C, d)
+
+    gathered = out_buf[g_idx, slot_expert, safe_pos]            # (G, S*k, d)
+    wslot = wg.reshape(G, sg * k)
+    contrib = gathered * (wslot * keep)[..., None].astype(dtype)
+    y = jnp.sum(contrib.reshape(G, sg, k, d), axis=2)           # (G, S_pad, d)
+    return y.reshape(T_pad, d)[:T].reshape(B, S, d), stats

@@ -1,0 +1,203 @@
+"""Mamba2 (state-space duality) block: chunked SSD for train/prefill and a
+constant-memory recurrent step for decode.
+
+Implements the SSD algorithm of [arXiv:2405.21060]: within-chunk attention-
+like diagonal blocks + inter-chunk state recurrence.  All decay exponents
+are non-positive (dt >= 0, A < 0), so every exp() here is bounded by 1 —
+numerically safe in bf16 activations with f32 accumulation.
+
+Tensor conventions:
+  x   (B, L, H, P)  — H ssm heads of head_dim P (d_inner = H*P)
+  dt  (B, L, H)     — softplus-positive step sizes
+  A   (H,)          — negative per-head decay rates
+  Bm/Cm (B, L, N)   — single-group input/output projections (n_groups = 1)
+State: (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import causal_conv1d, normal_init, rms_norm
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    state: Array   # (B, H, P, N) f32
+    conv: Array    # (B, W-1, conv_dim) — rolling conv window
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    proj_out = 2 * di + 2 * n + h     # z, x, B, C, dt
+    dtype = cfg.pdtype()
+    dt = jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_proj": normal_init(ks[0], (d, proj_out), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (conv_dim(cfg), cfg.ssm_conv),
+                              cfg.ssm_conv ** -0.5, dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (h,), jnp.float32, 1.0, 16.0)),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _split_proj(params: dict, cfg: ModelConfig, u: Array):
+    """in_proj + causal conv.  u: (B, L, d) -> (z, x, Bm, Cm, dt)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = jnp.einsum("bld,de->ble", u, params["in_proj"].astype(u.dtype))
+    z = proj[..., :di]
+    xbc_pre = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]
+    xbc = causal_conv1d(xbc_pre, params["conv_w"])
+    x = xbc[..., :di]
+    bm = xbc[..., di:di + n]
+    cm = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    # xbc_pre's last (W-1) rows are exactly the rolling conv window that
+    # ssm_decode_step keeps in SSMCache.conv — prefill hands decode a warm
+    # window through it.
+    return z, x, bm, cm, dt, xbc_pre
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, bm: Array, cm: Array,
+                chunk: int, init_state: Array | None = None):
+    """Chunked SSD scan.  Returns (y (B,L,H,P) f32, final_state (B,H,P,N)).
+
+    Arbitrary L is supported: the sequence is zero-padded to a chunk
+    multiple (dt = 0 on padding => decay 1, state increment 0, so the final
+    state and the real outputs are unaffected)."""
+    B, L, H, P = x.shape
+    N = bm.shape[-1]
+    Q = min(chunk, L)
+    L_pad = -(-L // Q) * Q
+    if L_pad != L:
+        pad = ((0, 0), (0, L_pad - L))
+        x = jnp.pad(x, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        bm = jnp.pad(bm, pad + ((0, 0),))
+        cm = jnp.pad(cm, pad + ((0, 0),))
+        L_real, L = L, L_pad
+    else:
+        L_real = L
+    nc = L // Q
+
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H)
+    bmc = bm.astype(jnp.float32).reshape(B, nc, Q, N)
+    cmc = cm.astype(jnp.float32).reshape(B, nc, Q, N)
+
+    da = dtc * a[None, None, None, :]                      # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                           # inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    cb = jnp.einsum("bcin,bcjn->bcij", cmc, bmc)           # (B,nc,Q,Q)
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # per-chunk end states:  sum_j exp(cum_Q - cum_j) * dt_j * B_j ⊗ x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)
+    wts = decay_end * dtc                                  # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", wts, bmc, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(state, inp):
+        cs, cd = inp                                       # (B,H,P,N), (B,H)
+        new = state * cd[:, :, None, None] + cs
+        return new, state                                  # emit state *before*
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cmc, prev_states,
+                       jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y[:, :L_real], final
+
+
+def ssm_block(params: dict, cfg: ModelConfig, u: Array,
+              init_state: Array | None = None, *,
+              return_conv_tail: bool = False):
+    """Full Mamba2 block (train/prefill).  u: (B, L, d) -> (B, L, d).
+
+    With ``return_conv_tail``, also returns the (B, W-1, conv_dim) rolling
+    conv window so decode continues exactly where prefill stopped."""
+    B, L, _ = u.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, x, bm, cm, dt, xbc_pre = _split_proj(params, cfg, u)
+    a = -jnp.exp(params["A_log"])
+    y, final = ssd_chunked(x.reshape(B, L, h, p), dt, a, bm, cm,
+                           cfg.ssm_chunk, init_state)
+    y = y + params["D"][None, None, :, None] \
+        * x.reshape(B, L, h, p).astype(jnp.float32)
+    y = y.reshape(B, L, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.rms_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(u.dtype))
+    if return_conv_tail:
+        w = cfg.ssm_conv
+        tail = jnp.pad(xbc_pre, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):]
+        return out, final, tail
+    return out, final
+
+
+def ssm_decode_step(params: dict, cfg: ModelConfig, u: Array,
+                    cache: SSMCache):
+    """One-token recurrent step.  u: (B, 1, d) -> (B, 1, d), new cache."""
+    B = u.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bld,de->ble", u, params["in_proj"].astype(u.dtype))
+    z = proj[..., :di]
+    xbc_new = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]
+
+    # rolling causal conv window
+    window = jnp.concatenate([cache.conv, xbc_new], axis=1)   # (B, W, conv)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)   # (B,1,conv)
+    new_conv = window[:, 1:, :]
+
+    x = xbc[..., :di].reshape(B, h, p).astype(jnp.float32)
+    bm = xbc[..., di:di + n].reshape(B, n).astype(jnp.float32)
+    cm = xbc[..., di + n:].reshape(B, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])        # (B, h)
+    a = -jnp.exp(params["A_log"])
+
+    decay = jnp.exp(dt * a[None, :])                          # (B, h)
+    state = cache.state * decay[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, bm, x)
+    y = jnp.einsum("bn,bhpn->bhp", cm, state)
+    y = y + params["D"][None, :, None] * x
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.rms_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(u.dtype))
+    return out, SSMCache(state=state, conv=new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dtype),
+    )

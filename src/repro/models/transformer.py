@@ -1,0 +1,408 @@
+"""Decoder-LM assembly for all four families.
+
+Layers are *stacked* (leading L dim) and executed with ``jax.lax.scan`` so a
+94-layer model compiles as one block body — essential for dry-run compile
+times across 40 (arch x shape) cells.  The hybrid family scans Mamba2 layers
+and applies a single *shared* attention+MLP block every ``attn_period``
+layers (Zamba2-style weight sharing) via ``lax.cond`` inside the scan.
+
+Public entry points:
+  * init_params(cfg, key)
+  * forward_train(params, cfg, batch)      -> loss, metrics
+  * forward_logits(params, cfg, tokens)    -> logits  (prefill path)
+  * decode_step(params, cfg, token, cache) -> logits, cache
+  * init_cache(cfg, batch, max_len)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.hints import DP, hint
+from . import attention, moe, ssm
+from .config import DENSE, HYBRID, MOE, SSM, ModelConfig
+from .layers import init_mlp, normal_init, rms_norm, swiglu
+
+Array = jax.Array
+
+
+class DecodeCache(NamedTuple):
+    kv_k: Optional[Array]    # (L_attn, B, S_max, Hkv, D) or None
+    kv_v: Optional[Array]    # (L_attn, B, S_max, Hkv, D) or None
+    ssm_state: Optional[Array]  # (L, B, H, P, N) f32 or None
+    ssm_conv: Optional[Array]   # (L, B, W-1, conv_dim) or None
+    position: Array          # () int32 — tokens already in the cache
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = cfg.pdtype()
+    if cfg.family in (DENSE, MOE):
+        block = {
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": attention.init_attention(k1, cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if cfg.family == MOE:
+            block["moe"] = moe.init_moe(k2, cfg)
+        else:
+            block["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return block
+    # ssm / hybrid per-layer block
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm.init_ssm(k3, cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    dtype = cfg.pdtype()
+    blocks = [_init_block(keys[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params: dict[str, Any] = {
+        "embed": normal_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                             0.02, dtype),
+        "blocks": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(
+            keys[-2], (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5,
+            dtype)
+    if cfg.family == HYBRID and cfg.attn_period > 0:
+        params["shared"] = {
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": attention.init_attention(keys[-3], cfg),
+            "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp(keys[-4], cfg.d_model, cfg.d_ff, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(block, cfg: ModelConfig, x: Array):
+    h = attention.causal_attention(
+        block["attn"], cfg, rms_norm(x, block["attn_norm"], cfg.rms_eps))
+    x = x + cfg.residual_multiplier * h
+    if cfg.family == MOE:
+        h, stats = moe.moe_block(
+            block["moe"], cfg, rms_norm(x, block["ffn_norm"], cfg.rms_eps))
+        aux = stats.aux_loss
+        load = stats.expert_load
+        coact = stats.coactivation
+    else:
+        m = block["mlp"]
+        h = swiglu(rms_norm(x, block["ffn_norm"], cfg.rms_eps),
+                   m["gate"], m["up"], m["down"])
+        aux = jnp.zeros((), jnp.float32)
+        load = jnp.zeros((max(cfg.num_experts, 1),), jnp.float32)
+        coact = jnp.zeros((max(cfg.num_experts, 1),) * 2, jnp.float32)
+    x = x + cfg.residual_multiplier * h
+    return x, (aux, load, coact)
+
+
+def _ssm_block_fwd(block, cfg: ModelConfig, x: Array):
+    h, _ = ssm.ssm_block(block["ssm"], cfg,
+                         rms_norm(x, block["norm"], cfg.rms_eps))
+    return x + cfg.residual_multiplier * h
+
+
+def _shared_block_fwd(shared, cfg: ModelConfig, x: Array):
+    h = attention.causal_attention(
+        shared["attn"], cfg, rms_norm(x, shared["attn_norm"], cfg.rms_eps))
+    x = x + cfg.residual_multiplier * h
+    m = shared["mlp"]
+    h = swiglu(rms_norm(x, shared["ffn_norm"], cfg.rms_eps),
+               m["gate"], m["up"], m["down"])
+    return x + cfg.residual_multiplier * h
+
+
+def backbone(params: dict, cfg: ModelConfig, x: Array):
+    """Scan the stacked blocks.  x: (B, S, d) -> (B, S, d), moe aux stats."""
+    shared = params.get("shared")
+
+    def body(carry, inp):
+        # residual stream stays sequence-sharded over 'model' between
+        # layers: 16x less saved-activation HBM under remat and no
+        # gather/scatter at layer boundaries (§Perf hillclimb #1)
+        x = hint(carry, DP, "model", None)
+        layer_idx, block = inp
+        if cfg.family in (DENSE, MOE):
+            x, aux = _dense_block_fwd(block, cfg, x)
+        else:
+            x = _ssm_block_fwd(block, cfg, x)
+            if cfg.family == HYBRID and cfg.attn_period > 0:
+                x = jax.lax.cond(
+                    (layer_idx + 1) % cfg.attn_period == 0,
+                    lambda v: _shared_block_fwd(shared, cfg, v),
+                    lambda v: v, x)
+            aux = (jnp.zeros((), jnp.float32),
+                   jnp.zeros((max(cfg.num_experts, 1),), jnp.float32),
+                   jnp.zeros((max(cfg.num_experts, 1),) * 2, jnp.float32))
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    x, aux = jax.lax.scan(body, x, (layer_ids, params["blocks"]))
+    aux_loss = jnp.sum(aux[0])
+    expert_load = jnp.mean(aux[1], axis=0)
+    coactivation = jnp.sum(aux[2], axis=0)
+    return x, (aux_loss, expert_load, coactivation)
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, inputs: Array) -> Array:
+    if cfg.input_kind == "embeddings":
+        # modality-frontend stub: inputs ARE (B, S, d) frame/patch embeddings
+        return inputs.astype(cfg.cdtype()) * cfg.emb_multiplier
+    x = jnp.take(params["embed"], inputs, axis=0).astype(cfg.cdtype())
+    return x * cfg.emb_multiplier
+
+
+def unembed(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return logits.astype(jnp.float32) / cfg.logit_divisor
+
+
+def forward_logits(params: dict, cfg: ModelConfig, inputs: Array):
+    x = embed_inputs(params, cfg, inputs)
+    x, aux = backbone(params, cfg, x)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return unembed(params, cfg, x), aux
+
+
+def forward_train(params: dict, cfg: ModelConfig, batch: dict):
+    """batch: {"inputs": ids or embeddings, "targets": (B,S) int32}.
+    Returns (loss, metrics dict)."""
+    logits, (aux_loss, expert_load, coact) = forward_logits(
+        params, cfg, batch["inputs"])
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + cfg.router_aux_coef * aux_loss
+    return loss, {"ce": ce, "aux_loss": aux_loss,
+                  "expert_load": expert_load, "coactivation": coact}
+
+
+def prefill(params: dict, cfg: ModelConfig, inputs: Array, max_len: int):
+    """Prefill forward: consumes the prompt, returns (last-token logits,
+    DecodeCache ready for decode_step).  Realistic serving never
+    materializes full-sequence logits (B x S x V would dwarf the model).
+    """
+    x = embed_inputs(params, cfg, inputs)
+    B, S = x.shape[0], x.shape[1]
+    pad = max_len - S
+
+    if cfg.family in (DENSE, MOE):
+        def body(x, block):
+            xn = rms_norm(x, block["attn_norm"], cfg.rms_eps)
+            positions = jnp.arange(S)[None, :]
+            q, k, v = attention._project_qkv(block["attn"], cfg, xn,
+                                             positions)
+            h_attn = attention._causal_core(q, k, v, cfg)
+            h_attn = jnp.einsum("bse,ed->bsd",
+                                h_attn.reshape(B, S, -1),
+                                block["attn"]["wo"].astype(x.dtype))
+            x = x + cfg.residual_multiplier * h_attn
+            if cfg.family == MOE:
+                h, _ = moe.moe_block(
+                    block["moe"], cfg,
+                    rms_norm(x, block["ffn_norm"], cfg.rms_eps))
+            else:
+                m = block["mlp"]
+                h = swiglu(rms_norm(x, block["ffn_norm"], cfg.rms_eps),
+                           m["gate"], m["up"], m["down"])
+            x = x + cfg.residual_multiplier * h
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kc.astype(cfg.cdtype()), vc.astype(cfg.cdtype()))
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (kv_k, kv_v) = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(kv_k=kv_k, kv_v=kv_v, ssm_state=None,
+                            ssm_conv=None,
+                            position=jnp.asarray(S, jnp.int32))
+    else:
+        shared = params.get("shared")
+        attn_ids = _attention_layer_index(cfg)
+        n_attn = max(cfg.attention_layers, 1)
+        kv_shape = (n_attn, B, max_len, cfg.num_kv_heads, cfg.head_dim)
+        kv_k0 = jnp.zeros(kv_shape, cfg.cdtype()) \
+            if cfg.attention_layers else None
+        kv_v0 = jnp.zeros(kv_shape, cfg.cdtype()) \
+            if cfg.attention_layers else None
+
+        def body(carry, inp):
+            x, kv_k, kv_v = carry
+            layer_idx, block = inp
+            h, final_state, conv_tail = ssm.ssm_block(
+                block["ssm"], cfg, rms_norm(x, block["norm"], cfg.rms_eps),
+                return_conv_tail=True)
+            x = x + cfg.residual_multiplier * h
+            if cfg.family == HYBRID and cfg.attn_period > 0:
+                a_idx = attn_ids[layer_idx]
+
+                def apply_shared(operand):
+                    x, kv_k, kv_v = operand
+                    xn = rms_norm(x, shared["attn_norm"], cfg.rms_eps)
+                    positions = jnp.arange(S)[None, :]
+                    q, k, v = attention._project_qkv(shared["attn"], cfg,
+                                                     xn, positions)
+                    h = attention._causal_core(q, k, v, cfg)
+                    h = jnp.einsum("bse,ed->bsd", h.reshape(B, S, -1),
+                                   shared["attn"]["wo"].astype(x.dtype))
+                    x2 = x + cfg.residual_multiplier * h
+                    m = shared["mlp"]
+                    h = swiglu(rms_norm(x2, shared["ffn_norm"], cfg.rms_eps),
+                               m["gate"], m["up"], m["down"])
+                    x2 = x2 + cfg.residual_multiplier * h
+                    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    return (x2, kv_k.at[a_idx].set(kc.astype(cfg.cdtype())),
+                            kv_v.at[a_idx].set(vc.astype(cfg.cdtype())))
+
+                x, kv_k, kv_v = jax.lax.cond(
+                    (layer_idx + 1) % cfg.attn_period == 0,
+                    apply_shared, lambda o: o, (x, kv_k, kv_v))
+            return (x, kv_k, kv_v), (final_state,
+                                     conv_tail.astype(cfg.cdtype()))
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        (x, kv_k, kv_v), (states, conv_tails) = jax.lax.scan(
+            body, (x, kv_k0, kv_v0), (layer_ids, params["blocks"]))
+        cache = DecodeCache(kv_k=kv_k, kv_v=kv_v, ssm_state=states,
+                            ssm_conv=conv_tails,
+                            position=jnp.asarray(S, jnp.int32))
+
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    return unembed(params, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> DecodeCache:
+    kv_k = kv_v = ssm_state = ssm_conv = None
+    if cfg.attention_layers > 0:
+        shape = (cfg.attention_layers, batch, max_len, cfg.num_kv_heads,
+                 cfg.head_dim)
+        kv_k = jnp.zeros(shape, dtype)
+        kv_v = jnp.zeros(shape, dtype)
+    if cfg.family in (SSM, HYBRID):
+        ssm_state = jnp.zeros((cfg.num_layers, batch, cfg.ssm_heads,
+                               cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        ssm_conv = jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                              ssm.conv_dim(cfg)), dtype)
+    return DecodeCache(kv_k=kv_k, kv_v=kv_v, ssm_state=ssm_state,
+                       ssm_conv=ssm_conv, position=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, inputs: Array,
+                cache: DecodeCache):
+    """One decode step.  inputs: (B, 1) ids or (B, 1, d) embeddings."""
+    x = embed_inputs(params, cfg, inputs)
+    pos = cache.position
+
+    if cfg.family in (DENSE, MOE):
+        def body(x, inp):
+            block, k_l, v_l = inp
+            kv_l = attention.KVCache(k=k_l, v=v_l, length=pos)
+            h, kv_l = attention.decode_attention_step(
+                block["attn"], cfg,
+                rms_norm(x, block["attn_norm"], cfg.rms_eps), kv_l)
+            x = x + cfg.residual_multiplier * h
+            if cfg.family == MOE:
+                # decode is DROPLESS: dropping tokens corrupts generation
+                h, _ = moe.moe_block(
+                    block["moe"], cfg,
+                    rms_norm(x, block["ffn_norm"], cfg.rms_eps),
+                    dropless=True)
+            else:
+                m = block["mlp"]
+                h = swiglu(rms_norm(x, block["ffn_norm"], cfg.rms_eps),
+                           m["gate"], m["up"], m["down"])
+            x = x + cfg.residual_multiplier * h
+            return x, (kv_l.k, kv_l.v)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["blocks"], cache.kv_k, cache.kv_v))
+        new_cache = cache._replace(kv_k=new_k, kv_v=new_v, position=pos + 1)
+    else:
+        shared = params.get("shared")
+        attn_ids = _attention_layer_index(cfg)
+
+        def body(carry, inp):
+            x, kv_k, kv_v = carry
+            layer_idx, block, state_l, conv_l = inp
+            ssm_l = ssm.SSMCache(state=state_l, conv=conv_l)
+            h, ssm_l = ssm.ssm_decode_step(
+                block["ssm"], cfg, rms_norm(x, block["norm"], cfg.rms_eps),
+                ssm_l)
+            x = x + cfg.residual_multiplier * h
+            if cfg.family == HYBRID and cfg.attn_period > 0:
+                a_idx = attn_ids[layer_idx]
+
+                def apply_shared(operand):
+                    x, kv_k, kv_v = operand
+                    kv_l = attention.KVCache(k=kv_k[a_idx], v=kv_v[a_idx],
+                                             length=pos)
+                    h, kv_l = attention.decode_attention_step(
+                        shared["attn"], cfg,
+                        rms_norm(x, shared["attn_norm"], cfg.rms_eps), kv_l)
+                    x2 = x + cfg.residual_multiplier * h
+                    m = shared["mlp"]
+                    h = swiglu(rms_norm(x2, shared["ffn_norm"], cfg.rms_eps),
+                               m["gate"], m["up"], m["down"])
+                    x2 = x2 + cfg.residual_multiplier * h
+                    return (x2, kv_k.at[a_idx].set(kv_l.k),
+                            kv_v.at[a_idx].set(kv_l.v))
+
+                x, kv_k, kv_v = jax.lax.cond(
+                    (layer_idx + 1) % cfg.attn_period == 0,
+                    apply_shared, lambda o: o, (x, kv_k, kv_v))
+            return (x, kv_k, kv_v), (ssm_l.state, ssm_l.conv)
+
+        layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        (x, kv_k, kv_v), (new_state, new_conv) = jax.lax.scan(
+            body, (x, cache.kv_k, cache.kv_v),
+            (layer_ids, params["blocks"], cache.ssm_state, cache.ssm_conv))
+        new_cache = cache._replace(kv_k=kv_k, kv_v=kv_v,
+                                   ssm_state=new_state, ssm_conv=new_conv,
+                                   position=pos + 1)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return unembed(params, cfg, x), new_cache
+
+
+def _attention_layer_index(cfg: ModelConfig) -> Array:
+    """Map layer index -> index into the stacked shared-attn KV cache."""
+    ids = jnp.full((cfg.num_layers,), 0, jnp.int32)
+    count = 0
+    vals = []
+    for l in range(cfg.num_layers):
+        if cfg.attn_period > 0 and (l + 1) % cfg.attn_period == 0:
+            vals.append(count)
+            count += 1
+        else:
+            vals.append(0)
+    return jnp.asarray(vals, jnp.int32)

@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine (vLLM-style slots, JAX-native).
+
+The engine owns a fixed pool of ``max_batch`` cache slots over a single
+batched :class:`~repro.models.transformer.DecodeCache` with *per-slot*
+positions, so sequences of different lengths decode together in one jitted
+``decode_step`` call (the decode paths broadcast a (B,) position vector).
+
+Scheduling is host-side Python (admission, eviction, queueing — the part a
+real cluster does on CPU anyway); all tensor work is two jitted programs:
+
+  * ``_prefill_one``  — B=1 prompt prefill producing a slot-shaped cache,
+  * ``_decode_all``   — one token for every active slot.
+
+Inactive slots decode garbage that is masked out on the host — the standard
+price of static shapes, and exactly what the ``decode_*`` dry-run shapes
+model.  On a pod the same engine runs with the param/cache shardings from
+``repro.sharding.rules``; here it runs on CPU with reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache
+from ..models.config import ModelConfig
+from ..models.transformer import DecodeCache, decode_step, prefill
+from .sampler import greedy
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8           # cache slots
+    max_len: int = 512           # per-slot KV/SSM capacity
+    eos_id: int = -1             # -1 = never stop on a token
+    cache_dtype: str = "bfloat16"
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32 token ids
+    max_new_tokens: int
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _write_slot(batched: DecodeCache, single: DecodeCache, slot: int,
+                position) -> DecodeCache:
+    """Copy a B=1 cache into slot ``slot`` of the batched cache."""
+    def put(dst, src):
+        if dst is None:
+            return None
+        return dst.at[:, slot].set(src[:, 0])
+
+    return DecodeCache(
+        kv_k=put(batched.kv_k, single.kv_k),
+        kv_v=put(batched.kv_v, single.kv_v),
+        ssm_state=put(batched.ssm_state, single.ssm_state),
+        ssm_conv=put(batched.ssm_conv, single.ssm_conv),
+        position=batched.position.at[slot].set(position),
+    )
+
+
+class ServingEngine:
+    """Continuous batching over a fixed slot pool.
+
+    >>> eng = ServingEngine(cfg, params, ServeConfig(max_batch=4, max_len=256))
+    >>> eng.submit(Request(0, prompt, max_new_tokens=32))
+    >>> stats = eng.run()          # drains the queue
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict, serve: ServeConfig,
+                 sampler=greedy):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.sampler = sampler
+        B, S = serve.max_batch, serve.max_len
+
+        cache = init_cache(cfg, B, S, jnp.dtype(serve.cache_dtype))
+        # per-slot positions (the decode paths broadcast (B,) positions)
+        self.cache = cache._replace(position=jnp.zeros((B,), jnp.int32))
+        self.slots: list[Optional[Request]] = [None] * B
+        self.budget = np.zeros(B, np.int64)      # remaining new tokens
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.steps = 0
+        self.prefills = 0
+
+        def _prefill_one(params, tokens):
+            logits, cache = prefill(params, cfg, tokens, max_len=S)
+            return logits, cache
+
+        def _decode_all(params, tokens, cache):
+            return decode_step(params, cfg, tokens, cache)
+
+        self._prefill = jax.jit(_prefill_one)
+        self._decode = jax.jit(_decode_all, donate_argnums=(2,))
+
+    # ----- scheduling --------------------------------------------------
+    def submit(self, request: Request) -> None:
+        assert request.prompt.ndim == 1 and request.prompt.size >= 1
+        assert request.prompt.size + request.max_new_tokens <= self.serve.max_len, \
+            "request exceeds slot capacity"
+        self.queue.append(request)
+
+    def _admit(self) -> None:
+        for slot in range(self.serve.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, single = self._prefill(self.params, tokens)
+            first = int(self.sampler(logits)[0])
+            req.output.append(first)
+            self.cache = _write_slot(self.cache, single, slot,
+                                     req.prompt.size)
+            self.slots[slot] = req
+            self.budget[slot] = req.max_new_tokens - 1
+            self.prefills += 1
+            if (first == self.serve.eos_id) or self.budget[slot] <= 0:
+                self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        req.done = True
+        self.finished.append(req)
+        self.slots[slot] = None
+        self.budget[slot] = 0
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # ----- decode loop ---------------------------------------------------
+    def step(self) -> None:
+        """Admit waiting requests, then decode one token for every slot."""
+        self._admit()
+        if self.num_active == 0:
+            return
+        last = np.zeros((self.serve.max_batch, 1), np.int32)
+        for slot, req in enumerate(self.slots):
+            if req is not None:
+                last[slot, 0] = req.output[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(last), self.cache)
+        token = np.asarray(self.sampler(logits))
+        self.steps += 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(token[slot])
+            req.output.append(t)
+            self.budget[slot] -= 1
+            if t == self.serve.eos_id or self.budget[slot] <= 0:
+                self._finish(slot)
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Drain the queue; returns throughput stats."""
+        import time
+        t0 = time.time()
+        while (self.queue or self.num_active) and self.steps < max_steps:
+            self.step()
+        wall = time.time() - t0
+        toks = sum(len(r.output) for r in self.finished)
+        return {"requests": len(self.finished), "decode_steps": self.steps,
+                "prefills": self.prefills, "generated_tokens": toks,
+                "wall_s": wall,
+                "tok_per_s": toks / max(wall, 1e-9)}

@@ -1,0 +1,29 @@
+"""Token samplers for the serving engine (pure functions of logits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def greedy(logits: Array) -> Array:
+    """logits: (B, 1, V) or (B, V) -> (B,) int32."""
+    if logits.ndim == 3:
+        logits = logits[:, -1, :]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_logits(key: Array, logits: Array, *, temperature: float = 1.0,
+                  top_k: int = 0) -> Array:
+    """Temperature + optional top-k sampling.  logits: (B, 1, V) or (B, V)."""
+    if logits.ndim == 3:
+        logits = logits[:, -1, :]
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,7 @@
+from .rules import (  # noqa: F401
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)
+from .planner import PartitionPlanner, expert_placement, stage_assignment  # noqa: F401

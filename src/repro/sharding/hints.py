@@ -1,0 +1,91 @@
+"""In-model sharding hints (activation partitioning).
+
+``hint(x, ...)`` applies ``with_sharding_constraint`` with axis-presence and
+divisibility guards, and silently no-ops when no mesh is active — so model
+code stays runnable in plain CPU tests while the SPMD paths get explicit
+activation layouts.
+
+Why this exists (EXPERIMENTS.md §Perf, hillclimb #1): without constraints
+GSPMD must GUESS how to shard the (heads, head_dim) split of fused QKV
+projections.  When the head count does not divide the model axis (yi-34b:
+56 heads on a 16-wide axis) it shards head_dim — the attention CONTRACTION
+dim — which turns every S x S logits tensor into a partial sum that is
+all-reduced: 3 x 120 GB per layer per chip on yi-34b train_4k.  The fix is
+sequence-parallel attention: shard q's sequence over 'model' (always
+divisible: 4096 % 16 == 0), keep k/v unsharded on the feature dims, and
+keep the residual stream sequence-sharded between layers (which also cuts
+saved-activation memory 16x).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DP = "dp"   # sentinel: all data-parallel axes present in the mesh
+
+
+def mesh_axis_sizes() -> dict | None:
+    """{axis: size} of the active mesh (set_mesh or `with mesh:`), or None."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            return dict(am.shape)
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as _mesh_mod
+        pm = _mesh_mod.thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return dict(pm.shape)
+    except Exception:
+        pass
+    return None
+
+
+def dp_axes(shape: dict) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in shape and shape[a] > 1)
+
+
+def hint(x, *dims):
+    """Constrain ``x`` to P(*dims) where valid; no-op without a mesh.
+
+    Each entry of ``dims`` is None, an axis name, a tuple of axis names, or
+    the sentinel ``DP`` (all data axes).  Axes missing from the mesh or not
+    dividing the dimension fall back to None (replicated on that dim).
+    Trailing unspecified dims replicate.
+
+    Set REPRO_NO_HINTS=1 to disable all hints — used to reproduce the
+    paper-faithful/unannotated BASELINE measurements in EXPERIMENTS.md.
+    """
+    import os
+    if os.environ.get("REPRO_NO_HINTS", "0") == "1":
+        return x
+    shape = mesh_axis_sizes()
+    if not shape:
+        return x
+    spec = []
+    for i, d in enumerate(x.shape):
+        ax = dims[i] if i < len(dims) else None
+        if ax == DP:
+            ax = dp_axes(shape) or None
+            if ax is not None and len(ax) == 1:
+                ax = ax[0]
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        ok = True
+        for a in axes:
+            if a not in shape:
+                ok = False
+                break
+            size *= shape[a]
+        if ok and size > 1 and d % size == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:   # no mesh context at lowering — stay functional
+        return x

@@ -1,0 +1,150 @@
+"""PartitionPlanner: the paper's game as a first-class framework feature.
+
+Two production uses (DESIGN.md §4):
+
+  * **Expert placement (EP)** — experts are the LPs: node weight = EMA of
+    tokens routed to the expert (dynamic load, from TrainState router
+    stats), edge weight = co-activation counts (tokens routed to both
+    experts; splitting a strongly co-activated pair across device groups
+    costs all-to-all traffic).  Machines = model-axis device groups.  The
+    refined Nash assignment is repaired to exactly E/K experts per group
+    (weight arrays shard evenly) and emitted as a permutation applied to
+    the expert-stacked weight tensors.
+
+  * **Pipeline-stage assignment (PP)** — layers are LPs on a chain: node
+    weight = per-layer FLOPs, edge weight = activation bytes.  The refined
+    assignment is projected to contiguous stages and compared against the
+    O(L^2 K) interval-DP oracle (tests assert the game lands within a few
+    percent of optimal).
+
+Both run the *same* refine() the DES simulator uses — one algorithm, three
+deployments (the point of the reproduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import costs as game_costs
+from ..core.constrained import (contiguous_stage_dp, equalize_cardinality,
+                                make_contiguous)
+from ..core.problem import PartitionProblem, make_problem
+from ..core.refine import refine
+
+Array = jax.Array
+
+
+def expert_placement(expert_load: Array, coactivation: Array,
+                     num_groups: int, *, mu: float = 1.0,
+                     current: Array | None = None,
+                     framework: str = game_costs.C_FRAMEWORK):
+    """Returns (permutation (E,), assignment (E,), stats dict).
+
+    ``permutation[i]`` = expert to place at slot i; slots are contiguous
+    per group, matching a ('model',)-sharded leading expert dim.
+    """
+    e = int(expert_load.shape[0])
+    assert e % num_groups == 0, (e, num_groups)
+    load = jnp.asarray(expert_load, jnp.float32) + 1e-6
+    coact = jnp.asarray(coactivation, jnp.float32)
+    # normalize edge weights to the load scale so mu means the same thing
+    # across training stages
+    denom = jnp.maximum(jnp.max(coact), 1e-6)
+    coact = coact * (jnp.max(load) / denom)
+    problem = make_problem(coact, load,
+                           jnp.full((num_groups,), 1.0, jnp.float32), mu=mu)
+    if current is None:
+        current = jnp.arange(e, dtype=jnp.int32) % num_groups
+    res = refine(problem, current, framework, max_turns=4 * e)
+    balanced = equalize_cardinality(problem, res.assignment, framework)
+    perm = jnp.argsort(balanced, stable=True).astype(jnp.int32)
+
+    group_load = jnp.zeros((num_groups,), jnp.float32).at[balanced].add(load)
+    stats = {
+        "imbalance_before": float(jnp.max(
+            jnp.zeros((num_groups,), jnp.float32).at[current].add(load))
+            / (jnp.sum(load) / num_groups)),
+        "imbalance_after": float(jnp.max(group_load)
+                                 / (jnp.sum(load) / num_groups)),
+        "moves": int(res.num_moves),
+    }
+    return perm, balanced, stats
+
+
+def apply_expert_permutation(params: dict, perm: Array) -> dict:
+    """Permute the expert-stacked MoE weights (leading dim E after the
+    stacked-layer dim) and the router columns to match."""
+    def fix(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "moe/gate" in name or "moe/up" in name or "moe/down" in name:
+            return leaf[:, perm] if leaf.ndim == 4 else leaf[perm]
+        if "moe/router" in name:
+            return leaf[..., perm]
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def stage_assignment(layer_cost, boundary_bytes, num_stages: int, *,
+                     mu: float = 1.0,
+                     framework: str = game_costs.C_FRAMEWORK):
+    """Game-refined contiguous pipeline stages.
+
+    layer_cost: (L,) per-layer FLOPs (or time) estimates.
+    boundary_bytes: scalar or (L-1,) activation bytes across each boundary.
+    Returns (assignment (L,), game_max_load, dp_max_load).
+    """
+    layer_cost = jnp.asarray(layer_cost, jnp.float32)
+    L = layer_cost.shape[0]
+    bb = jnp.broadcast_to(jnp.asarray(boundary_bytes, jnp.float32), (L - 1,))
+    adj = jnp.zeros((L, L), jnp.float32)
+    idx = jnp.arange(L - 1)
+    adj = adj.at[idx, idx + 1].set(bb).at[idx + 1, idx].set(bb)
+    # scale cut weights relative to compute so mu stays interpretable
+    adj = adj * (jnp.mean(layer_cost) / jnp.maximum(jnp.mean(bb), 1e-9))
+    problem = make_problem(adj, layer_cost,
+                           jnp.full((num_stages,), 1.0, jnp.float32), mu=mu)
+    init = (jnp.arange(L, dtype=jnp.int32) * num_stages) // L
+    res = refine(problem, init, framework, max_turns=8 * L)
+    game = make_contiguous(res.assignment, num_stages)
+    loads = jnp.zeros((num_stages,), jnp.float32).at[game].add(layer_cost)
+    dp_assign, dp_max = contiguous_stage_dp(np.asarray(layer_cost),
+                                            num_stages)
+    return game, float(jnp.max(loads)), dp_max
+
+
+@dataclasses.dataclass
+class PartitionPlanner:
+    """Stateful wrapper the train driver calls every ``interval`` steps."""
+    num_groups: int
+    interval: int = 100
+    mu: float = 1.0
+    _last_perm: Array | None = None
+
+    def maybe_replan(self, step: int, state):
+        """Returns (state, stats|None): permutes expert weights in-place
+        when router stats show imbalance."""
+        if self.num_groups <= 1 or step == 0 or step % self.interval:
+            return state, None
+        if jnp.sum(state.expert_load) <= 0:
+            return state, None
+        perm, assignment, stats = expert_placement(
+            state.expert_load, state.coactivation, self.num_groups,
+            mu=self.mu)
+        if bool(jnp.all(perm == jnp.arange(perm.shape[0]))):
+            return state, stats
+        new_params = apply_expert_permutation(state.params, perm)
+        new_mu = apply_expert_permutation(state.opt.mu, perm)
+        new_nu = apply_expert_permutation(state.opt.nu, perm)
+        state = state._replace(
+            params=new_params,
+            opt=state.opt._replace(mu=new_mu, nu=new_nu),
+            expert_load=state.expert_load[perm],
+            coactivation=state.coactivation[perm][:, perm],
+        )
+        self._last_perm = perm
+        return state, stats

@@ -1,0 +1,227 @@
+"""Sharding rules: param-tree paths -> PartitionSpec.
+
+Strategy (2-D "TP x FSDP" over the ('data', 'model') mesh axes, with the
+'pod' axis joining 'data' for batch parallelism on the multi-pod mesh):
+
+  * matmul weights carry tensor parallelism on their TP-natural dim
+    ('model') and ZeRO/FSDP on the other dim ('data'), so parameters AND
+    Adam moments shard over every chip — the memory story that lets
+    qwen3-235b fit 256 x 16 GB.
+  * MoE expert stacks shard experts over 'model' (expert parallelism, the
+    partition planner permutes along this axis) and d_model over 'data'.
+  * small tensors (norms, biases, scalars) replicate.
+  * the stacked-layer leading axis is never sharded.
+
+A dim is only sharded when divisible by the axis size; otherwise the rule
+falls back to replication on that dim (checked at spec-build time, so every
+(arch x mesh) combination yields a valid sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape, spec_dims):
+    """Replace axis entries that do not divide the dim with None."""
+    fixed = []
+    for size, axis in zip(shape, spec_dims):
+        fixed.append(axis if size % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+# rules: (path regex, spec dims for the *trailing* dims of the leaf).
+# The leading stacked-layer dim (present for everything under blocks/) is
+# handled automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",              ("model", "data")),
+    (r"lm_head$",            ("data", "model")),
+    (r"attn/wq$",            ("data", "model")),
+    (r"attn/wk$",            ("data", "model")),
+    (r"attn/wv$",            ("data", "model")),
+    (r"attn/wo$",            ("model", "data")),
+    (r"attn/b[qkv]$",        ("model",)),
+    (r"mlp/gate$",           ("data", "model")),
+    (r"mlp/up$",             ("data", "model")),
+    (r"mlp/down$",           ("model", "data")),
+    (r"moe/router$",         ("data", None)),
+    (r"moe/gate$",           ("model", "data", None)),   # (E, d, f)
+    (r"moe/up$",             ("model", "data", None)),
+    (r"moe/down$",           ("model", None, "data")),   # (E, f, d)
+    (r"ssm/in_proj$",        ("data", "model")),
+    (r"ssm/out_proj$",       ("model", "data")),
+    (r"ssm/conv_w$",         (None, None)),
+    (r"ssm/.*$",             (None,)),                   # A_log, dt_bias, D...
+    (r".*norm.*$",           (None,)),
+]
+
+
+def _spec_for_path(path: str, leaf, mesh: Mesh, stacked: bool) -> P:
+    trailing_ndim = leaf.ndim - (1 if stacked else 0)
+    for pattern, dims in _PARAM_RULES:
+        if re.search(pattern, path):
+            dims = tuple(dims[:trailing_ndim])
+            dims = dims + (None,) * (trailing_ndim - len(dims))
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            spec = _fit(mesh, shape, dims)
+            if stacked:
+                spec = P(None, *spec)
+            return spec
+    return P()  # replicate anything unmatched
+
+
+def _tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield "/".join(str(getattr(k, "key", k)) for k in path), leaf
+
+
+def _drop_data_axis(spec: P) -> P:
+    """ZeRO-1 parameter layout: keep tensor parallelism ('model'), drop the
+    ZeRO/FSDP sharding over the data axes — weights are read locally with
+    NO per-layer all-gather; only the optimizer step communicates (grad
+    reduce-scatter + param all-gather, once per step)."""
+    def fix(ax):
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept = tuple(a for a in axes if a not in ("data", "pod"))
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    return P(*[fix(ax) for ax in tuple(spec)])
+
+
+def param_specs(cfg: ModelConfig, mesh, params, *,
+                strategy: str = "fsdp") -> Any:
+    """PartitionSpecs matching the params pytree (no device binding —
+    also usable with an AbstractMesh for spec-validation tests).
+
+    strategy:
+      * "fsdp"  — weights shard over (data x model); ZeRO-3-style gathers
+                  on use (smallest per-chip memory, per-microbatch gather
+                  traffic).
+      * "zero1" — weights shard over 'model' only (read locally, no
+                  gathers); pick when P/tp fits HBM (§Perf hillclimb).
+    """
+    def assign(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        # everything under blocks/ carries the stacked layer dim
+        stacked = path.startswith("blocks")
+        spec = _spec_for_path(path, leaf, mesh, stacked)
+        if strategy == "zero1":
+            spec = _drop_data_axis(spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params, *,
+                    strategy: str = "fsdp") -> Any:
+    """NamedShardings matching the params pytree (works on ShapeDtypeStructs)."""
+    specs = param_specs(cfg, mesh, params, strategy=strategy)
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, kind: str = "train") -> P:
+    """Batch dim spreads over every data-like axis present in the mesh."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    return P(dp)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch) -> Any:
+    dp = batch_spec(mesh)
+
+    def assign(leaf):
+        dims = [dp[0] if leaf.shape[0] % _axis_size(mesh, dp[0]) == 0
+                else None]
+        dims += [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(assign, batch)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache) -> Any:
+    """Decode cache: batch over data axes; heads (or cache sequence for MQA
+    archs where kv_heads < model-axis size) over 'model'."""
+    dp = batch_spec(mesh)
+    dp_axis = dp[0]
+    model = "model" if "model" in mesh.shape else None
+
+    def assign_named(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if "kv_" in path:
+            # (L, B, S, Hkv, D): try heads on model, else sequence on model
+            _, b, s, hkv, _ = leaf.shape
+            msize = _axis_size(mesh, model)
+            if hkv % msize == 0:
+                spec = P(None, dp_axis if b % _axis_size(mesh, dp_axis) == 0
+                         else None, None, model, None)
+            else:
+                spec = P(None, dp_axis if b % _axis_size(mesh, dp_axis) == 0
+                         else None, model if s % msize == 0 else None,
+                         None, None)
+            return NamedSharding(mesh, spec)
+        if "ssm_state" in path:
+            # (L, B, H, P, N): heads over model
+            _, b, h, _, _ = leaf.shape
+            spec = P(None, dp_axis if b % _axis_size(mesh, dp_axis) == 0
+                     else None,
+                     model if h % _axis_size(mesh, model) == 0 else None,
+                     None, None)
+            return NamedSharding(mesh, spec)
+        if "ssm_conv" in path:
+            _, b, _, c = leaf.shape
+            spec = P(None, dp_axis if b % _axis_size(mesh, dp_axis) == 0
+                     else None, None,
+                     model if c % _axis_size(mesh, model) == 0 else None)
+            return NamedSharding(mesh, spec)
+        dims = [None] * leaf.ndim
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(assign_named, cache)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, state, *,
+                    strategy: str = "fsdp") -> Any:
+    """TrainState shardings.
+
+    fsdp:  params AND Adam moments shard over (data x model).
+    zero1: params shard over 'model' only (local reads, no per-layer
+           gathers); Adam moments keep the full (data x model) sharding —
+           the optimizer state is the ZeRO-1 sharded part.
+    """
+    params_sh = param_shardings(cfg, mesh, state.params, strategy=strategy)
+    mu_sh = param_shardings(cfg, mesh, state.opt.mu)
+    nu_sh = param_shardings(cfg, mesh, state.opt.nu)
+    scalar = NamedSharding(mesh, P())
+    e_sh = NamedSharding(mesh, P())
+    return type(state)(
+        params=params_sh,
+        opt=type(state.opt)(mu=mu_sh, nu=nu_sh, count=scalar),
+        step=scalar,
+        expert_load=e_sh,
+        coactivation=e_sh,
+    )

@@ -1,0 +1,83 @@
+"""Pure-JAX AdamW + LR schedules (cosine and MiniCPM's WSD).
+
+No optax dependency — moments are plain pytrees so the sharding rules can
+annotate them exactly like parameters (ZeRO-style: optimizer state shards
+with its parameter).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: Array
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state).  Global-norm clipping included."""
+    count = state.count + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay)
+        return new_p.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(mu=new_m, nu=new_v, count=count), gnorm
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (min_ratio + (1 - min_ratio)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, min_ratio: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, long flat stage, short
+    exponential-ish (here linear) decay tail [arXiv:2404.06395]."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    in_decay = step > (warmup + stable)
+    frac = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+    tail = peak_lr * (1 - (1 - min_ratio) * frac)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(in_decay, tail, peak_lr))

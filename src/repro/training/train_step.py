@@ -1,0 +1,128 @@
+"""Train step: loss -> grad -> AdamW, with microbatching and the planner hook.
+
+The step is a pure function suitable for jax.jit with NamedSharding
+in/out-shardings (repro/launch/train.py and dryrun.py decide those).
+Microbatching (gradient accumulation) runs as a lax.scan over microbatch
+slices so activation memory scales with the microbatch, not the global
+batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward_train
+from ..models.config import ModelConfig
+from . import optimizer as opt
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.AdamWState
+    step: Array
+    # cumulative router stats fed to the game-theoretic expert planner
+    expert_load: Array      # (E,) or (1,)
+    coactivation: Array     # (E, E) or (1, 1)
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    from ..models import init_params
+    params = init_params(cfg, key)
+    e = max(cfg.num_experts, 1)
+    return TrainState(
+        params=params,
+        opt=opt.adamw_init(params),
+        step=jnp.zeros((), jnp.int32),
+        expert_load=jnp.zeros((e,), jnp.float32),
+        coactivation=jnp.zeros((e, e), jnp.float32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | wsd
+    wsd_stable: int = 700
+    wsd_decay: int = 200
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1             # gradient accumulation factor
+
+
+def _lr(hyper: TrainHyper, step):
+    if hyper.schedule == "wsd":
+        return opt.wsd_schedule(step, peak_lr=hyper.peak_lr,
+                                warmup=hyper.warmup, stable=hyper.wsd_stable,
+                                decay=hyper.wsd_decay)
+    return opt.cosine_schedule(step, peak_lr=hyper.peak_lr,
+                               warmup=hyper.warmup, total=hyper.total_steps)
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = forward_train(params, cfg, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        m = hyper.microbatches
+        if m == 1:
+            return single(params, batch)
+        sliced = jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+        def body(carry, micro):
+            loss_acc, metrics_acc, grads_acc = carry
+            loss, metrics, grads = single(params, micro)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+            return (loss_acc + loss, metrics_acc, grads_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+        first = jax.tree.map(lambda x: x[0], sliced)
+        loss0, metrics0, grads0 = single(params, first)
+        rest = jax.tree.map(lambda x: x[1:], sliced)
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (loss0, metrics0, grads0), rest)
+        inv = 1.0 / m
+        return (loss * inv,
+                jax.tree.map(lambda x: x * inv, metrics),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    def train_step(state: TrainState, batch: dict):
+        loss, metrics, grads = accumulate(state.params, batch)
+        lr = _lr(hyper, state.step)
+        new_params, new_opt, gnorm = opt.adamw_update(
+            grads, state.opt, state.params, lr,
+            weight_decay=hyper.weight_decay, clip_norm=hyper.clip_norm)
+        # exponential-moving router stats for the expert partition planner
+        decay = 0.9
+        new_state = TrainState(
+            params=new_params, opt=new_opt, step=state.step + 1,
+            expert_load=decay * state.expert_load
+            + (1 - decay) * metrics["expert_load"],
+            coactivation=decay * state.coactivation
+            + (1 - decay) * metrics["coactivation"],
+        )
+        out_metrics = {"loss": loss, "ce": metrics["ce"],
+                       "aux_loss": metrics["aux_loss"],
+                       "grad_norm": gnorm, "lr": lr}
+        return new_state, out_metrics
+
+    return train_step

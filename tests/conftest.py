@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs exclusively to repro/launch/dryrun.py)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import HealthCheck, settings
+
+# jit compilation makes individual examples slow; disable deadlines globally
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def paper_problem():
+    """The §5.1 setup: 230 nodes, degree 3..6, weights mean 5, K=5, mu=8."""
+    from repro.core.problem import make_problem
+    from repro.graphs.generators import random_degree_graph, random_weights
+
+    adj = random_degree_graph(230, seed=0)
+    b, c = random_weights(adj, seed=1, mean=5.0)
+    prob = make_problem(c, b, [0.1, 0.2, 0.3, 0.3, 0.1], mu=8.0)
+    return adj, prob
+
+
+def small_problem(n=24, k=3, seed=0, mu=4.0):
+    from repro.core.problem import make_problem
+    from repro.graphs.generators import random_degree_graph, random_weights
+
+    adj = random_degree_graph(n, seed=seed, dmin=2, dmax=4)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    speeds = np.random.default_rng(seed + 2).uniform(0.5, 2.0, size=k)
+    return adj, make_problem(c, b, speeds, mu=mu)

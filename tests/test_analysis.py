@@ -1,0 +1,167 @@
+"""Roofline bookkeeping: the HLO collective parser and the jaxpr FLOP
+counter that feed EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis, jaxpr_flops
+
+
+# ---------------------------------------------------------------------------
+# HLO shape/collective parsing on handcrafted text
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+%loop_body.1 (arg.1: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %x = f32[64,128]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[128,128]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[64,128]{1,0} all-reduce(%x), to_apply=%add
+  %done = s32[] constant(4)
+}
+
+%loop_cond.1 (arg.2: (s32[], f32[64,128])) -> pred[] {
+  %pc = (s32[], f32[64,128]) parameter(0)
+  %i = s32[] get-tuple-element(%pc), index=0
+  %lim = s32[] constant(12)
+  %cmp = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %w = (s32[], f32[64,128]) while((s32[], f32[64,128]) %init), condition=%loop_cond.1, body=%loop_body.1
+  %rs = f32[32,128]{1,0} reduce-scatter(%a), dimensions={0}
+  %cp = f32[64,128]{1,0} collective-permute(%a), source_target_pairs={{0,1}}
+  %a2a = f32[64,128]{1,0} all-to-all(%a), dimensions={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert hlo_analysis._shape_bytes("f32[64,128]") == 64 * 128 * 4
+    assert hlo_analysis._shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert hlo_analysis._shape_bytes("(f32[8], s32[4])") == 32 + 16
+    assert hlo_analysis._shape_bytes("pred[]") == 1
+    assert hlo_analysis._shape_bytes("token[]") == 0
+
+
+def test_collective_stats_with_loop_trip():
+    stats = hlo_analysis.collective_stats(HLO_SAMPLE)
+    f = 4  # bytes
+    # inside while body (trip 12): all-gather 128*128*4, all-reduce 64*128*4
+    ag = 128 * 128 * f * 12
+    ar = 64 * 128 * f * 12
+    rs = 32 * 128 * f
+    cp = 64 * 128 * f
+    a2a = 64 * 128 * f
+    assert stats["by_kind"]["all-gather"] == ag
+    assert stats["by_kind"]["all-reduce"] == ar
+    assert stats["by_kind"]["reduce-scatter"] == rs
+    assert stats["by_kind"]["collective-permute"] == cp
+    assert stats["by_kind"]["all-to-all"] == a2a
+    assert stats["total_bytes"] == ag + ar + rs + cp + a2a
+    assert stats["count"]["all-gather"] == 1
+
+
+def test_collective_stats_empty():
+    stats = hlo_analysis.collective_stats("ENTRY %m () -> f32[] {\n}\n")
+    assert stats["total_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr FLOP counting
+# ---------------------------------------------------------------------------
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jnp.zeros((64, 32))
+    b = jnp.zeros((32, 48))
+    flops, _ = jaxpr_flops.count_fn(f, a, b)
+    assert flops == 2 * 64 * 32 * 48
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jnp.zeros((4, 8, 16))
+    b = jnp.zeros((4, 16, 32))
+    flops, _ = jaxpr_flops.count_fn(f, a, b)
+    assert flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_scan_multiplies_trip_count():
+    w = jnp.zeros((16, 16))
+
+    def f(x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.zeros((16, 16))
+    flops_trip, _ = jaxpr_flops.count_fn(f, x)
+    closed = jax.make_jaxpr(f)(x)
+    flops_once, _ = jaxpr_flops.count_jaxpr(closed, multiply_trips=False)
+    assert flops_trip == 7 * flops_once
+    assert flops_once == 2 * 16 ** 3
+
+
+def test_trip_factor_for_layered_model():
+    """The scan-over-layers trip factor recovered by count_fn_with_factor is
+    ~num_layers for a deep model (what corrects XLA's body-once count)."""
+    from repro import configs
+    from repro.models import init_params
+    from repro.models.transformer import forward_logits
+
+    cfg = configs.get_smoke_config("qwen1.5-4b")   # 2-layer smoke
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 16), jnp.int32)
+
+    def fwd(p, t):
+        return forward_logits(p, cfg, t)[0]
+
+    f1, b1, tf, tb = jaxpr_flops.count_fn_with_factor(fwd, params, toks)
+    assert f1 > 0 and b1 > 0
+    assert tf > 1.2            # the layer scan dominates => factor ~ L
+
+
+def test_flops_and_bytes_from_compiled():
+    def f(a, b):
+        return jnp.sum(a @ b)
+
+    a = jnp.ones((128, 128))
+    b = jnp.ones((128, 128))
+    compiled = jax.jit(f).lower(a, b).compile()
+    flops, nbytes = hlo_analysis.flops_and_bytes(compiled)
+    assert flops >= 2 * 128 ** 3 * 0.9
+    assert nbytes > 0
+
+
+def test_analytic_model_flops_sanity():
+    """6*N*D per train token: the jaxpr count for a smoke model's forward
+    is within 2x of 2*N_active*D (forward only, embeddings excluded)."""
+    from repro import configs
+    from repro.models import init_params
+    from repro.models.transformer import forward_train
+
+    cfg = configs.get_smoke_config("musicgen-medium")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    batch = {"inputs": jnp.zeros((B, S, cfg.d_model), jnp.float32),
+             "targets": jnp.zeros((B, S), jnp.int32)}
+
+    def fwd(p, bt):
+        return forward_train(p, cfg, bt)[0]
+
+    flops, _ = jaxpr_flops.count_fn(fwd, params, batch)
+    approx = 2 * cfg.active_param_count() * B * S
+    assert 0.4 * approx < flops < 3.0 * approx, (flops, approx)

@@ -1,0 +1,172 @@
+"""Initial partitioning (paper §4.1 + Appendix A) and graph generators."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.initial import (bfs_distances, er_cluster_growth,
+                                expand_partitions, initial_partition,
+                                select_focal_nodes)
+from repro.graphs.generators import (erdos_renyi, preferential_attachment,
+                                     random_degree_graph, random_weights,
+                                     specialized_geometric)
+
+
+def _numpy_bfs(adj: np.ndarray, src: int) -> np.ndarray:
+    n = adj.shape[0]
+    INF = 0x3FFFFFFF
+    dist = np.full(n, INF, np.int64)
+    dist[src] = 0
+    frontier = [src]
+    hop = 0
+    while frontier:
+        hop += 1
+        nxt = []
+        for u in frontier:
+            for v in np.flatnonzero(adj[u] > 0):
+                if dist[v] == INF:
+                    dist[v] = hop
+                    nxt.append(v)
+        frontier = nxt
+    return dist
+
+
+@given(st.integers(5, 30), st.integers(0, 10_000))
+def test_bfs_matches_numpy_oracle(n, seed):
+    adj = random_degree_graph(n, seed=seed, dmin=1, dmax=3)
+    srcs = np.arange(min(n, 4))
+    got = np.asarray(bfs_distances(jnp.asarray(adj), jnp.asarray(srcs)))
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(got[i], _numpy_bfs(adj, int(s)),
+                                      err_msg=f"src={s}")
+
+
+def test_focal_nodes_distinct_and_far():
+    adj = specialized_geometric(80, seed=1)
+    focals = np.asarray(select_focal_nodes(jnp.asarray(adj), 4,
+                                           jax.random.PRNGKey(0)))
+    assert len(set(focals.tolist())) == 4
+    # the heuristic should beat a random focal set's min pairwise distance
+    # on average; just require a sane (>= 2 hops) separation here
+    d = np.asarray(bfs_distances(jnp.asarray(adj), jnp.asarray(focals)))
+    pair = d[:, focals] + np.where(np.eye(4, dtype=bool), 10**9, 0)
+    assert pair.min() >= 2
+
+
+@pytest.mark.parametrize("gen,kwargs", [
+    (random_degree_graph, {}),
+    (preferential_attachment, {"m": 2}),
+    (specialized_geometric, {}),
+])
+def test_expansion_covers_graph(gen, kwargs):
+    adj = gen(60, 3, **kwargs)
+    owner = np.asarray(initial_partition(jnp.asarray(adj), 4,
+                                         jax.random.PRNGKey(1)))
+    assert owner.shape == (60,)
+    assert owner.min() >= 0 and owner.max() < 4
+    # all four machines own something, and sizes are not absurdly skewed
+    counts = np.bincount(owner, minlength=4)
+    assert (counts > 0).all()
+    assert counts.max() <= 60 * 0.7
+
+
+def test_expansion_respects_focals():
+    adj = random_degree_graph(40, seed=5)
+    focals = jnp.asarray([0, 13, 27], jnp.int32)
+    owner = np.asarray(expand_partitions(jnp.asarray(adj), focals,
+                                         jax.random.PRNGKey(2), 3))
+    assert owner[0] == 0 and owner[13] == 1 and owner[27] == 2
+
+
+def test_expansion_handles_disconnected():
+    adj = np.zeros((10, 10), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0     # tiny component
+    adj[2:, 2:][np.triu_indices(8, 1)] = 1.0
+    adj = np.maximum(adj, adj.T)
+    owner = np.asarray(expand_partitions(
+        jnp.asarray(adj), jnp.asarray([0, 2], jnp.int32),
+        jax.random.PRNGKey(0), 2))
+    assert (owner >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Theorem A.1 — E-R cluster-growth recursion vs Monte-Carlo BFS
+# ---------------------------------------------------------------------------
+
+def test_theorem_a1_recursion_properties():
+    sizes = np.asarray(er_cluster_growth(200, 0.03, hops=12))
+    assert sizes[0] == 1.0
+    assert np.all(np.diff(sizes) >= -1e-9)       # monotone non-decreasing
+    assert np.all(sizes <= 200.0 + 1e-6)         # bounded by |V|
+    # eventually saturates near |V| for supercritical p
+    assert sizes[-1] > 150.0
+
+
+@pytest.mark.parametrize("n,p", [(150, 0.04), (300, 0.02)])
+def test_theorem_a1_matches_monte_carlo(n, p):
+    """Expected BFS-frontier growth on G(n,p) follows the Thm A.1 recursion
+    (within Monte-Carlo noise) for the early hops where the independence
+    approximation holds."""
+    hops = 3
+    expect = np.asarray(er_cluster_growth(n, p, hops))
+    rng = np.random.default_rng(0)
+    trials = 60
+    acc = np.zeros(hops + 1)
+    for t in range(trials):
+        adj = erdos_renyi(n, p, seed=int(rng.integers(1 << 30)))
+        src = int(rng.integers(n))
+        dist = _numpy_bfs(adj, src)
+        for h in range(hops + 1):
+            acc[h] += (dist <= h).sum()
+    acc /= trials
+    # hop 0 exact; hops 1..3 within 20% relative
+    np.testing.assert_allclose(acc[0], expect[0])
+    np.testing.assert_allclose(acc[1:], expect[1:], rtol=0.20)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kwargs", [
+    (random_degree_graph, {"dmin": 3, "dmax": 6}),
+    (preferential_attachment, {"m": 2}),
+    (specialized_geometric, {}),
+])
+def test_generator_invariants(gen, kwargs):
+    adj = gen(50, 7, **kwargs)
+    assert adj.shape == (50, 50)
+    np.testing.assert_array_equal(adj, adj.T)            # symmetric
+    assert np.all(np.diag(adj) == 0)                      # no self loops
+    # connected (generators stitch components)
+    dist = _numpy_bfs(adj, 0)
+    assert (dist < 0x3FFFFFFF).all()
+
+
+def test_degree_graph_degrees_in_range():
+    adj = random_degree_graph(100, seed=0, dmin=3, dmax=6)
+    deg = (adj > 0).sum(1)
+    assert deg.min() >= 3                 # each node initiated >= dmin edges
+
+
+def test_preferential_attachment_is_scale_free_ish():
+    adj = preferential_attachment(400, seed=0, m=2)
+    deg = (adj > 0).sum(1)
+    # heavy tail: max degree far above the median
+    assert deg.max() >= 6 * np.median(deg)
+
+
+def test_random_weights_stats():
+    adj = random_degree_graph(200, seed=1)
+    b, c = random_weights(adj, seed=2, mean=5.0)
+    assert abs(b.mean() - 5.0) < 0.75
+    edges = c[adj > 0]
+    assert abs(edges.mean() - 5.0) < 0.75
+    np.testing.assert_array_equal(c, c.T)
+    assert np.all(c[adj == 0] == 0)

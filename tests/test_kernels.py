@@ -1,0 +1,363 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+The kernels execute in interpret mode (CPU container); on TPU the same
+pallas_call compiles for real.  Tolerances reflect f32 accumulation against
+the oracles' f32 math.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.dissatisfaction import cost_matrix_pallas
+
+
+def _problem_arrays(n, k, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    adj = rng.uniform(0, 10, (n, n)) * (rng.random((n, n)) < 0.4)
+    adj = np.triu(adj, 1)
+    adj = adj + adj.T
+    b = rng.uniform(0.1, 10, n).astype(np.float32)
+    r = rng.integers(0, k, n).astype(np.int32)
+    speeds = rng.uniform(0.2, 2.0, k).astype(np.float32)
+    speeds /= speeds.sum()
+    loads = np.zeros(k, np.float32)
+    np.add.at(loads, r, b)
+    return (jnp.asarray(adj, dtype), jnp.asarray(r), jnp.asarray(b),
+            jnp.asarray(loads), jnp.asarray(speeds))
+
+
+# ---------------------------------------------------------------------------
+# cost-matrix kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 64, 128, 130, 300])
+@pytest.mark.parametrize("k", [2, 5, 16])
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_cost_matrix_kernel_shapes(n, k, framework):
+    adj, r, b, loads, speeds = _problem_arrays(n, k, seed=n * 31 + k)
+    got = cost_matrix_pallas(adj, r, b, loads, speeds, 8.0, framework,
+                             interpret=True)
+    want = ref.cost_matrix_ref(adj, r, b, loads, speeds, 8.0, framework)
+    assert got.shape == (n, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cost_matrix_kernel_dtypes(dtype):
+    adj, r, b, loads, speeds = _problem_arrays(96, 4, seed=9, dtype=dtype)
+    got = cost_matrix_pallas(adj, r, b, loads, speeds, 2.0, "c",
+                             interpret=True)
+    want = ref.cost_matrix_ref(adj, r, b, loads, speeds, 2.0, "c")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=1.0 if dtype == jnp.bfloat16 else 1e-2)
+
+
+@pytest.mark.parametrize("tiles", [(128, 128), (128, 256), (256, 128)])
+def test_cost_matrix_kernel_tile_sweep(tiles):
+    tn, tj = tiles
+    adj, r, b, loads, speeds = _problem_arrays(260, 5, seed=17)
+    got = cost_matrix_pallas(adj, r, b, loads, speeds, 8.0, "c",
+                             tile_n=tn, tile_j=tj, interpret=True)
+    want = ref.cost_matrix_ref(adj, r, b, loads, speeds, 8.0, "c")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-2)
+
+
+@given(st.integers(2, 50), st.integers(2, 8), st.integers(0, 10_000),
+       st.sampled_from(["c", "ct"]))
+@settings(max_examples=15)
+def test_cost_matrix_kernel_property(n, k, seed, framework):
+    adj, r, b, loads, speeds = _problem_arrays(n, k, seed=seed)
+    got = cost_matrix_pallas(adj, r, b, loads, speeds, 4.0, framework,
+                             interpret=True)
+    want = ref.cost_matrix_ref(adj, r, b, loads, speeds, 4.0, framework)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=5e-2)
+
+
+def test_ops_wrapper_matches_core():
+    """The kernel adapter plugs into refine() and matches the core path."""
+    from repro.core import costs as core_costs
+    from repro.core.problem import make_problem, make_state
+    adj, r, b, loads, speeds = _problem_arrays(64, 4, seed=3)
+    prob = make_problem(adj, b, speeds, mu=8.0, normalize_speeds=False)
+    state = make_state(prob, r)
+    fn = ops.make_core_cost_matrix_fn(interpret=True)
+    got = fn(prob, state, "c")
+    want = core_costs.cost_matrix(prob, state, "c")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-2)
+
+
+def test_refine_with_pallas_kernel_matches_jnp():
+    """Full refinement driven by the Pallas cost kernel lands on the same
+    equilibrium as the jnp path (identical tie-breaking)."""
+    from repro.core.problem import make_problem
+    from repro.core.refine import refine
+    adj, r, b, loads, speeds = _problem_arrays(48, 3, seed=21)
+    prob = make_problem(adj, b, speeds, mu=8.0, normalize_speeds=False)
+    res_jnp = refine(prob, r, "c", max_turns=300)
+    res_pal = refine(prob, r, "c", max_turns=300,
+                     cost_matrix_fn=ops.make_core_cost_matrix_fn(interpret=True))
+    np.testing.assert_array_equal(np.asarray(res_jnp.assignment),
+                                  np.asarray(res_pal.assignment))
+
+
+# ---------------------------------------------------------------------------
+# decode-attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,d", [
+    (1, 4, 4, 64), (2, 8, 2, 64), (3, 8, 1, 128), (2, 7, 7, 64),
+])
+@pytest.mark.parametrize("s", [100, 512, 1000])
+def test_decode_attention_shapes(b, h, hkv, d, s):
+    rng = np.random.default_rng(b * 131 + s)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    length = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    got = decode_attention_pallas(q, k, v, length, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 3e-2)])
+def test_decode_attention_dtypes(dtype, tol):
+    rng = np.random.default_rng(0)
+    b, h, hkv, d, s = 2, 8, 2, 64, 384
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    length = jnp.asarray([s, s // 3], jnp.int32)
+    got = decode_attention_pallas(q, k, v, length, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_decode_attention_length_masking():
+    """Tokens beyond ``length`` must not influence the output."""
+    rng = np.random.default_rng(1)
+    b, h, hkv, d, s = 1, 4, 2, 64, 256
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    length = jnp.asarray([100], jnp.int32)
+    out1 = decode_attention_pallas(q, k, v, length, interpret=True)
+    # poison the invalid region
+    k2 = k.at[:, 100:].set(1e4)
+    v2 = v.at[:, 100:].set(-1e4)
+    out2 = decode_attention_pallas(q, k2, v2, length, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([(4, 4), (8, 2), (6, 3)]),
+       st.integers(16, 300), st.integers(0, 10_000))
+@settings(max_examples=10)
+def test_decode_attention_property(b, heads, s, seed):
+    h, hkv = heads
+    d = 64
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    length = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    got = decode_attention_pallas(q, k, v, length, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_decode_attention_vs_model_attention_step():
+    """Kernel output agrees with the model's jnp decode path (same math,
+    independent implementations)."""
+    from repro.models import attention as A
+    from repro import configs
+    cfg = configs.get_smoke_config("yi-34b")
+    rng = np.random.default_rng(4)
+    B, S = 2, 96
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    cache = A.init_kv_cache(cfg, B, S, jnp.float32)
+    # warm the cache with real keys/values at positions < length
+    length = 40
+    kpre = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.num_kv_heads, cfg.head_dim)), jnp.float32)
+    vpre = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.num_kv_heads, cfg.head_dim)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal(
+        (B, cfg.num_heads, cfg.head_dim)), jnp.float32)
+    got = ops.decode_attention(q, kpre, vpre,
+                               jnp.full((B,), length, jnp.int32),
+                               interpret=True)
+    want = ref.decode_attention_ref(q, kpre, vpre,
+                                    jnp.full((B,), length, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention forward kernel (train/prefill hot spot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (1, 128, 4, 2, 64), (2, 200, 8, 2, 64), (1, 384, 6, 1, 128),
+    (1, 96, 7, 7, 64), (2, 64, 4, 4, 32),
+])
+def test_flash_attention_shapes(b, s, h, hkv, d):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    rng = np.random.default_rng(b * 997 + s)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    rng = np.random.default_rng(7)
+    b, s, h, hkv, d = 1, 192, 8, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("tiles", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_tile_sweep(tiles):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    tq, tk = tiles
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, tile_q=tq, tile_k=tk,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_model_core():
+    """Kernel agrees with the model's jnp _causal_core (independent path)."""
+    from repro import configs
+    from repro.models import attention as A
+    from repro.kernels.flash_attention import flash_attention_pallas
+    cfg = configs.get_smoke_config("yi-34b")
+    rng = np.random.default_rng(11)
+    B, S = 2, 64
+    q = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.num_heads, cfg.head_dim)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.num_kv_heads, cfg.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.num_kv_heads, cfg.head_dim)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = A._causal_core(q, k, v, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 2), st.sampled_from([(4, 2), (4, 4), (6, 3)]),
+       st.integers(16, 200), st.integers(0, 10_000))
+@settings(max_examples=8)
+def test_flash_attention_property(b, heads, s, seed):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    h, hkv = heads
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, s, h, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, 64)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan kernel (SSM train/prefill hot spot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,h,p,n,q", [
+    (2, 64, 3, 8, 5, 16), (1, 100, 2, 16, 8, 32),
+    (2, 128, 4, 64, 32, 128), (1, 48, 1, 4, 3, 64),
+])
+def test_ssd_scan_kernel_shapes(b, l, h, p, n, q):
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    rng = np.random.default_rng(b * 53 + l)
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, l, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    got_y, got_s = ssd_scan_pallas(x, dt, a, bm, cm, chunk=q,
+                                   interpret=True)
+    want_y, want_s = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_kernel_matches_model_path():
+    """Kernel output == the model's chunked-jnp path (what ssm_block runs),
+    at a DIFFERENT chunking — both must equal the same recurrence."""
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(5)
+    b, l, h, p, n = 2, 96, 4, 32, 16
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, l, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    got_y, got_s = ssd_scan_pallas(x, dt, a, bm, cm, chunk=32,
+                                   interpret=True)
+    want_y, want_s = ssd_chunked(x, dt, a, bm, cm, chunk=48)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(8, 80),
+       st.integers(0, 10_000))
+@settings(max_examples=8)
+def test_ssd_scan_kernel_property(b, h, l, seed):
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+    rng = np.random.default_rng(seed)
+    p, n = 8, 4
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (b, l, h)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    got_y, got_s = ssd_scan_pallas(x, dt, a, bm, cm, chunk=16,
+                                   interpret=True)
+    want_y, want_s = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=5e-4, atol=5e-4)

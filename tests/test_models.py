@@ -1,0 +1,435 @@
+"""Model-layer correctness: per-arch smoke tests + algebraic oracles.
+
+Key oracles:
+  * step-by-step decode == full teacher-forced forward (all four families);
+  * chunked SSD == naive per-token recurrence;
+  * scatter MoE == dense all-experts oracle (ample capacity);
+  * GQA == explicit head-repetition attention;
+  * analytic param_count == actual parameter-tree size (also validates the
+    roofline's MODEL_FLOPS accounting, full configs via eval_shape).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.transformer import (decode_step, forward_logits,
+                                      forward_train, init_cache, init_params,
+                                      prefill)
+
+ALL_ARCHS = configs.all_archs()
+
+
+def _batch(cfg, key, B=2, S=32):
+    kt, ki = jax.random.split(key)
+    targets = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    if cfg.input_kind == "embeddings":
+        inputs = jax.random.normal(ki, (B, S, cfg.d_model), jnp.float32)
+    else:
+        inputs = jax.random.randint(ki, (B, S), 0, cfg.vocab_size)
+    return {"inputs": inputs, "targets": targets}
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke: one forward/train step on CPU, shapes + no NaNs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_forward_and_grad(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    logits, _ = forward_logits(params, cfg, batch["inputs"])
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, metrics = forward_train(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: forward_train(p, cfg, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_param_count_analytic_matches_tree(arch):
+    """Analytic count (used for roofline MODEL_FLOPS) == actual tree size.
+    Checked for BOTH the smoke config and the full published config (the
+    latter via eval_shape — no allocation)."""
+    for cfg in (configs.get_smoke_config(arch), configs.get_config(arch)):
+        tree = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        expect = cfg.param_count() + cfg.shared_block_params()
+        assert actual == expect, (cfg.name, actual, expect,
+                                  actual - expect)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "granite-moe-1b-a400m",
+                                  "mamba2-1.3b", "zamba2-7b"])
+def test_decode_matches_teacher_forced_forward(arch):
+    """Feeding tokens one-by-one through decode_step reproduces the full
+    causal forward's logits at every position (per family).
+
+    MoE: ample capacity so the batched forward drops nothing (decode is
+    dropless by design; equality requires the forward not to drop either).
+    """
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                                cfg.vocab_size)
+    full_logits, _ = forward_logits(params, cfg, tokens)
+
+    cache = init_cache(cfg, B, max_len=T + 4, dtype=jnp.float32)
+    got = []
+    for t in range(T):
+        step_logits, cache = decode_step(params, cfg, tokens[:, t:t + 1],
+                                         cache)
+        got.append(step_logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "granite-moe-1b-a400m"])
+def test_prefill_then_decode_continues_forward(arch):
+    """prefill(prompt) + decode_step(next) == forward over prompt+next."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, T + 1), 0,
+                                cfg.vocab_size)
+    last_logits, cache = prefill(params, cfg, tokens[:, :T], max_len=T + 4)
+    full_logits, _ = forward_logits(params, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(last_logits[:, 0]),
+                               np.asarray(full_logits[:, T - 1]),
+                               rtol=2e-2, atol=2e-2)
+    step_logits, cache = decode_step(params, cfg, tokens[:, T:T + 1], cache)
+    np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                               np.asarray(full_logits[:, T]),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked algorithm vs naive recurrence
+# ---------------------------------------------------------------------------
+
+def _ssd_naive(x, dt, a, bm, cm, init_state=None):
+    """Per-token linear recurrence: s_t = exp(dt_t a) s_{t-1} + dt_t B_t x_t;
+    y_t = C_t . s_t."""
+    B, L, H, P = x.shape
+    N = bm.shape[-1]
+    s = np.zeros((B, H, P, N)) if init_state is None else \
+        np.asarray(init_state, np.float64).copy()
+    ys = np.zeros((B, L, H, P))
+    x = np.asarray(x, np.float64)
+    dt = np.asarray(dt, np.float64)
+    a = np.asarray(a, np.float64)
+    bm = np.asarray(bm, np.float64)
+    cm = np.asarray(cm, np.float64)
+    for t in range(L):
+        decay = np.exp(dt[:, t] * a[None, :])                     # (B, H)
+        outer = np.einsum("bh,bn,bhp->bhpn", dt[:, t], bm[:, t], x[:, t])
+        s = s * decay[:, :, None, None] + outer
+        ys[:, t] = np.einsum("bn,bhpn->bhp", cm[:, t], s)
+    return ys, s
+
+
+@pytest.mark.parametrize("L,chunk", [(16, 4), (32, 8), (24, 24), (8, 16)])
+def test_ssd_chunked_matches_recurrence(L, chunk):
+    rng = np.random.default_rng(L * 7 + chunk)
+    B, H, P, N = 2, 3, 8, 5
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, L, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, H), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    y, final = S.ssd_chunked(x, dt, a, bm, cm, chunk)
+    y_ref, s_ref = _ssd_naive(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), s_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunked_with_initial_state():
+    rng = np.random.default_rng(0)
+    B, L, H, P, N = 1, 12, 2, 4, 3
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, L, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, H), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, P, N)), jnp.float32)
+    y, final = S.ssd_chunked(x, dt, a, bm, cm, chunk=4, init_state=s0)
+    y_ref, s_ref = _ssd_naive(x, dt, a, bm, cm, init_state=s0)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), s_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(0, 1000))
+@settings(max_examples=10)
+def test_ssd_chunk_invariance(B, H, seed):
+    """Output must not depend on the chunk size (pure reformulation)."""
+    rng = np.random.default_rng(seed)
+    L, P, N = 16, 4, 3
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (B, L, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 2.0, H), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+    y4, _ = S.ssd_chunked(x, dt, a, bm, cm, chunk=4)
+    y16, _ = S.ssd_chunked(x, dt, a, bm, cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y16),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_block_decode_matches_prefill_state():
+    """ssm_block's final state equals the state after L decode steps."""
+    cfg = configs.get_smoke_config("mamba2-1.3b")
+    params = {k: v for k, v in init_params(
+        cfg, jax.random.PRNGKey(0))["blocks"].items()}
+    block = jax.tree.map(lambda x: x[0], params)   # first (only) layer slice
+    B, L = 2, 8
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model),
+                          jnp.float32)
+    y_full, final = S.ssm_block(block["ssm"], cfg, u)
+    cache = S.init_ssm_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(L):
+        y, cache = S.ssm_decode_step(block["ssm"], cfg, u[:, t:t + 1], cache)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache.state), np.asarray(final),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE: scatter dispatch vs dense oracle
+# ---------------------------------------------------------------------------
+
+def test_moe_scatter_matches_dense_oracle():
+    import dataclasses
+    cfg = configs.get_smoke_config("qwen3-moe-235b-a22b")
+    # capacity ample enough that nothing is dropped
+    cfg_scatter = dataclasses.replace(cfg, moe_impl="scatter",
+                                      capacity_factor=8.0)
+    cfg_dense = dataclasses.replace(cfg, moe_impl="dense")
+    params = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_s, st_s = M.moe_block(params, cfg_scatter, x)
+    y_d, st_d = M.moe_block(params, cfg_dense, x)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_s.expert_load),
+                               np.asarray(st_d.expert_load), rtol=1e-6)
+
+
+def test_moe_einsum_matches_dense_oracle():
+    """The GShard-style einsum dispatch (the SPMD production path, §Perf
+    hillclimb #3) is numerically identical to the dense oracle and the
+    scatter path given ample capacity."""
+    import dataclasses
+    cfg = configs.get_smoke_config("qwen3-moe-235b-a22b")
+    params = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_d, _ = M.moe_block(params, dataclasses.replace(cfg, moe_impl="dense"),
+                         x)
+    y_e, _ = M.moe_block(params, dataclasses.replace(
+        cfg, moe_impl="einsum", capacity_factor=8.0), x)
+    np.testing.assert_allclose(np.asarray(y_e), np.asarray(y_d),
+                               rtol=1e-4, atol=1e-4)
+    # same capacity => identical drops as the scatter path
+    y_e2, _ = M.moe_block(params, dataclasses.replace(
+        cfg, moe_impl="einsum", capacity_factor=0.5), x)
+    y_s2, _ = M.moe_block(params, dataclasses.replace(
+        cfg, moe_impl="scatter", capacity_factor=0.5), x)
+    np.testing.assert_allclose(np.asarray(y_e2), np.asarray(y_s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_q_chunking_invariance():
+    """Blocked attention (attn_q_chunks > 1) must be a pure reformulation."""
+    import dataclasses
+    cfg = configs.get_smoke_config("yi-34b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    l1, _ = forward_logits(params, cfg, toks)
+    cfg8 = dataclasses.replace(cfg, attn_q_chunks=8)
+    l8, _ = forward_logits(params, cfg8, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l8),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drop_reduces_output_only():
+    """With capacity_factor tiny, overflow tokens are dropped (output is a
+    partial combine) but stats and shapes remain sane."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_smoke_config("qwen3-moe-235b-a22b"),
+                              capacity_factor=0.25)
+    params = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, stats = M.moe_block(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.isfinite(stats.aux_loss))
+
+
+def test_moe_stats_for_planner():
+    cfg = configs.get_smoke_config("granite-moe-1b-a400m")
+    params = M.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model),
+                          jnp.float32)
+    _, stats = M.moe_block(params, cfg, x)
+    e, k = cfg.num_experts, cfg.top_k
+    load = np.asarray(stats.expert_load)
+    np.testing.assert_allclose(load.sum(), k, rtol=1e-4)   # top-k per token
+    coact = np.asarray(stats.coactivation)
+    np.testing.assert_array_equal(coact, coact.T)
+    assert np.all(np.diag(coact) == 0)
+    assert np.all(coact >= 0)
+
+
+# ---------------------------------------------------------------------------
+# attention: GQA vs explicit repeat, rope shift, bias path
+# ---------------------------------------------------------------------------
+
+def test_gqa_matches_repeated_heads():
+    cfg = configs.get_smoke_config("yi-34b")       # kv < heads
+    assert cfg.num_kv_heads < cfg.num_heads
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    B, Sq = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, cfg.d_model),
+                          jnp.float32)
+    got = A.causal_attention(params, cfg, x)
+
+    # reference: repeat kv heads to full MHA and use plain softmax attention
+    pos = jnp.arange(Sq)[None, :]
+    q, k, v = A._project_qkv(params, cfg, x, pos)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    k_full = jnp.repeat(k, rep, axis=2)
+    v_full = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_full) / np.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((Sq, Sq), bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_full).reshape(B, Sq, -1)
+    want = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_qkv_bias_changes_output():
+    cfg = configs.get_smoke_config("qwen1.5-4b")
+    assert cfg.qkv_bias
+    params = A.init_attention(jax.random.PRNGKey(0), cfg)
+    assert "bq" in params
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y0 = A.causal_attention(params, cfg, x)
+    params2 = dict(params, bq=params["bq"] + 1.0)
+    y1 = A.causal_attention(params2, cfg, x)
+    assert float(jnp.max(jnp.abs(y1 - y0))) > 1e-4
+
+
+def test_rope_relative_position_property():
+    """RoPE dot products depend only on relative positions."""
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(0)
+    d = 32
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, d)), jnp.float32)
+
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 10_000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(13, 11), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(7, 0), dot_at(107, 100), rtol=1e-4)
+
+
+def test_causal_mask_blocks_future():
+    """Changing future tokens must not affect past logits."""
+    cfg = configs.get_smoke_config("granite-34b")      # MQA kv=1
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 1, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    l1, _ = forward_logits(params, cfg, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab_size)
+    l2, _ = forward_logits(params, cfg, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                               np.asarray(l2[:, :-1]), rtol=1e-4, atol=1e-4)
+
+
+def test_embeddings_input_stub():
+    """[audio]/[vlm] archs consume precomputed frontend embeddings."""
+    for arch in ("musicgen-medium", "chameleon-34b"):
+        cfg = configs.get_smoke_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        if cfg.input_kind == "embeddings":
+            x = jax.random.normal(jax.random.PRNGKey(1),
+                                  (2, 8, cfg.d_model), jnp.float32)
+        else:
+            x = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                   cfg.vocab_size)
+        logits, _ = forward_logits(params, cfg, x)
+        assert logits.shape == (2, 8, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_full_configs_match_assignment_table():
+    """Pin the published numbers (drift guard for the 40-cell dry-run)."""
+    table = {
+        "mamba2-1.3b": dict(num_layers=48, d_model=2048, vocab_size=50280,
+                            ssm_state=128),
+        "qwen3-moe-235b-a22b": dict(num_layers=94, d_model=4096,
+                                    num_heads=64, num_kv_heads=4, d_ff=1536,
+                                    vocab_size=151936, num_experts=128,
+                                    top_k=8),
+        "granite-moe-1b-a400m": dict(num_layers=24, d_model=1024,
+                                     num_heads=16, num_kv_heads=8, d_ff=512,
+                                     vocab_size=49155, num_experts=32,
+                                     top_k=8),
+        "minicpm-2b": dict(num_layers=40, d_model=2304, num_heads=36,
+                           num_kv_heads=36, d_ff=5760, vocab_size=122753),
+        "yi-34b": dict(num_layers=60, d_model=7168, num_heads=56,
+                       num_kv_heads=8, d_ff=20480, vocab_size=64000),
+        "granite-34b": dict(num_layers=88, d_model=6144, num_heads=48,
+                            num_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "qwen1.5-4b": dict(num_layers=40, d_model=2560, num_heads=20,
+                           num_kv_heads=20, d_ff=6912, vocab_size=151936,
+                           qkv_bias=True),
+        "musicgen-medium": dict(num_layers=48, d_model=1536, num_heads=24,
+                                num_kv_heads=24, d_ff=6144, vocab_size=2048),
+        "chameleon-34b": dict(num_layers=48, d_model=8192, num_heads=64,
+                              num_kv_heads=8, d_ff=22016, vocab_size=65536),
+        "zamba2-7b": dict(num_layers=81, d_model=3584, num_heads=32,
+                          num_kv_heads=32, d_ff=14336, vocab_size=32000,
+                          ssm_state=64),
+    }
+    for arch, want in table.items():
+        cfg = configs.get_config(arch)
+        for field, value in want.items():
+            assert getattr(cfg, field) == value, (arch, field)

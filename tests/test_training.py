@@ -1,0 +1,261 @@
+"""Training substrate: optimizer, schedules, checkpoint/restart fault
+tolerance, gradient compression, data pipeline, microbatching."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.training import checkpoint
+from repro.training.compression import (compress_int8, compressed_psum,
+                                        decompress_int8, init_errors)
+from repro.training.data import SyntheticDataConfig, synthetic_batch
+from repro.training.optimizer import (adamw_init, adamw_update,
+                                      cosine_schedule, wsd_schedule)
+from repro.training.train_step import (TrainHyper, init_train_state,
+                                       make_train_step)
+
+
+def _tiny_setup(arch="qwen1.5-4b", **hyper_kw):
+    cfg = configs.get_smoke_config(arch)
+    hyper = TrainHyper(total_steps=20, warmup=2, **hyper_kw)
+    step = make_train_step(cfg, hyper)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    data = SyntheticDataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                               global_batch=4, input_kind=cfg.input_kind,
+                               d_model=cfg.d_model)
+    return cfg, step, state, data
+
+
+# ---------------------------------------------------------------------------
+# training loop behaviour
+# ---------------------------------------------------------------------------
+
+def test_loss_decreases_on_learnable_data():
+    cfg, step, state, data = _tiny_setup()
+    jstep = jax.jit(step)
+    first = last = None
+    for i in range(15):
+        state, metrics = jstep(state, synthetic_batch(data, i))
+        if first is None:
+            first = float(metrics["ce"])
+        last = float(metrics["ce"])
+    assert last < first - 0.1, (first, last)
+
+
+def test_microbatching_matches_full_batch():
+    """Gradient accumulation over 4 microbatches == one full-batch step."""
+    cfg, _, state, data = _tiny_setup()
+    batch = synthetic_batch(data, 0)
+    hyper1 = TrainHyper(total_steps=20, warmup=2, microbatches=1)
+    hyper4 = TrainHyper(total_steps=20, warmup=2, microbatches=4)
+    s1, m1 = jax.jit(make_train_step(cfg, hyper1))(state, batch)
+    s4, m4 = jax.jit(make_train_step(cfg, hyper4))(state, batch)
+    # microbatch mean-of-means == full mean when slices are equal-sized;
+    # grads/params agree to accumulation roundoff
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_gradient_clipping_engages():
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    _, _, gnorm = adamw_update(huge, opt, params, lr=1e-3, clip_norm=1.0)
+    assert float(gnorm) > 1.0           # reported norm is pre-clip
+    # post-clip step must be bounded by lr * (1 + wd)-ish
+    new_p, _, _ = adamw_update(huge, opt, params, lr=1e-3, clip_norm=1.0)
+
+
+def test_router_stats_accumulate_for_moe():
+    cfg, step, state, data = _tiny_setup("granite-moe-1b-a400m")
+    jstep = jax.jit(step)
+    for i in range(3):
+        state, _ = jstep(state, synthetic_batch(data, i))
+    assert float(jnp.sum(state.expert_load)) > 0
+    assert state.coactivation.shape == (cfg.num_experts, cfg.num_experts)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_cosine_schedule_shape():
+    steps = jnp.arange(0, 1000)
+    lr = jax.vmap(lambda s: cosine_schedule(s, peak_lr=1e-3, warmup=100,
+                                            total=1000))(steps)
+    lr = np.asarray(lr)
+    assert lr[0] == 0.0
+    np.testing.assert_allclose(lr[100], 1e-3, rtol=1e-5)
+    assert np.all(np.diff(lr[:100]) > 0)          # warmup rises
+    assert np.all(np.diff(lr[100:]) <= 1e-12)     # cosine decays
+    assert lr[-1] >= 1e-4 * 0.99                  # min_ratio floor
+
+
+def test_wsd_schedule_shape():
+    """MiniCPM's Warmup-Stable-Decay: flat stable phase, then fast decay."""
+    lr = np.asarray(jax.vmap(
+        lambda s: wsd_schedule(s, peak_lr=1e-3, warmup=50, stable=700,
+                               decay=100))(jnp.arange(0, 900)))
+    np.testing.assert_allclose(lr[50:750], 1e-3, rtol=1e-5)   # stable
+    assert lr[0] == 0.0
+    assert lr[-1] < 2e-4                                        # decayed
+    assert np.all(np.diff(lr[750:850]) < 0)
+
+
+def test_minicpm_uses_wsd():
+    # the assignment's MiniCPM row is the WSD paper; the driver defaults
+    # its schedule accordingly
+    from repro.launch.train import train  # noqa: F401 — import side-checks
+    cfg = configs.get_config("minicpm-2b")
+    assert cfg.name == "minicpm-2b"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restart (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, step, state, data = _tiny_setup()
+    path = checkpoint.save(str(tmp_path), 3, state)
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    restored, at = checkpoint.restore(str(tmp_path), state)
+    assert at == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restart_is_bitwise_identical(tmp_path):
+    """Kill-anywhere/restart fault tolerance: train 4 steps straight vs
+    train 2, checkpoint, restore, train 2 more — identical parameters."""
+    cfg, step, state0, data = _tiny_setup()
+    jstep = jax.jit(step)
+
+    state = state0
+    for i in range(4):
+        state, _ = jstep(state, synthetic_batch(data, i))
+    straight = state
+
+    state = state0
+    for i in range(2):
+        state, _ = jstep(state, synthetic_batch(data, i))
+    checkpoint.save(str(tmp_path), 2, state)
+    restored, at = checkpoint.restore(str(tmp_path), state0)
+    assert at == 2
+    state = restored
+    for i in range(2, 4):
+        state, _ = jstep(state, synthetic_batch(data, i))
+
+    for a, b in zip(jax.tree.leaves(straight.params),
+                    jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_atomicity(tmp_path):
+    cfg, step, state, data = _tiny_setup()
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    checkpoint.save(str(tmp_path), 1, state)
+    checkpoint.save(str(tmp_path), 5, state)
+    # a stale tmp dir from a crashed save must be ignored
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_save_crashed"))
+    # an incomplete step dir (no manifest) must be ignored
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009"))
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    _, at = checkpoint.restore(str(tmp_path), state)
+    assert at == 5
+
+
+def test_restore_rejects_structure_mismatch(tmp_path):
+    cfg, step, state, data = _tiny_setup()
+    checkpoint.save(str(tmp_path), 1, state)
+    with pytest.raises(AssertionError):
+        checkpoint.restore(str(tmp_path), {"different": jnp.zeros(3)})
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, scale = compress_int8(x)
+    back = decompress_int8(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-7
+
+
+def test_compressed_psum_error_feedback():
+    """Under a vmapped axis (stand-in for the DP mesh axis), compressed
+    psum approximates the true mean and error feedback kills the bias over
+    repeated rounds."""
+    rng = np.random.default_rng(1)
+    W = 4                                     # simulated data-parallel width
+    grads = jnp.asarray(rng.standard_normal((W, 256)), jnp.float32)
+
+    def one_round(g, e):
+        return compressed_psum({"g": g}, "dp", {"g": e})
+
+    out, new_e = jax.vmap(one_round, axis_name="dp")(
+        grads, jnp.zeros((W, 256), jnp.float32))
+    true_mean = jnp.mean(grads, axis=0)
+    got = np.asarray(out["g"][0])
+    np.testing.assert_allclose(got, np.asarray(true_mean), atol=2e-2)
+
+    # error feedback: accumulated compensation means the *sum* of applied
+    # updates over T rounds converges to the sum of true means
+    T = 20
+    e = jnp.zeros((W, 256), jnp.float32)
+    applied = jnp.zeros(256, jnp.float32)
+    for t in range(T):
+        out, e_tree = jax.vmap(one_round, axis_name="dp")(grads, e)
+        e = e_tree["g"]
+        applied = applied + out["g"][0]
+    np.testing.assert_allclose(np.asarray(applied / T),
+                               np.asarray(true_mean), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_batch_deterministic_and_seekable():
+    data = SyntheticDataConfig(vocab_size=128, seq_len=16, global_batch=4)
+    a = synthetic_batch(data, 7)
+    b = synthetic_batch(data, 7)
+    c = synthetic_batch(data, 8)
+    np.testing.assert_array_equal(np.asarray(a["inputs"]),
+                                  np.asarray(b["inputs"]))
+    assert not np.array_equal(np.asarray(a["inputs"]),
+                              np.asarray(c["inputs"]))
+    assert a["inputs"].shape == (4, 16)
+    assert int(jnp.max(a["inputs"])) < 128
+
+
+def test_synthetic_batch_embeddings_kind():
+    data = SyntheticDataConfig(vocab_size=64, seq_len=8, global_batch=2,
+                               input_kind="embeddings", d_model=32)
+    b = synthetic_batch(data, 0)
+    assert b["inputs"].shape == (2, 8, 32)
+    assert b["targets"].shape == (2, 8)
+
+
+def test_synthetic_data_is_learnable():
+    """The Markov structure must be exploitable: repeated-token positions
+    are predictable, so a bigram statistic beats uniform entropy."""
+    data = SyntheticDataConfig(vocab_size=64, seq_len=64, global_batch=8,
+                               markov_period=4)
+    b = synthetic_batch(data, 0)
+    toks = np.asarray(b["inputs"])
+    idx = np.arange(64)
+    rep = (idx % 4) == 3
+    frac_equal = (toks[:, 1:][:, rep[1:]] == toks[:, :-1][:, rep[1:]]).mean()
+    assert frac_equal > 0.95
