@@ -11,9 +11,9 @@ import argparse
 import time
 import traceback
 
-from . import (baselines_compare, batch_study, fig7_8_simtime,
-               fig9_10_load_traces, kernel_bench, planner_bench, roofline,
-               table1_cost_frameworks, train_bench)
+from . import (baselines_compare, batch_study, distributed_bench,
+               fig7_8_simtime, fig9_10_load_traces, kernel_bench,
+               planner_bench, roofline, table1_cost_frameworks, train_bench)
 
 SUITES = {
     "table1": table1_cost_frameworks.run,
@@ -25,6 +25,7 @@ SUITES = {
     "kernel": kernel_bench.run,
     "train": train_bench.run,
     "roofline": roofline.run,
+    "distributed": distributed_bench.run,
 }
 
 

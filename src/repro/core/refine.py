@@ -190,11 +190,14 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
         will_move = gains > tol                                        # (K,)
         any_move = jnp.any(will_move) & ~done
 
-        # Apply all K moves at once (disjoint by construction: a node is
-        # owned by exactly one machine).
-        new_assignment = state.assignment
-        updates = jnp.where(will_move, best[pick], state.assignment[pick])
-        new_assignment = new_assignment.at[pick].set(updates)
+        # Apply all K moves at once (moving machines pick disjoint nodes: a
+        # node is owned by exactly one machine).  Idle machines' argmax over
+        # an all--inf row falls back to node 0, which may collide with a
+        # real move of node 0 — route non-moves to an out-of-range index so
+        # the scatter drops them instead of racing the real update.
+        safe_pick = jnp.where(will_move, pick, jnp.int32(problem.num_nodes))
+        new_assignment = state.assignment.at[safe_pick].set(
+            best[pick], mode="drop")
         new_assignment = jnp.where(any_move, new_assignment, state.assignment)
         new_loads = machine_loads(problem.node_weights, new_assignment, K)
         new_state = PartitionState(new_assignment, new_loads)

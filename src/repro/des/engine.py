@@ -87,6 +87,12 @@ class DESConfig:
     refine_framework: str = game_costs.C_FRAMEWORK
     refine_max_turns: int = 256
     refine_mu: float = 8.0
+    # "single" = the single-controller loop of core/refine.py;
+    # "distributed" = the sharded O(K)-exchange runtime of
+    # repro.distributed (DESIGN.md §9) — same fixed points, but the
+    # repartition step itself runs as the sharded protocol.
+    refine_backend: str = "single"
+    refine_num_shards: int = 0    # 0 = one shard per machine
     # load trace (Figs 9/10)
     trace_stride: int = 50
     max_trace: int = 512
@@ -587,8 +593,16 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
         adjacency=c, node_weights=b,
         speeds=jnp.full((K,), 1.0 / K, jnp.float32),
         mu=jnp.asarray(cfg.refine_mu, jnp.float32))
-    res = refine(prob, state.machine, cfg.refine_framework,
-                 max_turns=cfg.refine_max_turns)
+    if cfg.refine_backend == "distributed":
+        from ..distributed.runtime import refine_distributed
+        res = refine_distributed(prob, state.machine, cfg.refine_framework,
+                                 num_shards=cfg.refine_num_shards or K,
+                                 max_turns=cfg.refine_max_turns)
+    elif cfg.refine_backend == "single":
+        res = refine(prob, state.machine, cfg.refine_framework,
+                     max_turns=cfg.refine_max_turns)
+    else:
+        raise ValueError(f"unknown refine_backend {cfg.refine_backend!r}")
     moved = jnp.sum((res.assignment != state.machine).astype(jnp.int32))
     return state._replace(machine=res.assignment,
                           refines=state.refines + 1,

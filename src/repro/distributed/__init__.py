@@ -1,0 +1,39 @@
+"""``repro.distributed`` — sharded multi-machine refinement runtime.
+
+Executes the round-robin refinement game of :mod:`repro.core.refine` as a
+genuinely distributed program (DESIGN.md §9): node state lives sharded
+across machines, every machine computes candidate moves from its local
+shard plus a replicated O(K) load vector, and machines exchange only O(K)
+aggregate messages per turn — the paper's central scalability claim
+("aggregate state information required to be exchanged between the
+machines is independent of the size of the simulated network model").
+
+Modules:
+  * :mod:`~repro.distributed.views`      — per-machine local views and
+    ghost/boundary summaries.
+  * :mod:`~repro.distributed.protocol`   — the O(K) message types, shard-
+    local candidate computation, deterministic election, delta application.
+  * :mod:`~repro.distributed.runtime`    — the drivers: emulated SPMD
+    (vmap over shards, runs on 1 device), real ``shard_map`` over a device
+    mesh, sequential-turn and §4.5 simultaneous-sweep modes.
+  * :mod:`~repro.distributed.accounting` — bytes-exchanged ledgers proving
+    the O(K + boundary) bound empirically.
+"""
+from .accounting import ExchangeLedger, ledger_for_run
+from .runtime import (refine_distributed, refine_distributed_shard_map,
+                      refine_distributed_simultaneous,
+                      refine_distributed_traced, shard_problem)
+from .views import ShardViews, boundary_stats, build_views
+
+__all__ = [
+    "ExchangeLedger",
+    "ShardViews",
+    "boundary_stats",
+    "build_views",
+    "ledger_for_run",
+    "refine_distributed",
+    "refine_distributed_shard_map",
+    "refine_distributed_simultaneous",
+    "refine_distributed_traced",
+    "shard_problem",
+]

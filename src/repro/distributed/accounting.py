@@ -1,0 +1,115 @@
+"""Bytes-exchanged accounting for the distributed protocol (DESIGN.md §9.3).
+
+The protocol is deterministic, so the inter-machine payload of a run is an
+exact function of what actually executed: number of turns/sweeps taken,
+shard count S, machine count K, and the one-time ghost sync sized by the
+sharding's boundary structure.  :func:`ledger_for_run` builds the ledger
+from those measured quantities; the key property it exposes — and that
+``benchmarks/distributed_bench.py`` verifies empirically across N = 256 →
+4096 — is that **per-round payload contains no O(N) term**:
+
+    sequential turn : S * 16 B                     (candidate all-gather)
+    traced turn     : + S * (8 + 4K) B             (potential partials)
+    §4.5 sweep      : K * (above)                  (one candidate per machine)
+    one-time setup  : 8 * sum_s ghost_s  +  4K + 4 (ghost sync, loads, B)
+
+For contrast, :func:`naive_broadcast_bytes` gives the per-round cost of
+the strawman protocol that re-broadcasts the full assignment vector —
+O(N) per round — which the bench prints side by side.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import protocol
+from .views import BoundaryStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeLedger:
+    """Inter-machine byte counters for one refinement run."""
+    num_shards: int
+    num_machines: int
+    rounds: int                 # turns (sequential) or sweeps (§4.5)
+    candidate_bytes: int        # per-candidate all-gathers, whole run
+    trace_bytes: int            # potential partials (0 for untraced runs)
+    ghost_sync_bytes: int       # one-time boundary-assignment sync
+    setup_bytes: int            # one-time loads allreduce + total-B scalar
+
+    @property
+    def per_round_bytes(self) -> float:
+        """Steady-state payload per round — the O(K) quantity the paper
+        claims is independent of N."""
+        if self.rounds == 0:
+            return 0.0
+        return (self.candidate_bytes + self.trace_bytes) / self.rounds
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.candidate_bytes + self.trace_bytes
+                + self.ghost_sync_bytes + self.setup_bytes)
+
+    def summary(self) -> str:
+        return (f"S={self.num_shards} K={self.num_machines} "
+                f"rounds={self.rounds}: {self.per_round_bytes:.0f} B/round "
+                f"steady-state, {self.ghost_sync_bytes} B ghost sync, "
+                f"{self.total_bytes} B total")
+
+
+def turn_payload_bytes(num_shards: int, num_machines: int,
+                       traced: bool = False) -> int:
+    """Wire bytes of ONE sequential turn (all machines combined)."""
+    bytes_ = num_shards * protocol.CANDIDATE_BYTES
+    if traced:
+        bytes_ += num_shards * (protocol.TRACE_PARTIAL_BYTES
+                                + protocol.load_partial_bytes(num_machines))
+    return bytes_
+
+
+def sweep_payload_bytes(num_shards: int, num_machines: int) -> int:
+    """Wire bytes of ONE §4.5 simultaneous sweep (K candidates per shard,
+    plus the fresh O(K) load partial every sweep recomputes)."""
+    return num_shards * (num_machines * protocol.CANDIDATE_BYTES
+                         + protocol.load_partial_bytes(num_machines))
+
+
+def ghost_sync_bytes(stats: BoundaryStats) -> int:
+    """One-time boundary sync: each shard receives (node id, assignment)
+    pairs for its ghost nodes — 8 bytes per ghost."""
+    return 8 * stats.total_ghosts
+
+
+def setup_bytes(num_machines: int) -> int:
+    """One-time replicated aggregates: the O(K) load vector + scalar B."""
+    return 4 * num_machines + 4
+
+
+def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
+                   *, traced: bool = False,
+                   simultaneous: bool = False) -> ExchangeLedger:
+    """Ledger for an executed run (``rounds`` = its measured turn count)."""
+    s = stats.num_shards
+    if simultaneous:
+        per_round = sweep_payload_bytes(s, num_machines)
+        trace = 0
+        if traced:
+            trace = rounds * s * protocol.TRACE_PARTIAL_BYTES
+    else:
+        per_round = s * protocol.CANDIDATE_BYTES
+        trace = rounds * (turn_payload_bytes(s, num_machines, traced)
+                          - per_round)
+    return ExchangeLedger(
+        num_shards=s,
+        num_machines=num_machines,
+        rounds=rounds,
+        candidate_bytes=rounds * per_round,
+        trace_bytes=trace,
+        ghost_sync_bytes=ghost_sync_bytes(stats),
+        setup_bytes=setup_bytes(num_machines),
+    )
+
+
+def naive_broadcast_bytes(num_nodes: int, num_shards: int) -> int:
+    """Per-round cost of the O(N) strawman: every shard re-receives the
+    full int32 assignment vector each round."""
+    return 4 * num_nodes * num_shards

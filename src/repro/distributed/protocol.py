@@ -1,0 +1,231 @@
+"""The O(K) aggregate-exchange protocol (DESIGN.md §9.2).
+
+Per sequential turn (acting machine m), each shard ships exactly one
+:class:`Candidate` — 16 bytes: its most dissatisfied m-owned node, that
+node's best-response machine, the dissatisfaction gain, and the node's
+weight.  The all-gather of these S candidates *is* the entire inter-machine
+exchange of the turn; every machine then runs the same deterministic
+:func:`elect` on the gathered array and applies the same
+:func:`apply_move` delta to its replicated assignment mirror and O(K) load
+vector.  No O(N) state ever crosses the wire after the one-time
+O(boundary) ghost sync (see :mod:`~repro.distributed.views`).
+
+Traced runs additionally exchange per-shard potential partials (two f32
+scalars plus a fresh O(K) load partial) so the global potentials C_0 /
+Ct_0 can be reconstructed by pure reduction — still independent of N.
+
+Numerical contract: :func:`shard_cost_matrix` reproduces the rows of
+:func:`repro.core.costs.cost_matrix` *bitwise* (same formulas in the same
+operation order; the row-block aggregate matmul keeps the contraction
+dimension at exactly N), and :func:`elect` reproduces the global
+``argmax`` tie-breaking (first/lowest node index wins among equal gains).
+Together these make the distributed sequential runtime's move sequence
+identical to the single controller's — asserted by
+tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import costs
+
+Array = jax.Array
+
+I32_MAX = jnp.int32(2**31 - 1)
+
+# Wire sizes (bytes) of the protocol messages, for the accounting ledgers.
+CANDIDATE_BYTES = 16          # gain f32 + node i32 + dest i32 + weight f32
+TRACE_PARTIAL_BYTES = 8       # c0 partial f32 + cut partial f32
+
+
+def load_partial_bytes(num_machines: int) -> int:
+    """Fresh O(K) load partial exchanged per shard on traced turns."""
+    return 4 * num_machines
+
+
+class Candidate(NamedTuple):
+    """One shard's proposal for the acting machine's move (16 bytes)."""
+    gain: Array     # f32 — dissatisfaction of the proposed node (-inf if
+                    #       the shard holds no movable node for machine m)
+    node: Array     # i32 — global node id
+    dest: Array     # i32 — the node's best-response machine
+    weight: Array   # f32 — b_node (lets every peer update loads locally)
+
+
+class Winner(NamedTuple):
+    """Deterministic election result, identical on every machine."""
+    moved: Array    # bool — gain > tol
+    node: Array     # i32
+    dest: Array     # i32
+    gain: Array     # f32
+    weight: Array   # f32
+
+
+# ---------------------------------------------------------------------------
+# Shard-local compute (no communication)
+# ---------------------------------------------------------------------------
+
+def shard_cost_matrix(row_block: Array, r_local: Array, b_local: Array,
+                      assignment: Array, loads: Array, speeds: Array,
+                      mu: Array, total_b: Array, framework: str) -> Array:
+    """(Ns, K) cost rows for the shard's nodes — bitwise equal to the same
+    rows of :func:`repro.core.costs.cost_matrix`.
+
+    ``assignment`` is the shard's O(N) *mirror* (maintained by move
+    broadcasts, never re-shipped); ``loads`` the replicated O(K) vector;
+    ``total_b`` the global weight total B (a one-time O(1) allreduce —
+    node weights are constants of the game).
+    """
+    k = speeds.shape[0]
+    onehot = jax.nn.one_hot(assignment, k, dtype=row_block.dtype)
+    aggregate = row_block @ onehot                          # (Ns, K)
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)
+    cut_term = 0.5 * mu * (degree - aggregate)
+    own = jax.nn.one_hot(r_local, k, dtype=b_local.dtype)
+    others = loads[None, :] - b_local[:, None] * own
+    if framework == costs.C_FRAMEWORK:
+        load_term = (b_local[:, None] / speeds[None, :]) * others
+        return load_term + cut_term
+    elif framework == costs.CT_FRAMEWORK:
+        inv_w = 1.0 / speeds[None, :]
+        load_term = (b_local[:, None] ** 2) * inv_w**2 \
+            + 2.0 * b_local[:, None] * inv_w**2 * others \
+            - 2.0 * b_local[:, None] * inv_w * total_b
+        return load_term + cut_term
+    raise ValueError(f"unknown framework {framework!r}")
+
+
+def _shard_dissatisfaction(row_block, b_local, ids, valid, assignment,
+                           loads, speeds, mu, total_b, framework,
+                           cost_matrix_fn=None):
+    """Per-node dissatisfaction + best machine for the shard's rows."""
+    if cost_matrix_fn is None:
+        cost_matrix_fn = shard_cost_matrix
+    r_local = assignment[ids]
+    cost = cost_matrix_fn(row_block, r_local, b_local, assignment,
+                          loads, speeds, mu, total_b, framework)
+    current = jnp.take_along_axis(cost, r_local[:, None], axis=1)[:, 0]
+    best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    dissat = current - jnp.min(cost, axis=1)
+    return r_local, dissat, best_machine
+
+
+def local_candidate(row_block: Array, b_local: Array, ids: Array,
+                    valid: Array, assignment: Array, loads: Array,
+                    speeds: Array, mu: Array, total_b: Array,
+                    machine: Array, framework: str,
+                    cost_matrix_fn=None) -> Candidate:
+    """The shard's most dissatisfied node owned by ``machine`` (Eq. 4)."""
+    r_local, dissat, best_machine = _shard_dissatisfaction(
+        row_block, b_local, ids, valid, assignment, loads, speeds, mu,
+        total_b, framework, cost_matrix_fn)
+    owned = (r_local == machine) & valid
+    masked = jnp.where(owned, dissat, -jnp.inf)
+    loc = jnp.argmax(masked).astype(jnp.int32)
+    return Candidate(gain=masked[loc], node=ids[loc],
+                     dest=best_machine[loc], weight=b_local[loc])
+
+
+def local_candidates_all_machines(row_block: Array, b_local: Array,
+                                  ids: Array, valid: Array, assignment: Array,
+                                  loads: Array, speeds: Array, mu: Array,
+                                  total_b: Array, framework: str,
+                                  cost_matrix_fn=None) -> Candidate:
+    """§4.5 sweep mode: one candidate per machine — Candidate of (K,) arrays."""
+    k = speeds.shape[0]
+    r_local, dissat, best_machine = _shard_dissatisfaction(
+        row_block, b_local, ids, valid, assignment, loads, speeds, mu,
+        total_b, framework, cost_matrix_fn)
+    owned = valid[None, :] & (r_local[None, :]
+                              == jnp.arange(k, dtype=jnp.int32)[:, None])
+    masked = jnp.where(owned, dissat[None, :], -jnp.inf)     # (K, Ns)
+    loc = jnp.argmax(masked, axis=1).astype(jnp.int32)       # (K,)
+    return Candidate(gain=jnp.take_along_axis(masked, loc[:, None], 1)[:, 0],
+                     node=ids[loc], dest=best_machine[loc],
+                     weight=b_local[loc])
+
+
+# ---------------------------------------------------------------------------
+# Exchange + replicated apply (the O(K) part)
+# ---------------------------------------------------------------------------
+
+def elect(cands: Candidate, tol) -> Winner:
+    """Pick the winning candidate from the gathered (S,) Candidate arrays.
+
+    Max gain wins; exact-gain ties break toward the lowest global node id —
+    precisely the semantics of the single controller's ``jnp.argmax`` over
+    the full masked dissatisfaction vector, because each shard's local
+    argmax already picked its lowest-id maximizer and shard blocks are
+    contiguous ascending id ranges.
+    """
+    best_gain = jnp.max(cands.gain)
+    tie = cands.gain == best_gain
+    shard = jnp.argmin(jnp.where(tie, cands.node, I32_MAX)).astype(jnp.int32)
+    return Winner(moved=best_gain > tol,
+                  node=cands.node[shard],
+                  dest=cands.dest[shard],
+                  gain=best_gain,
+                  weight=cands.weight[shard])
+
+
+def apply_move(assignment: Array, loads: Array, winner: Winner,
+               machine: Array) -> tuple[Array, Array]:
+    """Apply the elected move to the replicated mirror + O(K) loads.
+
+    Mirrors ``repro.core.refine._turn`` operation-for-operation (same
+    incremental ``.at[].add`` update order) so the replicated state stays
+    bitwise identical to the single controller's.
+    """
+    new_assignment = jnp.where(
+        winner.moved, assignment.at[winner.node].set(winner.dest), assignment)
+    new_loads = jnp.where(
+        winner.moved,
+        loads.at[machine].add(-winner.weight).at[winner.dest].add(winner.weight),
+        loads)
+    return new_assignment, new_loads
+
+
+# ---------------------------------------------------------------------------
+# Traced-mode potential partials (pure reductions — O(1)/O(K) per shard)
+# ---------------------------------------------------------------------------
+
+def shard_load_partial(b_local: Array, ids: Array, valid: Array,
+                       assignment: Array, num_machines: int) -> Array:
+    """(K,) fresh load partial: sum of owned b over the shard's nodes."""
+    bv = jnp.where(valid, b_local, jnp.zeros_like(b_local))
+    return jnp.zeros((num_machines,), b_local.dtype).at[assignment[ids]].add(bv)
+
+
+def shard_c0_partial(row_block: Array, b_local: Array, ids: Array,
+                     valid: Array, assignment: Array, fresh_loads: Array,
+                     speeds: Array, mu: Array, total_b: Array) -> Array:
+    """Shard's contribution to C_0 = sum_i C_i (Thm. 3.1 potential)."""
+    r_local = assignment[ids]
+    cost = shard_cost_matrix(row_block, r_local, b_local, assignment,
+                             fresh_loads, speeds, mu, total_b,
+                             costs.C_FRAMEWORK)
+    current = jnp.take_along_axis(cost, r_local[:, None], axis=1)[:, 0]
+    return jnp.sum(jnp.where(valid, current, 0.0))
+
+
+def shard_cut_partial(row_block: Array, ids: Array, valid: Array,
+                      assignment: Array) -> Array:
+    """Shard's (unhalved) cut contribution: sum_{i local} sum_j c_ij [r_i != r_j]."""
+    r_local = assignment[ids]
+    diff = r_local[:, None] != assignment[None, :]
+    rows = jnp.where(valid[:, None], row_block, jnp.zeros_like(row_block))
+    return jnp.sum(rows * diff)
+
+
+def global_potentials(c0_partials: Array, cut_partials: Array,
+                      fresh_loads: Array, speeds: Array, mu: Array,
+                      total_b: Array) -> tuple[Array, Array]:
+    """Reduce gathered partials to (C_0, Ct_0) — replicated compute."""
+    c0 = jnp.sum(c0_partials)
+    cut = 0.5 * jnp.sum(cut_partials)
+    variance = jnp.sum((fresh_loads / speeds - total_b) ** 2)
+    ct0 = variance + 0.5 * mu * cut
+    return c0, ct0

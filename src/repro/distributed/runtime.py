@@ -1,0 +1,364 @@
+"""Sharded refinement drivers (DESIGN.md §9).
+
+Three execution modes over the same shard-local kernel + O(K) protocol:
+
+  * :func:`refine_distributed`          — sequential round-robin turns,
+    ``lax.while_loop`` to convergence (the production entry point; this is
+    what ``repro.des.engine`` calls when ``refine_backend="distributed"``).
+  * :func:`refine_distributed_traced`   — fixed-length scan recording the
+    per-turn move sequence and both global potentials; move-for-move
+    identical to :func:`repro.core.refine.refine_traced` (the equivalence
+    the paper's Thm 4.1 convergence argument needs and
+    tests/test_distributed.py asserts).
+  * :func:`refine_distributed_simultaneous` — the §4.5 sweep mode: every
+    machine moves its most dissatisfied node in the same round (descent
+    not guaranteed, K× fewer exchange rounds).
+
+Two drivers realize the SPMD program:
+
+  * the **emulated** driver maps the shard axis with ``vmap`` and performs
+    the candidate all-gather as a plain stacked reduction — it runs on a
+    single device, is fully jit/cond-compatible (the DES engine embeds
+    it), and is bit-identical in protocol terms to the mesh driver;
+  * :func:`refine_distributed_shard_map` places each shard's row block on
+    its own device of a ``jax.sharding.Mesh`` and exchanges candidates
+    with ``lax.all_gather`` — the real-collective path, exercised by
+    ``benchmarks/distributed_bench.py`` under a forced multi-device host
+    platform.
+
+Shard-local cost assembly defaults to the jnp path of
+:mod:`~repro.distributed.protocol` (bitwise-equal to ``core.costs``); pass
+``cost_fn="pallas"`` to run each shard's block through the fused Pallas
+kernel of :mod:`repro.kernels.dissatisfaction` instead (TPU deployments).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import costs
+from ..core.problem import PartitionProblem, make_state
+from ..core.refine import DEFAULT_TOL, RefineResult, Trace
+from . import protocol
+from .views import ShardViews, build_views
+
+Array = jax.Array
+
+
+def shard_problem(problem: PartitionProblem, num_shards: int) -> ShardViews:
+    """Build the static per-shard views for ``problem`` (see views.py)."""
+    return build_views(problem, num_shards)
+
+
+def _resolve_shards(problem: PartitionProblem, num_shards: int | None) -> int:
+    if num_shards is None:
+        num_shards = problem.num_machines
+    return max(1, min(num_shards, problem.num_nodes))
+
+
+def _shard_cost_fn(cost_fn: str):
+    """Shard-local (Ns, K) cost-row builder: "jnp" (exact, default) or
+    "pallas" (fused kernel per row block, DESIGN.md §3.2)."""
+    if cost_fn == "jnp":
+        return protocol.shard_cost_matrix
+    if cost_fn == "pallas":
+        from ..kernels.dissatisfaction import cost_matrix_pallas
+
+        def pallas_rows(row_block, r_local, b_local, assignment, loads,
+                        speeds, mu, total_b, framework):
+            return cost_matrix_pallas(
+                row_block, assignment, b_local, loads, speeds, mu,
+                framework, row_assignment=r_local, total_weight=total_b)
+
+        return pallas_rows
+    raise ValueError(f"unknown cost_fn {cost_fn!r}")
+
+
+def _vmap_candidates(views: ShardViews, assignment: Array, loads: Array,
+                     speeds: Array, mu: Array, total_b: Array,
+                     machine: Array, framework: str,
+                     cost_fn: str) -> protocol.Candidate:
+    """Emulated exchange: all S shard candidates, stacked on axis 0."""
+    shard_cost = _shard_cost_fn(cost_fn)
+
+    def one(rb, b, ids, valid):
+        with jax.named_scope("shard_candidate"):
+            return protocol.local_candidate(
+                rb, b, ids, valid, assignment, loads, speeds, mu, total_b,
+                machine, framework, cost_matrix_fn=shard_cost)
+
+    return jax.vmap(one)(views.row_block, views.weights, views.ids,
+                         views.valid)
+
+
+def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
+                     mu: Array, total_b: Array, num_machines: int,
+                     fresh_loads: Array | None = None):
+    """Emulated traced-mode reduction of the per-shard potential partials.
+
+    Pass ``fresh_loads`` when the caller already reduced the shard load
+    partials for ``assignment`` (the sweep driver does) to skip the
+    redundant second reduction.
+    """
+    if fresh_loads is None:
+        load_partials = jax.vmap(
+            lambda b, ids, v: protocol.shard_load_partial(
+                b, ids, v, assignment, num_machines)
+        )(views.weights, views.ids, views.valid)
+        fresh_loads = jnp.sum(load_partials, axis=0)
+    c0_partials = jax.vmap(
+        lambda rb, b, ids, v: protocol.shard_c0_partial(
+            rb, b, ids, v, assignment, fresh_loads, speeds, mu, total_b)
+    )(views.row_block, views.weights, views.ids, views.valid)
+    cut_partials = jax.vmap(
+        lambda rb, ids, v: protocol.shard_cut_partial(rb, ids, v, assignment)
+    )(views.row_block, views.ids, views.valid)
+    return protocol.global_potentials(c0_partials, cut_partials, fresh_loads,
+                                      speeds, mu, total_b)
+
+
+# ---------------------------------------------------------------------------
+# Sequential round-robin turns (paper §4.2 protocol, distributed)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
+                                   "cost_fn"))
+def refine_distributed(problem: PartitionProblem, assignment: Array,
+                       framework: str = costs.C_FRAMEWORK,
+                       num_shards: int | None = None,
+                       max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+                       cost_fn: str = "jnp") -> RefineResult:
+    """Distributed round-robin refinement to convergence (K idle turns).
+
+    Protocol per turn: each shard computes one Candidate from local state
+    (16 bytes on the wire), the candidates are all-gathered, every machine
+    elects the same winner and applies the same O(1) delta to its
+    replicated assignment mirror + O(K) load vector.
+    """
+    k = problem.num_machines
+    s = _resolve_shards(problem, num_shards)
+    views = build_views(problem, s)
+    state0 = make_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+
+    def cond(carry):
+        _, _, _, idle, turns, _ = carry
+        return (idle < k) & (turns < max_turns)
+
+    def body(carry):
+        r, loads, machine, idle, turns, moves = carry
+        cands = _vmap_candidates(views, r, loads, problem.speeds, problem.mu,
+                                 total_b, machine, framework, cost_fn)
+        winner = protocol.elect(cands, tol)
+        r, loads = protocol.apply_move(r, loads, winner, machine)
+        idle = jnp.where(winner.moved, 0, idle + 1)
+        return (r, loads, (machine + 1) % k, idle, turns + 1,
+                moves + winner.moved.astype(jnp.int32))
+
+    init = (state0.assignment, state0.loads, jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    r, loads, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
+    return RefineResult(assignment=r, loads=loads, num_moves=moves,
+                        num_turns=turns, converged=idle >= k)
+
+
+@partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
+                                   "cost_fn"))
+def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
+                              framework: str = costs.C_FRAMEWORK,
+                              num_shards: int | None = None,
+                              max_turns: int = 512,
+                              tol: float = DEFAULT_TOL,
+                              cost_fn: str = "jnp"):
+    """Fixed-length traced variant; returns ``(RefineResult, Trace)`` with
+    the exact semantics (and, in sequential mode, the exact move sequence)
+    of :func:`repro.core.refine.refine_traced`.
+
+    The potentials in the trace are assembled from per-shard partials
+    (O(1) + O(K) per shard per turn — see accounting.py), not from any
+    global gather of node state.
+    """
+    k = problem.num_machines
+    s = _resolve_shards(problem, num_shards)
+    views = build_views(problem, s)
+    state0 = make_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+
+    def step(carry, _):
+        r, loads, machine, idle = carry
+        active = idle < k
+        cands = _vmap_candidates(views, r, loads, problem.speeds, problem.mu,
+                                 total_b, machine, framework, cost_fn)
+        winner = protocol.elect(cands, tol)
+        new_r, new_loads = protocol.apply_move(r, loads, winner, machine)
+        new_r = jnp.where(active, new_r, r)
+        new_loads = jnp.where(active, new_loads, loads)
+        moved = winner.moved & active
+        idle = jnp.where(moved, 0, idle + 1)
+        c0, ct0 = _vmap_potentials(views, new_r, problem.speeds, problem.mu,
+                                   total_b, k)
+        out = Trace(
+            moved=moved,
+            node=jnp.where(winner.moved, winner.node, -1),
+            source=jnp.where(winner.moved, machine, -1),
+            dest=jnp.where(winner.moved, winner.dest, -1),
+            gain=jnp.where(winner.moved, winner.gain, 0.0),
+            c0=c0, ct0=ct0, active=active)
+        return (new_r, new_loads, (machine + 1) % k, idle), out
+
+    init = (state0.assignment, state0.loads, jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    (r, loads, _, idle), trace = jax.lax.scan(step, init, None,
+                                              length=max_turns)
+    moves = jnp.sum(trace.moved.astype(jnp.int32))
+    turns = jnp.sum(trace.active.astype(jnp.int32))
+    result = RefineResult(assignment=r, loads=loads, num_moves=moves,
+                          num_turns=turns, converged=idle >= k)
+    return result, trace
+
+
+# ---------------------------------------------------------------------------
+# §4.5 simultaneous sweeps, distributed
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("framework", "num_shards", "max_sweeps",
+                                   "cost_fn"))
+def refine_distributed_simultaneous(problem: PartitionProblem,
+                                    assignment: Array,
+                                    framework: str = costs.C_FRAMEWORK,
+                                    num_shards: int | None = None,
+                                    max_sweeps: int = 256,
+                                    tol: float = DEFAULT_TOL,
+                                    cost_fn: str = "jnp"):
+    """Distributed §4.5 sweeps: each shard ships K candidates per sweep
+    (one per machine), elections run per machine, all K disjoint moves
+    apply at once.  Exchange per sweep: S*K candidates + S load partials —
+    still independent of N."""
+    k = problem.num_machines
+    s = _resolve_shards(problem, num_shards)
+    views = build_views(problem, s)
+    state0 = make_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+    shard_cost = _shard_cost_fn(cost_fn)
+
+    def sweep(carry, _):
+        r, loads, done = carry
+        cands = jax.vmap(
+            lambda rb, b, ids, v: protocol.local_candidates_all_machines(
+                rb, b, ids, v, r, loads, problem.speeds, problem.mu,
+                total_b, framework, cost_matrix_fn=shard_cost)
+        )(views.row_block, views.weights, views.ids, views.valid)  # (S, K)
+        winners = jax.vmap(protocol.elect, in_axes=(1, None),
+                           out_axes=0)(cands, tol)                 # (K,)
+        any_move = jnp.any(winners.moved) & ~done
+        # Idle machines elect a fallback candidate (all gains -inf) whose
+        # node id may collide with a real move — drop their writes instead
+        # of racing the real update (mirrors core refine_simultaneous).
+        safe_picks = jnp.where(winners.moved, winners.node,
+                               jnp.int32(problem.num_nodes))
+        new_r = r.at[safe_picks].set(winners.dest, mode="drop")
+        new_r = jnp.where(any_move, new_r, r)
+        load_partials = jax.vmap(
+            lambda b, ids, v: protocol.shard_load_partial(b, ids, v, new_r, k)
+        )(views.weights, views.ids, views.valid)
+        new_loads = jnp.sum(load_partials, axis=0)
+        c0, ct0 = _vmap_potentials(views, new_r, problem.speeds, problem.mu,
+                                   total_b, k, fresh_loads=new_loads)
+        return (new_r, new_loads, done | ~any_move), (c0, ct0, any_move)
+
+    (r, loads, done), (c0s, ct0s, active) = jax.lax.scan(
+        sweep, (state0.assignment, state0.loads, jnp.zeros((), bool)),
+        None, length=max_sweeps)
+    result = RefineResult(
+        assignment=r, loads=loads,
+        num_moves=jnp.sum(active.astype(jnp.int32)) * k,   # upper bound
+        num_turns=jnp.sum(active.astype(jnp.int32)),
+        converged=done)
+    return result, (c0s, ct0s, active)
+
+
+# ---------------------------------------------------------------------------
+# Real-mesh driver: shard_map + lax.all_gather
+# ---------------------------------------------------------------------------
+
+def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
+                                 framework: str = costs.C_FRAMEWORK,
+                                 num_shards: int | None = None,
+                                 max_turns: int = 10_000,
+                                 tol: float = DEFAULT_TOL,
+                                 devices=None) -> RefineResult:
+    """Sequential-turn refinement with each shard on its own device.
+
+    Row blocks are placed along a 1-D ``Mesh`` axis ``"shards"``; the
+    per-turn exchange is a real ``lax.all_gather`` of the 16-byte
+    candidates; every device then elects/applies the identical delta to
+    its replicated mirror (``check_rep=False`` because the replication
+    invariant is ours, established by construction, not inferable by the
+    partitioner).  Requires ``num_shards`` addressable devices — the bench
+    forces a multi-device host platform via ``XLA_FLAGS``; on one device
+    it degenerates to a 1-shard mesh (still the collective code path).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    k = problem.num_machines
+    if devices is None:
+        devices = jax.devices()
+    s = _resolve_shards(problem, num_shards)
+    if len(devices) < s:
+        raise ValueError(
+            f"refine_distributed_shard_map: need {s} devices for {s} shards "
+            f"but only {len(devices)} are available; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={s} or use "
+            f"the emulated refine_distributed driver")
+    mesh = Mesh(np.asarray(devices[:s]), ("shards",))
+    views = build_views(problem, s)
+    state0 = make_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+
+    def spmd(rb, b, ids, valid, r0, loads0, speeds, mu, tot):
+        rb, b, ids, valid = rb[0], b[0], ids[0], valid[0]
+
+        def cond(carry):
+            _, _, _, idle, turns, _ = carry
+            return (idle < k) & (turns < max_turns)
+
+        def body(carry):
+            r, loads, machine, idle, turns, moves = carry
+            cand = protocol.local_candidate(
+                rb, b, ids, valid, r, loads, speeds, mu, tot, machine,
+                framework)
+            cands = protocol.Candidate(
+                gain=jax.lax.all_gather(cand.gain, "shards"),
+                node=jax.lax.all_gather(cand.node, "shards"),
+                dest=jax.lax.all_gather(cand.dest, "shards"),
+                weight=jax.lax.all_gather(cand.weight, "shards"))
+            winner = protocol.elect(cands, tol)
+            r, loads = protocol.apply_move(r, loads, winner, machine)
+            idle = jnp.where(winner.moved, 0, idle + 1)
+            return (r, loads, (machine + 1) % k, idle, turns + 1,
+                    moves + winner.moved.astype(jnp.int32))
+
+        init = (r0, loads0, jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32))
+        r, loads, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
+        return r, loads, moves, turns, idle >= k
+
+    sharded = P("shards")
+    rep = P()
+    fn = shard_map(spmd, mesh=mesh,
+                   in_specs=(sharded, sharded, sharded, sharded,
+                             rep, rep, rep, rep, rep),
+                   out_specs=(rep, rep, rep, rep, rep),
+                   check_rep=False)
+    r, loads, moves, turns, converged = jax.jit(fn)(
+        views.row_block, views.weights, views.ids, views.valid,
+        state0.assignment, state0.loads, problem.speeds, problem.mu, total_b)
+    return RefineResult(assignment=r, loads=loads, num_moves=moves,
+                        num_turns=turns, converged=converged)

@@ -1,0 +1,134 @@
+"""Per-machine local views of the partition game (DESIGN.md §9.1).
+
+The distributed runtime statically shards the *node arrays* into S
+contiguous blocks: shard s owns rows ``[s*Ns, (s+1)*Ns)`` of the adjacency
+matrix, the matching slice of node weights, and nothing else.  Everything a
+shard needs beyond its block is either
+
+  * replicated O(K) state (the machine-load vector, machine speeds, mu,
+    the global weight total B) kept fresh by the O(K) per-turn deltas of
+    :mod:`~repro.distributed.protocol`, or
+  * the assignment mirror, initialized once (O(boundary) ghost sync — a
+    shard only ever *reads* the assignment of nodes adjacent to its own,
+    see :func:`boundary_stats`) and thereafter maintained by the O(1)
+    per-turn move broadcasts.
+
+Static sharding by node id — rather than re-homing node data to whichever
+machine currently owns the node in the *game* sense — keeps every array
+shape fixed (JAX-friendly, no dynamic migration of adjacency rows) while
+preserving the paper's protocol: the per-turn exchange stays O(K),
+independent of N.  The game-owner of a node is a *value* (the assignment
+vector), not a storage location.
+
+Padding: only the row dimension is padded (to ``ceil(N/S)`` rows per
+shard).  The contraction dimension of the per-shard aggregate matmul stays
+exactly N so shard-local cost rows are bitwise identical to the rows the
+single-controller :func:`repro.core.costs.cost_matrix` computes — the
+property the move-sequence equivalence test relies on.  Padded rows carry
+zero adjacency and zero weight, and are masked out of candidate selection
+via ``valid``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.problem import PartitionProblem
+
+Array = jax.Array
+
+
+class ShardViews(NamedTuple):
+    """Stacked per-shard local state; leading axis = shard index.
+
+    In the emulated driver the stack lives on one device and shards are
+    mapped with ``vmap``; in the ``shard_map`` driver the leading axis is
+    sharded across the device mesh so each device holds exactly its block.
+    """
+    row_block: Array   # (S, Ns, N) float — adjacency rows owned by shard
+    weights: Array     # (S, Ns) float — b_i of owned rows (0 for padding)
+    ids: Array         # (S, Ns) int32 — global node ids (clamped to N-1
+                       #                 for padding; see ``valid``)
+    valid: Array       # (S, Ns) bool — False for padded rows
+
+    @property
+    def num_shards(self) -> int:
+        return self.row_block.shape[0]
+
+    @property
+    def shard_size(self) -> int:
+        return self.row_block.shape[1]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.row_block.shape[2]
+
+
+def build_views(problem: PartitionProblem, num_shards: int) -> ShardViews:
+    """Slice ``problem`` into S contiguous row-block shards (row-padded)."""
+    n = problem.num_nodes
+    if not 1 <= num_shards <= n:
+        raise ValueError(f"num_shards={num_shards} must be in [1, {n}]")
+    ns = -(-n // num_shards)                    # rows per shard (ceil)
+    npad = ns * num_shards
+    rows = jnp.zeros((npad, n), problem.adjacency.dtype)
+    rows = rows.at[:n].set(problem.adjacency)
+    weights = jnp.zeros((npad,), problem.node_weights.dtype)
+    weights = weights.at[:n].set(problem.node_weights)
+    ids = jnp.minimum(jnp.arange(npad, dtype=jnp.int32), n - 1)
+    valid = jnp.arange(npad) < n
+    return ShardViews(
+        row_block=rows.reshape(num_shards, ns, n),
+        weights=weights.reshape(num_shards, ns),
+        ids=ids.reshape(num_shards, ns),
+        valid=valid.reshape(num_shards, ns),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryStats:
+    """Host-side ghost/boundary summary per shard (powers accounting).
+
+    ``boundary_nodes[s]`` — owned nodes with at least one edge leaving the
+    shard; ``ghost_nodes[s]`` — off-shard nodes adjacent to the shard (the
+    assignment entries shard s actually has to mirror); ``cross_edges[s]``
+    — edges from shard s to any other shard.
+    """
+    num_shards: int
+    num_nodes: int
+    boundary_nodes: np.ndarray   # (S,) int64
+    ghost_nodes: np.ndarray      # (S,) int64
+    cross_edges: np.ndarray      # (S,) int64
+
+    @property
+    def total_ghosts(self) -> int:
+        return int(self.ghost_nodes.sum())
+
+    @property
+    def total_boundary(self) -> int:
+        return int(self.boundary_nodes.sum())
+
+
+def boundary_stats(problem: PartitionProblem, num_shards: int) -> BoundaryStats:
+    """Compute the ghost/boundary structure of a static contiguous sharding."""
+    adj = np.asarray(problem.adjacency) > 0
+    n = adj.shape[0]
+    ns = -(-n // num_shards)
+    shard_of = np.minimum(np.arange(n) // ns, num_shards - 1)
+    boundary = np.zeros(num_shards, np.int64)
+    ghosts = np.zeros(num_shards, np.int64)
+    cross = np.zeros(num_shards, np.int64)
+    for s in range(num_shards):
+        mine = shard_of == s
+        out_edges = adj[mine][:, ~mine]
+        boundary[s] = int(np.sum(out_edges.any(axis=1)))
+        ghosts[s] = int(np.sum(adj[mine].any(axis=0) & ~mine))
+        cross[s] = int(out_edges.sum())
+    return BoundaryStats(num_shards=num_shards, num_nodes=n,
+                         boundary_nodes=boundary, ghost_nodes=ghosts,
+                         cross_edges=cross)

@@ -78,33 +78,55 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
                        framework: str = "c", *,
                        tile_n: int = DEFAULT_TILE_N,
                        tile_j: int = DEFAULT_TILE_J,
-                       interpret: bool = True) -> Array:
-    """Padded + tiled pallas_call; returns the (N, K) cost matrix.
+                       interpret: bool = True,
+                       row_assignment: Array | None = None,
+                       total_weight: Array | None = None) -> Array:
+    """Padded + tiled pallas_call; returns the (rows, K) cost matrix.
+
+    ``adjacency`` may be rectangular: a ``(rows, N)`` row block of a larger
+    graph, as produced by :mod:`repro.distributed.views` — the grid tiles
+    rows and columns independently and the contraction runs over the full
+    column extent, so each machine of the distributed runtime can drive
+    this same kernel on nothing but its shard.  In the row-block case pass
+    ``row_assignment`` (length ``rows``, the block nodes' own machines;
+    ``assignment`` then covers the N *columns*), ``node_weights`` of length
+    ``rows``, and ``total_weight`` = the global sum of b (the Ct framework
+    needs B, which a row block cannot compute locally).  Square callers
+    keep the original signature: both default to ``assignment`` /
+    ``sum(node_weights)``.
 
     ``interpret=True`` executes the kernel body in Python on CPU (this
     container has no TPU); on real hardware pass interpret=False.
     """
-    n = adjacency.shape[0]
+    n_rows, n_cols = adjacency.shape
     k = loads.shape[0]
-    n_pad = -(-n // tile_n) * tile_n
-    j_pad = -(-n // tile_j) * tile_j
-    npad = max(n_pad, j_pad)
+    if row_assignment is None:
+        row_assignment = assignment
+    if total_weight is None:
+        total_weight = jnp.sum(node_weights)
+    rows_pad = -(-n_rows // tile_n) * tile_n
+    cols_pad = -(-n_cols // tile_j) * tile_j
     k_pad = -(-k // 128) * 128
 
-    c = jnp.zeros((npad, npad), adjacency.dtype).at[:n, :n].set(adjacency)
-    # padded columns point at a padded machine so they never pollute real K
-    r = jnp.full((1, npad), k_pad - 1, jnp.int32).at[0, :n].set(
+    c = jnp.zeros((rows_pad, cols_pad), adjacency.dtype)
+    c = c.at[:n_rows, :n_cols].set(adjacency)
+    # padded rows/columns point at a padded machine so they never pollute
+    # real K (and padded rows carry zero weight)
+    r_cols = jnp.full((1, cols_pad), k_pad - 1, jnp.int32).at[0, :n_cols].set(
         jnp.asarray(assignment, jnp.int32))
-    b = jnp.zeros((1, npad), jnp.float32).at[0, :n].set(
+    r_rows = jnp.full((1, rows_pad), k_pad - 1, jnp.int32).at[0, :n_rows].set(
+        jnp.asarray(row_assignment, jnp.int32))
+    b = jnp.zeros((1, rows_pad), jnp.float32).at[0, :n_rows].set(
         node_weights.astype(jnp.float32))
     l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
         loads.astype(jnp.float32))
     w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
         speeds.astype(jnp.float32))
-    scalars = jnp.array([[mu, jnp.sum(node_weights)]], jnp.float32)
+    scalars = jnp.stack([jnp.asarray(mu, jnp.float32),
+                         jnp.asarray(total_weight, jnp.float32)])[None, :]
 
-    num_i = npad // tile_n
-    num_j = npad // tile_j
+    num_i = rows_pad // tile_n
+    num_j = cols_pad // tile_j
     out = pl.pallas_call(
         functools.partial(_kernel, framework=framework, num_j=num_j),
         grid=(num_i, num_j),
@@ -118,8 +140,8 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
             pl.BlockSpec((1, 2), lambda i, j: (0, 0)),             # mu, B
         ],
         out_specs=pl.BlockSpec((tile_n, k_pad), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((npad, k_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, k_pad), jnp.float32),
         scratch_shapes=[pltpu.VMEM((tile_n, k_pad), jnp.float32)],
         interpret=interpret,
-    )(c, r, r, b, l_pad, w_pad, scalars)
-    return out[:n, :k]
+    )(c, r_cols, r_rows, b, l_pad, w_pad, scalars)
+    return out[:n_rows, :k]

@@ -1,0 +1,110 @@
+"""partitioners/baselines.py — the §2 comparison heuristics.
+
+These are numpy reference implementations measured against the game; the
+tests pin their contracts: valid assignments, the objective each one
+claims to improve actually improves, and determinism where promised.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.generators import random_degree_graph, random_weights
+from repro.partitioners.baselines import (greedy_load_partition,
+                                          kernighan_lin_refine,
+                                          nandy_loucks_refine,
+                                          random_partition,
+                                          spectral_bisection)
+
+
+def _cut(adj: np.ndarray, r: np.ndarray) -> float:
+    return 0.5 * float(np.sum(adj * (r[:, None] != r[None, :])))
+
+
+def _setup(n=60, k=4, seed=0):
+    adj = random_degree_graph(n, seed=seed, dmin=2, dmax=4)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    return np.asarray(c), np.asarray(b)
+
+
+def test_random_partition_valid_and_deterministic():
+    r1 = random_partition(100, 5, seed=7)
+    r2 = random_partition(100, 5, seed=7)
+    np.testing.assert_array_equal(r1, r2)
+    assert r1.shape == (100,) and r1.dtype == np.int32
+    assert r1.min() >= 0 and r1.max() < 5
+    # every machine used with overwhelming probability at n=100, k=5
+    assert len(np.unique(r1)) == 5
+
+
+def test_greedy_load_partition_balances_weighted_load():
+    _, b = _setup(n=80, k=4, seed=3)
+    speeds = np.array([1.0, 1.0, 2.0, 4.0])
+    r = greedy_load_partition(b, speeds)
+    assert r.shape == b.shape and r.min() >= 0 and r.max() < 4
+    loads = np.bincount(r, weights=b, minlength=4)
+    # LPT guarantee: max normalized load within max-item of the mean
+    norm = loads / speeds
+    ideal = b.sum() / speeds.sum()
+    assert norm.max() <= ideal + b.max()
+    # the 4x machine must carry more than a 1x machine
+    assert loads[3] > loads[0]
+
+
+def test_greedy_load_beats_random_on_imbalance():
+    _, b = _setup(n=100, k=5, seed=5)
+    speeds = np.ones(5)
+    greedy = np.bincount(greedy_load_partition(b, speeds), weights=b,
+                         minlength=5)
+    rand = np.bincount(random_partition(100, 5, seed=1), weights=b,
+                       minlength=5)
+    assert greedy.max() - greedy.min() <= rand.max() - rand.min()
+
+
+def test_kernighan_lin_never_increases_cut():
+    adj, b = _setup(n=50, k=3, seed=1)
+    r0 = random_partition(50, 3, seed=2)
+    r = kernighan_lin_refine(adj, r0)
+    assert r.shape == r0.shape
+    assert r.min() >= 0 and r.max() < 3
+    assert _cut(adj, r) <= _cut(adj, r0) + 1e-6
+    # pair swaps preserve part cardinalities exactly
+    np.testing.assert_array_equal(np.bincount(r, minlength=3),
+                                  np.bincount(r0, minlength=3))
+
+
+def test_spectral_bisection_separates_disconnected_cliques():
+    """Two disconnected 8-cliques: the Fiedler split must put each clique
+    in its own part (cut 0)."""
+    adj = np.zeros((16, 16))
+    adj[:8, :8] = 1.0
+    adj[8:, 8:] = 1.0
+    np.fill_diagonal(adj, 0.0)
+    r = spectral_bisection(adj, 2)
+    assert set(np.unique(r)) == {0, 1}
+    assert _cut(adj, r) == 0.0
+    assert len(set(r[:8])) == 1 and len(set(r[8:])) == 1
+
+
+def test_spectral_bisection_k4_covers_all_parts():
+    adj, _ = _setup(n=64, k=4, seed=9)
+    r = spectral_bisection(adj, 4)
+    assert set(np.unique(r)) == {0, 1, 2, 3}
+    counts = np.bincount(r, minlength=4)
+    assert counts.min() >= 8          # median splits keep parts near-even
+
+
+def test_nandy_loucks_never_increases_cut_and_terminates():
+    adj, _ = _setup(n=40, k=3, seed=4)
+    r0 = random_partition(40, 3, seed=5)
+    r = nandy_loucks_refine(adj, r0)
+    assert r.shape == r0.shape and r.min() >= 0 and r.max() < 3
+    assert _cut(adj, r) <= _cut(adj, r0) + 1e-6
+    # forced convergence: at most one migration per node
+    assert int(np.sum(r != r0)) <= 40
+
+
+def test_nandy_loucks_fixed_point_under_no_gain():
+    """A zero-adjacency graph has no cut gain anywhere: nothing moves."""
+    r0 = random_partition(20, 4, seed=8)
+    r = nandy_loucks_refine(np.zeros((20, 20)), r0)
+    np.testing.assert_array_equal(r, r0)

@@ -1,0 +1,347 @@
+"""repro.distributed — the sharded O(K)-exchange refinement runtime.
+
+The load-bearing claims:
+  * sequential-turn distributed refinement reproduces the single
+    controller's move sequence EXACTLY (same turn order, same nodes, same
+    destinations, bitwise-equal gains) and lands on the identical final
+    assignment — for any shard count and both cost frameworks;
+  * each framework's own global potential is non-increasing across rounds;
+  * the per-round inter-machine payload carries no O(N) term (flat as N
+    grows at fixed K — the paper's central scalability claim);
+  * the real shard_map/all_gather driver agrees with the emulated one
+    (single-device in-process, multi-device via a subprocess that forces
+    a 4-device host platform — the main test process must stay 1-device).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.problem import make_problem, make_state
+from repro.core.refine import refine, refine_simultaneous, refine_traced
+from repro.distributed import (boundary_stats, build_views, ledger_for_run,
+                               refine_distributed,
+                               refine_distributed_shard_map,
+                               refine_distributed_simultaneous,
+                               refine_distributed_traced)
+from repro.distributed import accounting, protocol
+from repro.graphs.generators import random_degree_graph, random_weights
+
+
+def _problem(n=120, k=5, seed=0, mu=8.0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    speeds = [0.1, 0.2, 0.3, 0.3, 0.1][:k]
+    prob = make_problem(c, b, speeds, mu=mu)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+# ---------------------------------------------------------------------------
+# views
+# ---------------------------------------------------------------------------
+
+def test_views_partition_and_padding():
+    prob, _ = _problem(n=50, k=5)
+    views = build_views(prob, 4)                     # 50 -> 4 shards of 13
+    assert views.row_block.shape == (4, 13, 50)
+    assert int(jnp.sum(views.valid)) == 50
+    # row blocks reassemble to the adjacency (padding rows are zero)
+    flat = views.row_block.reshape(52, 50)
+    np.testing.assert_array_equal(np.asarray(flat[:50]),
+                                  np.asarray(prob.adjacency))
+    np.testing.assert_array_equal(np.asarray(flat[50:]), 0.0)
+    # weights of padded rows are zero; valid ids cover 0..N-1 exactly once
+    assert float(jnp.sum(views.weights)) == pytest.approx(
+        float(jnp.sum(prob.node_weights)), rel=1e-6)
+    ids = np.asarray(views.ids)[np.asarray(views.valid)]
+    np.testing.assert_array_equal(np.sort(ids), np.arange(50))
+
+
+def test_boundary_stats_two_cliques():
+    """Two 4-cliques joined by one edge, split at the clique boundary:
+    exactly one boundary node / one ghost / one cross edge per shard."""
+    adj = np.zeros((8, 8))
+    adj[:4, :4] = 1.0
+    adj[4:, 4:] = 1.0
+    np.fill_diagonal(adj, 0.0)
+    adj[3, 4] = adj[4, 3] = 1.0
+    prob = make_problem(adj, np.ones(8), np.ones(2), mu=1.0)
+    stats = boundary_stats(prob, 2)
+    np.testing.assert_array_equal(stats.boundary_nodes, [1, 1])
+    np.testing.assert_array_equal(stats.ghost_nodes, [1, 1])
+    np.testing.assert_array_equal(stats.cross_edges, [1, 1])
+    assert stats.total_ghosts == 2
+
+
+def test_shard_cost_rows_bitwise_equal_controller():
+    """The shard-local cost rows ARE the controller's cost-matrix rows."""
+    prob, r0 = _problem(n=60, k=5, seed=3)
+    state = make_state(prob, r0)
+    total_b = jnp.sum(prob.node_weights)
+    views = build_views(prob, 3)
+    for fw in costs.FRAMEWORKS:
+        full = np.asarray(costs.cost_matrix(prob, state, fw))
+        for s in range(3):
+            valid = np.asarray(views.valid[s])
+            block = protocol.shard_cost_matrix(
+                views.row_block[s], r0[views.ids[s]], views.weights[s], r0,
+                state.loads, prob.speeds, prob.mu, total_b, fw)
+            ids = np.asarray(views.ids[s])[valid]
+            np.testing.assert_array_equal(np.asarray(block)[valid], full[ids])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: identical move sequence + non-increasing potentials
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+@pytest.mark.parametrize("num_shards", [1, 3, 5])
+def test_sequential_move_sequence_identical(framework, num_shards,
+                                            paper_problem):
+    """Same problem/seed: the distributed sequential-turn runtime produces
+    the identical move sequence and final assignment as refine_traced."""
+    adj, prob = paper_problem
+    r0 = jnp.asarray(np.random.default_rng(42).integers(
+        0, prob.num_machines, prob.num_nodes), jnp.int32)
+    ref_res, ref_tr = refine_traced(prob, r0, framework, max_turns=600)
+    res, tr = refine_distributed_traced(prob, r0, framework,
+                                        num_shards=num_shards, max_turns=600)
+    np.testing.assert_array_equal(np.asarray(ref_tr.moved),
+                                  np.asarray(tr.moved))
+    np.testing.assert_array_equal(np.asarray(ref_tr.node), np.asarray(tr.node))
+    np.testing.assert_array_equal(np.asarray(ref_tr.source),
+                                  np.asarray(tr.source))
+    np.testing.assert_array_equal(np.asarray(ref_tr.dest), np.asarray(tr.dest))
+    np.testing.assert_array_equal(np.asarray(ref_tr.gain), np.asarray(tr.gain))
+    np.testing.assert_array_equal(np.asarray(ref_res.assignment),
+                                  np.asarray(res.assignment))
+    assert int(ref_res.num_moves) == int(res.num_moves)
+    assert bool(res.converged)
+
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+def test_potentials_non_increasing(framework, paper_problem):
+    """Both potentials are recorded; the framework's OWN potential never
+    increases across rounds (Thm 4.1 descent, distributed)."""
+    adj, prob = paper_problem
+    r0 = jnp.asarray(np.random.default_rng(7).integers(
+        0, prob.num_machines, prob.num_nodes), jnp.int32)
+    res, tr = refine_distributed_traced(prob, r0, framework, num_shards=5,
+                                        max_turns=600)
+    own = np.asarray(tr.c0 if framework == costs.C_FRAMEWORK else tr.ct0)
+    active = np.asarray(tr.active)
+    init = float(costs.global_cost(prob, r0, framework))
+    prev = np.concatenate([[init], own[:-1]])
+    ok = own[active] <= prev[active] + 1e-5 * np.abs(prev[active])
+    assert ok.all(), f"potential ascended at turns {np.flatnonzero(~ok)}"
+    # the potentials match the controller's definition at the fixed point
+    np.testing.assert_allclose(
+        own[active][-1], float(costs.global_cost(prob, res.assignment,
+                                                 framework)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("num_shards", [2, 5])
+def test_while_loop_driver_matches_core_refine(num_shards, paper_problem):
+    adj, prob = paper_problem
+    r0 = jnp.asarray(np.random.default_rng(11).integers(
+        0, prob.num_machines, prob.num_nodes), jnp.int32)
+    ref = refine(prob, r0, costs.C_FRAMEWORK)
+    res = refine_distributed(prob, r0, costs.C_FRAMEWORK,
+                             num_shards=num_shards)
+    np.testing.assert_array_equal(np.asarray(ref.assignment),
+                                  np.asarray(res.assignment))
+    assert int(ref.num_moves) == int(res.num_moves)
+    assert int(ref.num_turns) == int(res.num_turns)
+    np.testing.assert_allclose(np.asarray(ref.loads), np.asarray(res.loads))
+
+
+def test_refine_distributed_pallas_cost_path():
+    """cost_fn="pallas" routes shard cost rows through the fused kernel;
+    the equilibrium agrees with the jnp path (kernel is float-close, not
+    bitwise, so we compare outcomes rather than move traces)."""
+    prob, r0 = _problem(n=48, k=3, seed=9, mu=4.0)
+    jnp_res = refine_distributed(prob, r0, "c", num_shards=3)
+    pl_res = refine_distributed(prob, r0, "c", num_shards=3,
+                                cost_fn="pallas")
+    assert bool(pl_res.converged)
+    np.testing.assert_allclose(
+        float(costs.global_cost_c0(prob, pl_res.assignment)),
+        float(costs.global_cost_c0(prob, jnp_res.assignment)), rtol=1e-3)
+
+
+def test_simultaneous_sweep_mode(paper_problem):
+    """§4.5 distributed sweeps descend far below the initial cost and agree
+    with the single-controller sweep mode (loads are reduced from shard
+    partials, so agreement is float-close, not bitwise)."""
+    adj, prob = paper_problem
+    r0 = jnp.asarray(np.random.default_rng(5).integers(
+        0, prob.num_machines, prob.num_nodes), jnp.int32)
+    ref, (rc0, _, ract) = refine_simultaneous(prob, r0, costs.C_FRAMEWORK)
+    res, (c0s, ct0s, active) = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=3)
+    assert float(costs.global_cost_c0(prob, res.assignment)) < \
+        float(costs.global_cost_c0(prob, r0))
+    np.testing.assert_allclose(float(c0s[-1]), float(rc0[-1]), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shard_map driver
+# ---------------------------------------------------------------------------
+
+def test_shard_map_single_device(paper_problem):
+    """The collective code path on a 1-device mesh (all this process has)."""
+    adj, prob = paper_problem
+    r0 = jnp.asarray(np.random.default_rng(1).integers(
+        0, prob.num_machines, prob.num_nodes), jnp.int32)
+    ref = refine(prob, r0, costs.C_FRAMEWORK)
+    res = refine_distributed_shard_map(prob, r0, costs.C_FRAMEWORK,
+                                       num_shards=1)
+    np.testing.assert_array_equal(np.asarray(ref.assignment),
+                                  np.asarray(res.assignment))
+    assert int(ref.num_moves) == int(res.num_moves)
+
+
+def test_shard_map_requires_enough_devices():
+    prob, r0 = _problem(n=24, k=3, seed=0)
+    if len(jax.devices()) >= 3:
+        pytest.skip("test requires a 1-device process")
+    with pytest.raises(ValueError, match="need 3 devices"):
+        refine_distributed_shard_map(prob, r0, num_shards=3)
+
+
+def test_shard_map_multi_device_subprocess():
+    """Real 4-device all_gather exchange == single controller.  Runs in a
+    subprocess because the forced host-platform device count must be set
+    before jax initializes (this process must stay 1-device)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import numpy as np, jax, jax.numpy as jnp
+        assert len(jax.devices()) == 4
+        from repro.core.problem import make_problem
+        from repro.core.refine import refine
+        from repro.graphs.generators import random_degree_graph, random_weights
+        from repro.distributed import refine_distributed_shard_map
+        adj = random_degree_graph(64, seed=0)
+        b, c = random_weights(adj, seed=1, mean=5.0)
+        prob = make_problem(c, b, [0.2, 0.3, 0.5], mu=4.0)
+        r0 = jnp.asarray(np.random.default_rng(0).integers(0, 3, 64), jnp.int32)
+        ref = refine(prob, r0, "c")
+        res = refine_distributed_shard_map(prob, r0, "c", num_shards=4)
+        assert bool(jnp.all(ref.assignment == res.assignment)), "assignment"
+        assert int(ref.num_moves) == int(res.num_moves), "moves"
+        assert bool(res.converged)
+        print("SHARD_MAP_OK")
+    """)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_MAP_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# accounting: the O(K + boundary) bound
+# ---------------------------------------------------------------------------
+
+def test_per_round_payload_independent_of_n():
+    """Per-round bytes at fixed K/S are FLAT as N scales 4x (acceptance:
+    within 2x; the protocol makes them exactly equal)."""
+    per_round = []
+    for n in (64, 256, 1024):
+        adj = random_degree_graph(n, seed=1)
+        b, c = random_weights(adj, seed=2, mean=5.0)
+        prob = make_problem(c, b, np.ones(4) / 4, mu=8.0)
+        r0 = jnp.asarray(np.random.default_rng(3).integers(0, 4, n),
+                         jnp.int32)
+        res = refine_distributed(prob, r0, "c", num_shards=4, max_turns=512)
+        led = ledger_for_run(boundary_stats(prob, 4), 4,
+                             rounds=int(res.num_turns))
+        assert led.rounds > 0
+        per_round.append(led.per_round_bytes)
+    assert max(per_round) <= 2.0 * min(per_round), per_round
+    # ... while the naive re-broadcast strawman grows linearly with N
+    naive = [accounting.naive_broadcast_bytes(n, 4) for n in (64, 1024)]
+    assert naive[1] == 16 * naive[0]
+
+
+def test_ledger_formulas():
+    s, k = 4, 5
+    assert accounting.turn_payload_bytes(s, k) == s * 16
+    assert accounting.turn_payload_bytes(s, k, traced=True) \
+        == s * (16 + 8 + 4 * k)
+    assert accounting.sweep_payload_bytes(s, k) == s * (k * 16 + 4 * k)
+    prob, _ = _problem(n=40, k=5, seed=4)
+    stats = boundary_stats(prob, s)
+    led = ledger_for_run(stats, k, rounds=10, traced=True)
+    assert led.candidate_bytes == 10 * s * 16
+    assert led.trace_bytes == 10 * s * (8 + 4 * k)
+    assert led.ghost_sync_bytes == 8 * stats.total_ghosts
+    assert led.total_bytes == (led.candidate_bytes + led.trace_bytes
+                               + led.ghost_sync_bytes + led.setup_bytes)
+    assert "B/round" in led.summary()
+
+
+# ---------------------------------------------------------------------------
+# DES engine integration
+# ---------------------------------------------------------------------------
+
+def test_des_engine_distributed_backend():
+    """refine_backend="distributed" reproduces the single-controller DES
+    run exactly (the sharded protocol is move-for-move identical)."""
+    from repro.des.engine import (DESConfig, make_initial_state,
+                                  run_simulation)
+    from repro.des.workload import flooded_packet_workload
+
+    n, t = 24, 6
+    adj = random_degree_graph(n, seed=1, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 11, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    m0 = jnp.arange(n, dtype=jnp.int32) % 3
+    outs = {}
+    for backend in ("single", "distributed"):
+        cfg = DESConfig(num_lps=n, num_machines=3, num_threads=t,
+                        event_capacity=32, history_capacity=64,
+                        refine_freq=150, max_ticks=40_000,
+                        refine_backend=backend)
+        state = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
+        outs[backend] = run_simulation(cfg, jnp.asarray(adj, jnp.float32),
+                                       state)
+    a, b_ = outs["single"], outs["distributed"]
+    assert bool(a.done) and bool(b_.done)
+    assert int(b_.refines) > 0
+    np.testing.assert_array_equal(np.asarray(a.machine),
+                                  np.asarray(b_.machine))
+    assert int(a.moves) == int(b_.moves)
+    assert int(a.tick) == int(b_.tick)
+
+
+def test_des_engine_rejects_unknown_backend():
+    from repro.des.engine import (DESConfig, make_initial_state,
+                                  run_simulation)
+    from repro.des.workload import flooded_packet_workload
+
+    n, t = 12, 2
+    adj = random_degree_graph(n, seed=2, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 3, num_threads=t, scope=1,
+                                   max_per_lp=2)
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                    refine_freq=50, refine_backend="nope")
+    state = make_initial_state(cfg, jnp.zeros(n, jnp.int32), spec.src,
+                               spec.time, spec.count)
+    with pytest.raises(ValueError, match="refine_backend"):
+        run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)

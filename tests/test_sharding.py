@@ -24,10 +24,19 @@ from repro.models import init_params
 from repro.sharding import rules
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: 0.4.37 takes ((name, size), ...);
+    newer releases take (axis_sizes, axis_names)."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def _abstract_production_mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def _axis_size(mesh, axis):
