@@ -1,11 +1,33 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 import jax
+
+# BENCH_*.json files land in the repo root so the perf trajectory is
+# tracked across PRs next to the sources that produced it.
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(name: str, payload) -> str:
+    """Persist a suite's machine-readable results as BENCH_<name>.json."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    doc = {
+        "bench": name,
+        "unix_time": time.time(),
+        "backend": jax.default_backend(),
+        "results": payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[bench results -> {path}]")
+    return path
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):

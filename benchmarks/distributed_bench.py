@@ -45,6 +45,7 @@ def run(quick: bool = False):
     k = 8
     sizes = [256, 1024] if quick else [256, 1024, 4096]
     max_turns = 2048
+    payload = {"wall_clock": [], "exchange": []}
 
     # ---- wall-clock: controller vs sharded ---------------------------------
     section("Distributed refinement: wall-clock (controller vs sharded)")
@@ -60,6 +61,10 @@ def run(quick: bool = False):
         rows.append([n, k, f"{t_ctrl * 1e3:.1f}", f"{t_dist * 1e3:.1f}",
                      f"{t_dist / t_ctrl:.2f}x", int(res.num_moves),
                      bool(res.converged)])
+        payload["wall_clock"].append(
+            {"n": n, "k": k, "controller_ms": t_ctrl * 1e3,
+             "sharded_ms": t_dist * 1e3, "moves": int(res.num_moves),
+             "converged": bool(res.converged)})
     table(["N", "K", "controller ms", "sharded ms", "ratio", "moves",
            "converged"], rows)
 
@@ -90,12 +95,19 @@ def run(quick: bool = False):
                      led.ghost_sync_bytes,
                      naive_broadcast_bytes(n, k),
                      f"{naive_broadcast_bytes(n, k) / led.per_round_bytes:.0f}x"])
+        payload["exchange"].append(
+            {"n": n, "rounds": int(res.num_turns),
+             "bytes_per_round": led.per_round_bytes,
+             "ghost_sync_bytes": led.ghost_sync_bytes,
+             "naive_bytes_per_round": naive_broadcast_bytes(n, k)})
     table(["N", "rounds", "B/round (ours)", "ghost sync B (one-time)",
            "B/round (naive O(N))", "naive/ours"], rows)
     spread = max(per_round) / min(per_round)
     print(f"bytes/round spread over {sizes[0]}->{sizes[-1]}: "
           f"{spread:.2f}x (claim: <= 2x, N-independent)")
     assert spread <= 2.0, f"per-round payload not flat: {per_round}"
+    payload["bytes_per_round_spread"] = spread
+    return payload
 
 
 if __name__ == "__main__":

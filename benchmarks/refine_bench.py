@@ -1,0 +1,144 @@
+"""Incremental vs recompute refinement: the O(NK)-per-turn claim.
+
+Two claims measured (ISSUE 2 acceptance criteria):
+
+  1. **Per-turn cost** — ``refine_traced`` on the incremental path
+     (aggregate carried, rank-1 updates, exact-potential deltas) vs the
+     recompute path (O(N^2 K) aggregate matmul + two O(N^2) potential
+     passes per turn).  Timed over a fixed-length scan so per-turn cost is
+     wall/T regardless of convergence; the incremental per-turn cost must
+     grow sublinearly vs the recompute path's O(N^2) from N=256 -> 4096
+     (>= 5x speedup at N=4096, K=8).
+
+  2. **Agreement** — the incremental path must reproduce the recompute
+     path's move sequence EXACTLY (same turns, nodes, destinations) and
+     both potentials to <= 1e-3 relative over a 512-turn trace, for both
+     cost frameworks.  Asserted here (and by the CI bench-smoke job at
+     N=256) on every run.
+
+Results are emitted machine-readably to BENCH_refine.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.refine import refine_traced
+from repro.graphs.generators import random_degree_graph, random_weights
+from repro.core.problem import make_problem
+
+from .common import section, table, timed, write_bench_json
+
+AGREE_TOL = 1e-3          # max relative potential deviation, ISSUE 2
+SPEEDUP_FLOOR = 5.0       # at the largest size, full (non-quick) runs
+
+
+def _instance(n: int, k: int, seed: int = 0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    prob = make_problem(c, b, np.ones(k) / k, mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
+    """Assert the ISSUE-2 acceptance contract at one size; return stats."""
+    prob, r0 = _instance(n, k)
+    out = {"n": n, "k": k, "turns": max_turns, "frameworks": {}}
+    for fw in ("c", "ct"):
+        res_i, tr_i = refine_traced(prob, r0, fw, max_turns=max_turns)
+        res_r, tr_r = refine_traced(prob, r0, fw, max_turns=max_turns,
+                                    incremental=False)
+        for field in ("moved", "node", "source", "dest"):
+            a = np.asarray(getattr(tr_i, field))
+            b = np.asarray(getattr(tr_r, field))
+            assert np.array_equal(a, b), \
+                f"{fw}: incremental {field} sequence diverged at " \
+                f"turns {np.flatnonzero(a != b)[:5]}"
+        assert np.array_equal(np.asarray(res_i.assignment),
+                              np.asarray(res_r.assignment))
+        rel = {}
+        for pot in ("c0", "ct0"):
+            a = np.asarray(getattr(tr_i, pot), np.float64)
+            b = np.asarray(getattr(tr_r, pot), np.float64)
+            rel[pot] = float(np.max(np.abs(a - b) / np.abs(b)))
+            assert rel[pot] <= AGREE_TOL, \
+                f"{fw}: {pot} drifted {rel[pot]:.2e} > {AGREE_TOL}"
+        out["frameworks"][fw] = {
+            "moves": int(res_i.num_moves),
+            "moves_equal": True,
+            "rel_potential_diff": rel,
+        }
+    return out
+
+
+def run(quick: bool = False):
+    k = 8
+    sizes = [256, 1024] if quick else [256, 1024, 4096]
+    timing_turns = 48 if quick else 64
+
+    # ---- acceptance: exact moves + <=1e-3 potentials, both frameworks ----
+    section("Incremental refinement: move/potential agreement (512 turns)")
+    agreement = check_agreement(n=256, k=k)
+    for fw, st in agreement["frameworks"].items():
+        print(f"  [{fw}] {st['moves']} moves identical; "
+              f"max rel potential diff "
+              f"c0={st['rel_potential_diff']['c0']:.2e} "
+              f"ct0={st['rel_potential_diff']['ct0']:.2e}")
+
+    # ---- per-turn cost scaling ------------------------------------------
+    section("Per-turn cost: O(NK) incremental vs O(N^2 K) recompute")
+    rows = []
+    results = []
+    for n in sizes:
+        prob, r0 = _instance(n, k)
+        t_inc = timed(lambda: refine_traced(prob, r0, "c",
+                                            max_turns=timing_turns),
+                      iters=2)
+        t_rec = timed(lambda: refine_traced(prob, r0, "c",
+                                            max_turns=timing_turns,
+                                            incremental=False),
+                      iters=2)
+        per_inc = t_inc / timing_turns * 1e3
+        per_rec = t_rec / timing_turns * 1e3
+        speedup = t_rec / t_inc
+        rows.append([n, k, f"{per_inc:.3f}", f"{per_rec:.3f}",
+                     f"{speedup:.1f}x"])
+        results.append({"n": n, "k": k,
+                        "per_turn_incremental_ms": per_inc,
+                        "per_turn_recompute_ms": per_rec,
+                        "speedup": speedup})
+    table(["N", "K", "incremental ms/turn", "recompute ms/turn", "speedup"],
+          rows)
+
+    # sublinearity: incremental per-turn growth across the sweep must stay
+    # far below the recompute path's quadratic growth
+    if len(results) > 1:
+        lo, hi = results[0], results[-1]
+        ratio = hi["n"] / lo["n"]
+        inc_growth = (hi["per_turn_incremental_ms"]
+                      / lo["per_turn_incremental_ms"])
+        rec_growth = (hi["per_turn_recompute_ms"]
+                      / lo["per_turn_recompute_ms"])
+        print(f"\nN x{ratio:.0f}: incremental per-turn cost grew "
+              f"{inc_growth:.1f}x, recompute {rec_growth:.1f}x "
+              f"(quadratic would be {ratio * ratio:.0f}x)")
+        assert inc_growth < rec_growth, \
+            "incremental per-turn cost did not grow sublinearly vs recompute"
+    if not quick:
+        top = results[-1]
+        assert top["speedup"] >= SPEEDUP_FLOOR, \
+            f"speedup {top['speedup']:.1f}x < {SPEEDUP_FLOOR}x " \
+            f"at N={top['n']}, K={k}"
+
+    payload = {"agreement": agreement, "scaling": results,
+               "timing_turns": timing_turns}
+    write_bench_json("refine", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -4,6 +4,11 @@ framework-level benches.
   PYTHONPATH=src python -m benchmarks.run            # full
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
   PYTHONPATH=src python -m benchmarks.run --only table1,roofline
+
+Every suite that returns a payload gets it persisted as BENCH_<name>.json
+in the repo root (refine_bench also writes its own file directly so the
+CI bench-smoke job tracks it standalone), so the perf trajectory is
+machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -13,7 +18,9 @@ import traceback
 
 from . import (baselines_compare, batch_study, distributed_bench,
                fig7_8_simtime, fig9_10_load_traces, kernel_bench,
-               planner_bench, roofline, table1_cost_frameworks, train_bench)
+               planner_bench, refine_bench, roofline,
+               table1_cost_frameworks, train_bench)
+from .common import write_bench_json
 
 SUITES = {
     "table1": table1_cost_frameworks.run,
@@ -26,7 +33,12 @@ SUITES = {
     "train": train_bench.run,
     "roofline": roofline.run,
     "distributed": distributed_bench.run,
+    "refine": refine_bench.run,
 }
+
+# refine_bench writes BENCH_refine.json itself (it must also do so when
+# invoked standalone by the CI smoke job)
+_SELF_WRITING = {"refine"}
 
 
 def main() -> None:
@@ -41,7 +53,9 @@ def main() -> None:
     for name in names:
         t = time.time()
         try:
-            SUITES[name](quick=args.quick)
+            payload = SUITES[name](quick=args.quick)
+            if payload is not None and name not in _SELF_WRITING:
+                write_bench_json(name, payload)
         except Exception:
             failures.append(name)
             print(f"[FAIL] suite {name}:")

@@ -28,6 +28,7 @@ def run(quick: bool = False):
     if quick:
         archs = archs[:2]
     rows = []
+    train_results = []
     for arch in archs:
         t0 = time.time()
         _, losses = train(arch, smoke=True, steps=steps, global_batch=8,
@@ -35,6 +36,10 @@ def run(quick: bool = False):
         wall = time.time() - t0
         rows.append([arch, steps, f"{losses[0]:.3f}", f"{losses[-1]:.3f}",
                      f"{steps / wall:.2f}"])
+        train_results.append({"arch": arch, "steps": steps,
+                              "loss_first": float(losses[0]),
+                              "loss_last": float(losses[-1]),
+                              "steps_per_s": steps / wall})
     table(["arch (smoke)", "steps", "loss[0]", "loss[-1]", "steps/s"], rows)
 
     section("Serving throughput (continuous batching, smoke config, CPU)")
@@ -53,7 +58,8 @@ def run(quick: bool = False):
     table(["requests", "decode steps", "generated tokens", "tok/s (CPU)"],
           [[stats["requests"], stats["decode_steps"],
             stats["generated_tokens"], f"{stats['tok_per_s']:.1f}"]])
-    return {}
+    return {"train": train_results,
+            "serving": {k: float(v) for k, v in stats.items()}}
 
 
 if __name__ == "__main__":

@@ -5,10 +5,13 @@ Public API:
   * cost frameworks (costs.C_FRAMEWORK / costs.CT_FRAMEWORK), cost_matrix,
     dissatisfaction, global potentials C_0 / Ct_0
   * refine / refine_traced / refine_simultaneous — iterative improvement
+    (incremental aggregate-state path by default, DESIGN.md §10)
+  * AggregateState / init_aggregate_state — the carried aggregate
   * initial_partition (focal nodes + hop expansion), er_cluster_growth
   * simulated_annealing, cluster_move_pass — §4.4/§7 meta-heuristics
 """
-from . import costs  # noqa: F401
+from . import aggregate, costs  # noqa: F401
+from .aggregate import AggregateState, init_aggregate_state  # noqa: F401
 from .annealing import AnnealResult, simulated_annealing  # noqa: F401
 from .constrained import (  # noqa: F401
     contiguous_stage_dp,
@@ -22,7 +25,9 @@ from .costs import (  # noqa: F401
     FRAMEWORKS,
     adjacency_aggregate,
     cost_matrix,
+    cost_matrix_from_aggregate,
     dissatisfaction,
+    dissatisfaction_from_cost,
     global_cost,
     global_cost_c0,
     global_cost_ct0,

@@ -1,0 +1,216 @@
+"""Persistent aggregate state for incremental refinement (DESIGN.md §10).
+
+The paper's point is that a turn's decision needs only *aggregate* state:
+the (N, K) adjacency aggregate A[i, k] = sum_j c_ij 1[r_j = k], the O(K)
+load vector, and the global potentials.  The recompute path rebuilds A
+from scratch every turn — an (N,N) @ (N,K) matmul, O(N^2 K) — and pays two
+more O(N^2) passes per turn for the traced potentials.  This module keeps
+all of it in the ``lax.while_loop`` / ``lax.scan`` carry instead:
+
+  * a move of node l from machine s to d is a **rank-1 column update**
+        A[:, s] -= c[:, l]        A[:, d] += c[:, l]
+    (column l of the symmetric adjacency), O(N);
+  * the loads update is the O(1) two-entry delta the paper's protocol
+    already exchanges;
+  * both global potentials update via the **exact-potential identities**
+    (Thm. 3.1:  ΔC_0 = 2 ΔC_l;  Thm. 5.1:  ΔCt_0 = ΔCt_l), where ΔC_l /
+    ΔCt_l are read off the moved node's O(K) cost rows — no O(N^2) pass.
+
+Invariants carried by :class:`AggregateState` (asserted by
+``tests/test_incremental.py`` and the ``verify_every`` cross-check):
+
+  I1.  aggregate == adjacency @ one_hot(assignment)      (up to f32 drift)
+  I2.  loads[k]  == sum_{i: r_i = k} b_i
+  I3.  c0  == C_0(assignment)   and   ct0 == Ct_0(assignment)
+  I4.  cut(assignment) == 0.5 * (sum_i degree_i - sum_i A[i, r_i]) — the
+       O(N) identity the §4.5 sweep mode uses to re-derive the cut after a
+       rank-K update (simultaneous moves are not unilateral, so the
+       exact-potential identities do not apply; instead both potentials
+       are O(K) closed forms of (loads, sq_loads, cut), see
+       :func:`potentials_closed_form`).
+
+Drift: every quantity is updated by exact +/- of input values, so f32
+error grows only with the number of moves that touch an entry.  The
+``verify_every=M`` option of the refinement engines rebuilds the state
+from scratch every M turns, records the observed drift, and resyncs —
+bounding the error for arbitrarily long runs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import costs
+from .problem import PartitionProblem, machine_loads
+
+Array = jax.Array
+
+
+class AggregateState(NamedTuple):
+    """Everything a refinement turn needs, carried through the loop."""
+    assignment: Array   # (N,) int32
+    loads: Array        # (K,) float — L_k = sum of owned b
+    aggregate: Array    # (N, K) float — A[i, k] = sum_j c_ij 1[r_j = k]
+    c0: Array           # ()  float — C_0(assignment)   (Thm. 3.1 potential)
+    ct0: Array          # ()  float — Ct_0(assignment)  (Eq. 8 potential)
+
+
+def init_aggregate_state(problem: PartitionProblem,
+                         assignment: Array) -> AggregateState:
+    """Build the carry from scratch: one O(N^2 K) aggregate matmul and one
+    O(N^2) pass per potential — paid once, then never again."""
+    assignment = jnp.asarray(assignment, jnp.int32)
+    k = problem.num_machines
+    aggregate = costs.adjacency_aggregate(problem.adjacency, assignment, k)
+    loads = machine_loads(problem.node_weights, assignment, k)
+    c0 = costs.global_cost_c0(problem, assignment)
+    ct0 = costs.global_cost_ct0(problem, assignment)
+    return AggregateState(assignment=assignment, loads=loads,
+                          aggregate=aggregate, c0=c0, ct0=ct0)
+
+
+def node_cost_rows(agg_row: Array, b_node: Array, source: Array,
+                   loads: Array, speeds: Array, mu: Array,
+                   total_weight: Array) -> tuple[Array, Array]:
+    """Both frameworks' O(K) cost rows of one node from its aggregate row.
+
+    ``agg_row`` is A[l, :] (pre-move), ``source`` the node's current
+    machine.  Delegates to :func:`costs.cost_matrix_from_aggregate` with a
+    single-row block so the numbers are bitwise identical to the full
+    cost-matrix rows either path would compute.
+    """
+    row = agg_row[None, :]
+    r_row = source[None]
+    b_row = b_node[None]
+    c_row = costs.cost_matrix_from_aggregate(
+        row, r_row, b_row, loads, speeds, mu, costs.C_FRAMEWORK,
+        total_weight=total_weight)[0]
+    ct_row = costs.cost_matrix_from_aggregate(
+        row, r_row, b_row, loads, speeds, mu, costs.CT_FRAMEWORK,
+        total_weight=total_weight)[0]
+    return c_row, ct_row
+
+
+def potential_deltas(agg_row: Array, b_node: Array, source: Array,
+                     dest: Array, loads: Array, speeds: Array, mu: Array,
+                     total_weight: Array) -> tuple[Array, Array]:
+    """(ΔC_0, ΔCt_0) of moving one node from ``source`` to ``dest`` via the
+    exact-potential identities — O(K), no global pass.
+
+    Thm. 3.1:  ΔC_0  = 2 (C_l(dest)  - C_l(source))
+    Thm. 5.1:  ΔCt_0 =    Ct_l(dest) - Ct_l(source)
+    """
+    c_row, ct_row = node_cost_rows(agg_row, b_node, source, loads, speeds,
+                                   mu, total_weight)
+    dc0 = 2.0 * (c_row[dest] - c_row[source])
+    dct0 = ct_row[dest] - ct_row[source]
+    return dc0, dct0
+
+
+def apply_move(problem: PartitionProblem, agg: AggregateState, node: Array,
+               source: Array, dest: Array, do_move: Array,
+               total_weight: Array) -> AggregateState:
+    """Apply one (gated) unilateral move: O(N) rank-1 aggregate update,
+    O(1) load delta, O(K) potential deltas via the exact identities."""
+    col = problem.adjacency[node]           # symmetric: row l == column l
+    b_node = problem.node_weights[node]
+    dc0, dct0 = potential_deltas(agg.aggregate[node], b_node, source, dest,
+                                 agg.loads, problem.speeds, problem.mu,
+                                 total_weight)
+    new_aggregate = agg.aggregate.at[:, source].add(-col).at[:, dest].add(col)
+    new_assignment = agg.assignment.at[node].set(dest)
+    new_loads = agg.loads.at[source].add(-b_node).at[dest].add(b_node)
+    return AggregateState(
+        assignment=jnp.where(do_move, new_assignment, agg.assignment),
+        loads=jnp.where(do_move, new_loads, agg.loads),
+        aggregate=jnp.where(do_move, new_aggregate, agg.aggregate),
+        c0=jnp.where(do_move, agg.c0 + dc0, agg.c0),
+        ct0=jnp.where(do_move, agg.ct0 + dct0, agg.ct0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# §4.5 simultaneous sweeps: rank-K update + O(K) closed-form potentials
+# ---------------------------------------------------------------------------
+
+def cut_from_aggregate(aggregate: Array, assignment: Array) -> Array:
+    """Invariant I4: unordered cut = 0.5 (sum_i degree_i - sum_i A[i, r_i]).
+
+    O(N K) (the row sums) given the carried aggregate — re-derived fresh
+    each sweep rather than accumulated, so it never drifts beyond the
+    aggregate's own drift.
+    """
+    degree = jnp.sum(aggregate, axis=-1)
+    internal = jnp.take_along_axis(aggregate, assignment[:, None],
+                                   axis=1)[:, 0]
+    return 0.5 * (jnp.sum(degree) - jnp.sum(internal))
+
+
+def potentials_closed_form(loads: Array, sq_loads: Array, cut: Array,
+                           speeds: Array, mu: Array,
+                           total_weight: Array) -> tuple[Array, Array]:
+    """(C_0, Ct_0) as O(K) closed forms of machine-level sums.
+
+    C_0 = sum_k (L_k^2 - S_k)/w_k + mu * cut, with S_k = sum_{i on k} b_i^2
+    (from summing Eq. 1 over i); Ct_0 = sum_k (L_k/w_k - B)^2 + mu/2 * cut
+    (Eq. 8).  Used where the exact-potential identities do not apply —
+    §4.5 simultaneous sweeps are not unilateral moves.
+    """
+    c0 = jnp.sum((loads * loads - sq_loads) / speeds) + mu * cut
+    ct0 = jnp.sum((loads / speeds - total_weight) ** 2) + 0.5 * mu * cut
+    return c0, ct0
+
+
+def apply_sweep(problem: PartitionProblem, agg: AggregateState, picks: Array,
+                dests: Array, will_move: Array,
+                total_weight: Array) -> AggregateState:
+    """Apply a §4.5 sweep: machine m moves node picks[m] (owned by m) to
+    dests[m] wherever will_move[m] — a rank-K aggregate update, then both
+    potentials via (loads, sq_loads, cut) closed forms.
+
+    ``picks`` entries of idle machines may be garbage (argmax fallback);
+    their columns are zeroed by the mask so they contribute exactly 0.
+    """
+    k = problem.num_machines
+    b = problem.node_weights
+    mask = will_move.astype(problem.adjacency.dtype)          # (K,)
+    cols = problem.adjacency[:, picks] * mask[None, :]        # (N, K)
+    # sources are exactly 0..K-1 (machine m moves an m-owned node)
+    new_aggregate = agg.aggregate - cols
+    new_aggregate = new_aggregate.at[:, dests].add(cols)      # dups summed
+    safe_picks = jnp.where(will_move, picks, jnp.int32(problem.num_nodes))
+    new_assignment = agg.assignment.at[safe_picks].set(dests, mode="drop")
+    new_loads = machine_loads(b, new_assignment, k)
+    sq_loads = machine_loads(b * b, new_assignment, k)
+    cut = cut_from_aggregate(new_aggregate, new_assignment)
+    c0, ct0 = potentials_closed_form(new_loads, sq_loads, cut,
+                                     problem.speeds, problem.mu,
+                                     total_weight)
+    return AggregateState(assignment=new_assignment, loads=new_loads,
+                          aggregate=new_aggregate, c0=c0, ct0=ct0)
+
+
+# ---------------------------------------------------------------------------
+# verify_every cross-check
+# ---------------------------------------------------------------------------
+
+def resync(problem: PartitionProblem, agg: AggregateState
+           ) -> tuple[AggregateState, Array]:
+    """Rebuild the carry from scratch, returning (fresh state, observed
+    drift) — drift being the max absolute deviation of any carried
+    quantity from its from-scratch value (the ``verify_every`` bound)."""
+    fresh = init_aggregate_state(problem, agg.assignment)
+    observed = jnp.maximum(
+        jnp.max(jnp.abs(agg.aggregate - fresh.aggregate)),
+        jnp.maximum(
+            jnp.max(jnp.abs(agg.loads - fresh.loads)),
+            jnp.maximum(jnp.abs(agg.c0 - fresh.c0),
+                        jnp.abs(agg.ct0 - fresh.ct0))))
+    return fresh, observed
+
+
+def drift(problem: PartitionProblem, agg: AggregateState) -> Array:
+    """Max absolute deviation of the carried state from a rebuild."""
+    return resync(problem, agg)[1]

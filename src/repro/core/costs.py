@@ -22,6 +22,10 @@ is *exact*; tests/test_game_theory.py asserts both identities numerically.
 Everything here is O(N*K) given the aggregate matrix A[i,k] = sum_j c_ij
 1[r_j = k], itself an (N,N)x(N,K) matmul — the refinement hot spot that
 ``repro/kernels/dissatisfaction.py`` implements as a fused Pallas kernel.
+The refinement engines avoid even that matmul after the first turn:
+``repro.core.aggregate`` carries A through the loop and applies a rank-1
+column update per move (DESIGN.md §10); :func:`cost_matrix_from_aggregate`
+is the shared O(N*K) assembly both paths delegate to.
 """
 from __future__ import annotations
 
@@ -45,17 +49,6 @@ def adjacency_aggregate(adjacency: Array, assignment: Array, num_machines: int) 
     return adjacency @ onehot
 
 
-def _hypothetical_other_loads(b: Array, loads: Array, assignment: Array) -> Array:
-    """others[i, k] = sum_{j != i, r_j = k} b_j if node i were moved to k.
-
-    Only node i's own weight must be subtracted, and only on its *current*
-    machine — for any other machine k the existing load L_k already excludes i.
-    """
-    K = loads.shape[0]
-    own = jax.nn.one_hot(assignment, K, dtype=b.dtype)       # (N, K)
-    return loads[None, :] - b[:, None] * own
-
-
 def cut_matrix(adjacency: Array, assignment: Array, num_machines: int,
                aggregate: Array | None = None) -> Array:
     """cut[i, k] = (1) * sum_{j: r_j != k} c_ij  (the mu/2 factor applied later)."""
@@ -63,6 +56,47 @@ def cut_matrix(adjacency: Array, assignment: Array, num_machines: int,
         aggregate = adjacency_aggregate(adjacency, assignment, num_machines)
     degree = jnp.sum(aggregate, axis=-1, keepdims=True)       # = sum_j c_ij
     return degree - aggregate
+
+
+def cost_matrix_from_aggregate(aggregate: Array, row_assignment: Array,
+                               node_weights: Array, loads: Array,
+                               speeds: Array, mu: Array, framework: str,
+                               total_weight: Array | None = None) -> Array:
+    """O(rows*K) cost assembly from an already-built adjacency aggregate.
+
+    This is THE shared cost formula (DESIGN.md §10): the recompute path
+    (:func:`cost_matrix`), the shard-local path
+    (:func:`repro.distributed.protocol.shard_cost_matrix`) and the
+    incremental path (:mod:`repro.core.aggregate`) all delegate here, so
+    any two paths fed the same aggregate produce bitwise-identical costs.
+
+    ``aggregate`` is the (rows, K) block A[i, k] = sum_j c_ij 1[r_j = k]
+    (rows may be a shard's row block of a larger graph);
+    ``row_assignment`` gives the rows' OWN machines; ``total_weight`` is
+    the global weight sum B, required by the Ct framework (defaults to
+    ``sum(node_weights)``, correct only when the rows are the full graph).
+    """
+    b = node_weights
+    k = loads.shape[0]
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)       # = sum_j c_ij
+    cut_term = 0.5 * mu * (degree - aggregate)
+    own = jax.nn.one_hot(row_assignment, k, dtype=b.dtype)    # (rows, K)
+    # others[i, k] = sum_{j != i, r_j = k} b_j if i were moved to k: node
+    # i's weight is subtracted only on its CURRENT machine — every other
+    # machine's load already excludes i.
+    others = loads[None, :] - b[:, None] * own
+    if framework == C_FRAMEWORK:
+        load_term = (b[:, None] / speeds[None, :]) * others
+        return load_term + cut_term
+    elif framework == CT_FRAMEWORK:
+        if total_weight is None:
+            total_weight = jnp.sum(b)
+        inv_w = 1.0 / speeds[None, :]
+        load_term = (b[:, None] ** 2) * inv_w**2 \
+            + 2.0 * b[:, None] * inv_w**2 * others \
+            - 2.0 * b[:, None] * inv_w * total_weight
+        return load_term + cut_term
+    raise ValueError(f"unknown framework {framework!r}")
 
 
 def cost_matrix(problem: PartitionProblem, state: PartitionState,
@@ -74,23 +108,13 @@ def cost_matrix(problem: PartitionProblem, state: PartitionState,
     hypothetical post-move costs (all other assignments held fixed), exactly
     the quantities a machine needs to compute dissatisfaction (Eq. 4).
     """
-    b = problem.node_weights
-    w = problem.speeds
     K = problem.num_machines
-    others = _hypothetical_other_loads(b, state.loads, state.assignment)
-    cut = cut_matrix(problem.adjacency, state.assignment, K, aggregate)
-    cut_term = 0.5 * problem.mu * cut
-    if framework == C_FRAMEWORK:
-        load_term = (b[:, None] / w[None, :]) * others
-        return load_term + cut_term
-    elif framework == CT_FRAMEWORK:
-        total = jnp.sum(b)
-        inv_w = 1.0 / w[None, :]
-        load_term = (b[:, None] ** 2) * inv_w**2 \
-            + 2.0 * b[:, None] * inv_w**2 * others \
-            - 2.0 * b[:, None] * inv_w * total
-        return load_term + cut_term
-    raise ValueError(f"unknown framework {framework!r}")
+    if aggregate is None:
+        aggregate = adjacency_aggregate(problem.adjacency, state.assignment, K)
+    return cost_matrix_from_aggregate(
+        aggregate, state.assignment, problem.node_weights, state.loads,
+        problem.speeds, problem.mu, framework,
+        total_weight=jnp.sum(problem.node_weights))
 
 
 def node_costs(problem: PartitionProblem, state: PartitionState,
@@ -98,6 +122,15 @@ def node_costs(problem: PartitionProblem, state: PartitionState,
     """(N,) current cost of every node under its current assignment."""
     cm = cost_matrix(problem, state, framework)
     return jnp.take_along_axis(cm, state.assignment[:, None], axis=1)[:, 0]
+
+
+def dissatisfaction_from_cost(cost: Array, row_assignment: Array):
+    """Eq. 4 from an already-assembled cost block: I(i) and the arg-best
+    machine.  Ties break toward the lowest machine index (DESIGN.md §7)."""
+    current = jnp.take_along_axis(cost, row_assignment[:, None], axis=1)[:, 0]
+    best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
+    best = jnp.min(cost, axis=1)
+    return current - best, best_machine
 
 
 def dissatisfaction(problem: PartitionProblem, state: PartitionState,
@@ -110,10 +143,7 @@ def dissatisfaction(problem: PartitionProblem, state: PartitionState,
     """
     if cost is None:
         cost = cost_matrix(problem, state, framework)
-    current = jnp.take_along_axis(cost, state.assignment[:, None], axis=1)[:, 0]
-    best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
-    best = jnp.min(cost, axis=1)
-    return current - best, best_machine
+    return dissatisfaction_from_cost(cost, state.assignment)
 
 
 # ---------------------------------------------------------------------------

@@ -14,20 +14,37 @@ Two execution modes:
                         and BOTH global potentials; powers the Table I /
                         §5.1 discrepancy study and the convergence tests.
 
+Two cost paths (DESIGN.md §10), selected by ``incremental``:
+
+  * **incremental** (default) — an :class:`~repro.core.aggregate.AggregateState`
+    lives in the loop carry; each turn assembles the (N, K) cost matrix from
+    the carried aggregate in O(NK), and a move applies a rank-1 column
+    update plus exact-potential-identity deltas (Thm. 3.1 / 5.1) — per-turn
+    work O(NK), independent of the O(N^2 K) rebuild.  ``verify_every=M``
+    cross-checks against a from-scratch rebuild every M turns (recording
+    the observed drift in ``RefineResult.aggregate_drift``) and resyncs.
+  * **recompute** — the original O(N^2 K)-per-turn path (also selected
+    implicitly by passing ``cost_matrix_fn``, e.g. the fused Pallas cost
+    kernel); ``refine_traced`` additionally pays two O(N^2) global-potential
+    passes per turn.  Kept as the oracle the benchmarks and tests compare
+    the incremental path against.
+
 Also implements the paper-§4.5 *simultaneous transfer* mode (one move per
-machine per sweep, descent not guaranteed — measured in benchmarks).
+machine per sweep, descent not guaranteed — measured in benchmarks), which
+applies a rank-K aggregate update per sweep and re-derives both potentials
+via the O(K) closed forms of :mod:`repro.core.aggregate`.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import aggregate as agg_mod
 from . import costs
-from .problem import PartitionProblem, PartitionState, machine_loads, make_state
+from .problem import PartitionProblem, PartitionState, make_state
 
 Array = jax.Array
 
@@ -48,7 +65,7 @@ class TurnResult(NamedTuple):
 
 def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
           framework: str, tol: float, cost_matrix_fn=None):
-    """One machine turn: move the most dissatisfied owned node (if any)."""
+    """One machine turn, recompute path: rebuild costs from scratch."""
     if cost_matrix_fn is None:
         cost = costs.cost_matrix(problem, state, framework)
     else:
@@ -79,40 +96,133 @@ def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
     c0=jnp.zeros(()), ct0=jnp.zeros(()))  # potentials filled by callers that want them
 
 
+def _turn_incremental(problem: PartitionProblem, agg: agg_mod.AggregateState,
+                      machine: Array, framework: str, tol: float,
+                      total_b: Array, dissat_fn=None):
+    """One machine turn, incremental path: O(NK) costs from the carried
+    aggregate, O(N) rank-1 move (DESIGN.md §10).
+
+    ``dissat_fn(aggregate, assignment, node_weights, loads, speeds, mu,
+    framework, total_weight) -> (dissat, best)`` substitutes the fused
+    Pallas kernel (``repro.kernels.ops.make_aggregate_dissat_fn``) for the
+    jnp assembly.
+    """
+    if dissat_fn is None:
+        cost = costs.cost_matrix_from_aggregate(
+            agg.aggregate, agg.assignment, problem.node_weights, agg.loads,
+            problem.speeds, problem.mu, framework, total_weight=total_b)
+        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment)
+    else:
+        dissat, best = dissat_fn(agg.aggregate, agg.assignment,
+                                 problem.node_weights, agg.loads,
+                                 problem.speeds, problem.mu, framework,
+                                 total_b)
+    owned = agg.assignment == machine
+    masked = jnp.where(owned, dissat, -jnp.inf)
+    node = jnp.argmax(masked).astype(jnp.int32)
+    gain = masked[node]
+    do_move = gain > tol
+
+    dest = best[node]
+    new_agg = agg_mod.apply_move(problem, agg, node, machine, dest, do_move,
+                                 total_b)
+    return new_agg, TurnResult(
+        moved=do_move,
+        node=jnp.where(do_move, node, -1),
+        source=jnp.where(do_move, machine, -1),
+        dest=jnp.where(do_move, dest, -1),
+        gain=jnp.where(do_move, gain, 0.0),
+        c0=new_agg.c0, ct0=new_agg.ct0)
+
+
 class RefineResult(NamedTuple):
     assignment: Array       # (N,) final assignment
     loads: Array            # (K,)
     num_moves: Array        # int32 — total node transfers ("iterations" in Table I)
     num_turns: Array        # int32 — total machine turns taken
     converged: Array        # bool
+    # max deviation observed at verify_every cross-checks (0 when disabled
+    # or on the recompute path — there is nothing to drift there)
+    aggregate_drift: Array | float = 0.0
 
 
-@partial(jax.jit, static_argnames=("framework", "max_turns", "cost_matrix_fn"))
+@partial(jax.jit, static_argnames=("framework", "max_turns", "cost_matrix_fn",
+                                   "incremental", "verify_every",
+                                   "dissat_fn"))
 def refine(problem: PartitionProblem, assignment: Array,
            framework: str = costs.C_FRAMEWORK,
            max_turns: int = 10_000, tol: float = DEFAULT_TOL,
-           cost_matrix_fn=None) -> RefineResult:
-    """Run round-robin refinement to convergence (K consecutive idle turns)."""
+           cost_matrix_fn=None, incremental: bool = True,
+           verify_every: int = 0, dissat_fn=None) -> RefineResult:
+    """Run round-robin refinement to convergence (K consecutive idle turns).
+
+    ``incremental=True`` (default) carries the aggregate state; passing
+    ``cost_matrix_fn`` forces the recompute path (a custom cost function
+    rebuilds from the full adjacency).  ``verify_every=M > 0`` rebuilds the
+    carry from scratch every M turns and records the drift (incremental
+    path only).
+    """
     K = problem.num_machines
-    state0 = make_state(problem, assignment)
+    if cost_matrix_fn is not None:
+        incremental = False
+
+    if not incremental:
+        state0 = make_state(problem, assignment)
+
+        def cond(carry):
+            _, _, idle, turns, _ = carry
+            return (idle < K) & (turns < max_turns)
+
+        def body(carry):
+            state, machine, idle, turns, moves = carry
+            state, res = _turn(problem, state, machine, framework, tol,
+                               cost_matrix_fn)
+            idle = jnp.where(res.moved, 0, idle + 1)
+            return (state, (machine + 1) % K, idle, turns + 1,
+                    moves + res.moved.astype(jnp.int32))
+
+        init = (state0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        state, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
+        return RefineResult(assignment=state.assignment, loads=state.loads,
+                            num_moves=moves, num_turns=turns,
+                            converged=idle >= K,
+                            aggregate_drift=jnp.zeros(()))
+
+    agg0 = agg_mod.init_aggregate_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
 
     def cond(carry):
-        _, _, idle, turns, _ = carry
+        _, _, idle, turns, _, _ = carry
         return (idle < K) & (turns < max_turns)
 
     def body(carry):
-        state, machine, idle, turns, moves = carry
-        state, res = _turn(problem, state, machine, framework, tol,
-                           cost_matrix_fn)
+        agg, machine, idle, turns, moves, max_drift = carry
+        agg, res = _turn_incremental(problem, agg, machine, framework, tol,
+                                     total_b, dissat_fn)
         idle = jnp.where(res.moved, 0, idle + 1)
-        return (state, (machine + 1) % K, idle, turns + 1,
-                moves + res.moved.astype(jnp.int32))
+        turns = turns + 1
+        if verify_every:
+            agg, max_drift = jax.lax.cond(
+                turns % verify_every == 0,
+                lambda a, d: _resync_max(problem, a, d),
+                lambda a, d: (a, d), agg, max_drift)
+        return (agg, (machine + 1) % K, idle, turns,
+                moves + res.moved.astype(jnp.int32), max_drift)
 
-    init = (state0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
-    state, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
-    return RefineResult(assignment=state.assignment, loads=state.loads,
-                        num_moves=moves, num_turns=turns, converged=idle >= K)
+    init = (agg0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros(()))
+    agg, _, idle, turns, moves, max_drift = jax.lax.while_loop(
+        cond, body, init)
+    return RefineResult(assignment=agg.assignment, loads=agg.loads,
+                        num_moves=moves, num_turns=turns,
+                        converged=idle >= K, aggregate_drift=max_drift)
+
+
+def _resync_max(problem, agg, max_drift):
+    fresh, observed = agg_mod.resync(problem, agg)
+    return fresh, jnp.maximum(max_drift, observed)
 
 
 class Trace(NamedTuple):
@@ -127,41 +237,86 @@ class Trace(NamedTuple):
     active: Array   # (T,) bool  — False once converged
 
 
-@partial(jax.jit, static_argnames=("framework", "max_turns"))
+@partial(jax.jit, static_argnames=("framework", "max_turns", "incremental",
+                                   "verify_every"))
 def refine_traced(problem: PartitionProblem, assignment: Array,
                   framework: str = costs.C_FRAMEWORK,
-                  max_turns: int = 512, tol: float = DEFAULT_TOL):
+                  max_turns: int = 512, tol: float = DEFAULT_TOL,
+                  incremental: bool = True, verify_every: int = 0):
     """Fixed-length scan variant recording both potentials after every turn.
 
     Returns (RefineResult, Trace).  Turns after convergence are no-ops with
     ``active=False`` so downstream statistics can mask them out.
+
+    On the incremental path (default) the recorded potentials are the
+    carried values, updated per move by the exact-potential identities —
+    no O(N^2) pass per turn.  On the recompute path they are evaluated
+    from scratch each turn (the oracle ``tests/test_incremental.py``
+    compares against).
     """
     K = problem.num_machines
-    state0 = make_state(problem, assignment)
 
-    def step(carry, _):
-        state, machine, idle = carry
+    if not incremental:
+        state0 = make_state(problem, assignment)
+
+        def step(carry, _):
+            state, machine, idle = carry
+            active = idle < K
+            new_state, res = _turn(problem, state, framework=framework,
+                                   tol=tol, machine=machine)
+            new_state = jax.tree.map(
+                lambda new, old: jnp.where(active, new, old), new_state, state)
+            moved = res.moved & active
+            idle = jnp.where(moved, 0, idle + 1)
+            c0 = costs.global_cost_c0(problem, new_state.assignment)
+            ct0 = costs.global_cost_ct0(problem, new_state.assignment)
+            out = Trace(moved=moved, node=res.node, source=res.source,
+                        dest=res.dest, gain=res.gain, c0=c0, ct0=ct0,
+                        active=active)
+            return (new_state, (machine + 1) % K, idle), out
+
+        (state, _, idle), trace = jax.lax.scan(
+            step, (state0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+            None, length=max_turns)
+        moves = jnp.sum(trace.moved.astype(jnp.int32))
+        turns = jnp.sum(trace.active.astype(jnp.int32))
+        result = RefineResult(assignment=state.assignment, loads=state.loads,
+                              num_moves=moves, num_turns=turns,
+                              converged=idle >= K,
+                              aggregate_drift=jnp.zeros(()))
+        return result, trace
+
+    agg0 = agg_mod.init_aggregate_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+
+    def step(carry, turn_idx):
+        agg, machine, idle, max_drift = carry
         active = idle < K
-        new_state, res = _turn(problem, state, machine, framework, tol)
-        new_state = jax.tree.map(
-            lambda new, old: jnp.where(active, new, old), new_state, state)
+        new_agg, res = _turn_incremental(problem, agg, machine, framework,
+                                         tol, total_b)
+        new_agg = jax.tree.map(
+            lambda new, old: jnp.where(active, new, old), new_agg, agg)
         moved = res.moved & active
         idle = jnp.where(moved, 0, idle + 1)
-        c0 = costs.global_cost_c0(problem, new_state.assignment)
-        ct0 = costs.global_cost_ct0(problem, new_state.assignment)
+        if verify_every:
+            new_agg, max_drift = jax.lax.cond(
+                (turn_idx + 1) % verify_every == 0,
+                lambda a, d: _resync_max(problem, a, d),
+                lambda a, d: (a, d), new_agg, max_drift)
         out = Trace(moved=moved, node=res.node, source=res.source,
-                    dest=res.dest, gain=res.gain, c0=c0, ct0=ct0,
-                    active=active)
-        return (new_state, (machine + 1) % K, idle), out
+                    dest=res.dest, gain=res.gain, c0=new_agg.c0,
+                    ct0=new_agg.ct0, active=active)
+        return (new_agg, (machine + 1) % K, idle, max_drift), out
 
-    (state, _, idle), trace = jax.lax.scan(
-        step, (state0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
-        None, length=max_turns)
+    init = (agg0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros(()))
+    (agg, _, idle, max_drift), trace = jax.lax.scan(
+        init=init, f=step, xs=jnp.arange(max_turns, dtype=jnp.int32))
     moves = jnp.sum(trace.moved.astype(jnp.int32))
     turns = jnp.sum(trace.active.astype(jnp.int32))
-    result = RefineResult(assignment=state.assignment, loads=state.loads,
+    result = RefineResult(assignment=agg.assignment, loads=agg.loads,
                           num_moves=moves, num_turns=turns,
-                          converged=idle >= K)
+                          converged=idle >= K, aggregate_drift=max_drift)
     return result, trace
 
 
@@ -173,17 +328,29 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
     in the same sweep.  Faster wall-clock (one cost evaluation per sweep
     serves all K machines) but descent is NOT guaranteed; ``refine_traced``
     style potentials are returned per sweep so benchmarks can count ascents.
+
+    Incremental throughout: costs come from the carried aggregate (O(NK)
+    per sweep), the K disjoint moves apply as one rank-K column update,
+    and both potentials are re-derived via the O(K) closed forms of
+    :func:`repro.core.aggregate.potentials_closed_form` (simultaneous
+    moves are not unilateral, so the exact-potential identities do not
+    apply — DESIGN.md §10).
+
+    ``num_moves`` counts ACTUAL transfers (``sum(will_move)`` per sweep),
+    not the ``K * sweeps`` upper bound.
     """
     K = problem.num_machines
-    state0 = make_state(problem, assignment)
+    agg0 = agg_mod.init_aggregate_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
 
     def sweep(carry, _):
-        state, done = carry
-        cost = costs.cost_matrix(problem, state, framework)
-        dissat, best = costs.dissatisfaction(problem, state, framework,
-                                             cost=cost)
+        agg, done, moves = carry
+        cost = costs.cost_matrix_from_aggregate(
+            agg.aggregate, agg.assignment, problem.node_weights, agg.loads,
+            problem.speeds, problem.mu, framework, total_weight=total_b)
+        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment)
         # Per machine: the most dissatisfied owned node.
-        owned = jax.nn.one_hot(state.assignment, K, dtype=cost.dtype)  # (N,K)
+        owned = jax.nn.one_hot(agg.assignment, K, dtype=cost.dtype)   # (N,K)
         masked = jnp.where(owned.T > 0, dissat[None, :], -jnp.inf)    # (K,N)
         pick = jnp.argmax(masked, axis=1).astype(jnp.int32)           # (K,)
         gains = jnp.max(masked, axis=1)
@@ -193,25 +360,25 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
         # Apply all K moves at once (moving machines pick disjoint nodes: a
         # node is owned by exactly one machine).  Idle machines' argmax over
         # an all--inf row falls back to node 0, which may collide with a
-        # real move of node 0 — route non-moves to an out-of-range index so
-        # the scatter drops them instead of racing the real update.
-        safe_pick = jnp.where(will_move, pick, jnp.int32(problem.num_nodes))
-        new_assignment = state.assignment.at[safe_pick].set(
-            best[pick], mode="drop")
-        new_assignment = jnp.where(any_move, new_assignment, state.assignment)
-        new_loads = machine_loads(problem.node_weights, new_assignment, K)
-        new_state = PartitionState(new_assignment, new_loads)
-        c0 = costs.global_cost_c0(problem, new_state.assignment)
-        ct0 = costs.global_cost_ct0(problem, new_state.assignment)
-        return (new_state, done | ~any_move), (c0, ct0, any_move)
+        # real move of node 0 — apply_sweep masks their columns to zero and
+        # drops their assignment writes.
+        new_agg = agg_mod.apply_sweep(problem, agg, pick, best[pick],
+                                      will_move, total_b)
+        new_agg = jax.tree.map(
+            lambda new, old: jnp.where(any_move, new, old), new_agg, agg)
+        moves = moves + jnp.where(any_move,
+                                  jnp.sum(will_move.astype(jnp.int32)), 0)
+        return ((new_agg, done | ~any_move, moves),
+                (new_agg.c0, new_agg.ct0, any_move))
 
-    (state, done), (c0s, ct0s, active) = jax.lax.scan(
-        sweep, (state0, jnp.zeros((), bool)), None, length=max_sweeps)
+    (agg, done, moves), (c0s, ct0s, active) = jax.lax.scan(
+        sweep, (agg0, jnp.zeros((), bool), jnp.zeros((), jnp.int32)),
+        None, length=max_sweeps)
     result = RefineResult(
-        assignment=state.assignment, loads=state.loads,
-        num_moves=jnp.sum(active.astype(jnp.int32)) * K,  # upper bound
+        assignment=agg.assignment, loads=agg.loads,
+        num_moves=moves,
         num_turns=jnp.sum(active.astype(jnp.int32)),
-        converged=done)
+        converged=done, aggregate_drift=jnp.zeros(()))
     return result, (c0s, ct0s, active)
 
 

@@ -93,6 +93,13 @@ class DESConfig:
     # repartition step itself runs as the sharded protocol.
     refine_backend: str = "single"
     refine_num_shards: int = 0    # 0 = one shard per machine
+    # Both backends run the incremental aggregate-state path (DESIGN.md
+    # §10) by default; for the single backend, refine_verify_every=M > 0
+    # additionally cross-checks the carried aggregate against a rebuild
+    # every M turns of each refinement round (drift-bounding knob for
+    # long-running simulations).
+    refine_incremental: bool = True
+    refine_verify_every: int = 0
     # load trace (Figs 9/10)
     trace_stride: int = 50
     max_trace: int = 512
@@ -597,10 +604,13 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
         from ..distributed.runtime import refine_distributed
         res = refine_distributed(prob, state.machine, cfg.refine_framework,
                                  num_shards=cfg.refine_num_shards or K,
-                                 max_turns=cfg.refine_max_turns)
+                                 max_turns=cfg.refine_max_turns,
+                                 incremental=cfg.refine_incremental)
     elif cfg.refine_backend == "single":
         res = refine(prob, state.machine, cfg.refine_framework,
-                     max_turns=cfg.refine_max_turns)
+                     max_turns=cfg.refine_max_turns,
+                     incremental=cfg.refine_incremental,
+                     verify_every=cfg.refine_verify_every)
     else:
         raise ValueError(f"unknown refine_backend {cfg.refine_backend!r}")
     moved = jnp.sum((res.assignment != state.machine).astype(jnp.int32))

@@ -8,10 +8,28 @@ from those measured quantities; the key property it exposes — and that
 ``benchmarks/distributed_bench.py`` verifies empirically across N = 256 →
 4096 — is that **per-round payload contains no O(N) term**:
 
+Incremental protocol (the default, DESIGN.md §10):
+
     sequential turn : S * 16 B                     (candidate all-gather)
-    traced turn     : + S * (8 + 4K) B             (potential partials)
-    §4.5 sweep      : K * (above)                  (one candidate per machine)
+    traced turn     : + S * 8 B                    (ΔC_0/ΔCt_0 exact-
+                                                    potential deltas riding
+                                                    on each candidate)
+    §4.5 sweep      : S * (16K + 8K + 4) B         (K candidates + load &
+                                                    sq-load partials + cut
+                                                    partial per shard)
     one-time setup  : 8 * sum_s ghost_s  +  4K + 4 (ghost sync, loads, B)
+    traced setup    : + S * (8 + 4K)               (initial-potential
+                                                    partial reduction)
+
+Recompute protocol (``incremental=False`` drivers — pass
+``incremental=False`` here too, the wire shapes differ):
+
+    traced turn     : + S * (8 + 4K) B             (per-turn C_0/cut
+                                                    partials + fresh O(K)
+                                                    load partial)
+    §4.5 sweep      : S * (16K + 4K + 8) B         (K candidates + load
+                                                    partial + C_0/cut
+                                                    partials per shard)
 
 For contrast, :func:`naive_broadcast_bytes` gives the per-round cost of
 the strawman protocol that re-broadcasts the full assignment vector —
@@ -57,20 +75,38 @@ class ExchangeLedger:
 
 
 def turn_payload_bytes(num_shards: int, num_machines: int,
-                       traced: bool = False) -> int:
-    """Wire bytes of ONE sequential turn (all machines combined)."""
+                       traced: bool = False,
+                       incremental: bool = True) -> int:
+    """Wire bytes of ONE sequential turn (all machines combined).
+
+    Incremental traced turns attach the two exact-potential-identity
+    deltas to each candidate (8 B) — no per-turn partial reduction; the
+    potentials are replicated state updated by the winner's deltas
+    (DESIGN.md §10).  Recompute traced turns instead reduce per-shard
+    C_0/cut partials plus a fresh O(K) load partial every turn."""
     bytes_ = num_shards * protocol.CANDIDATE_BYTES
     if traced:
-        bytes_ += num_shards * (protocol.TRACE_PARTIAL_BYTES
-                                + protocol.load_partial_bytes(num_machines))
+        bytes_ += num_shards * protocol.TRACE_PARTIAL_BYTES
+        if not incremental:
+            bytes_ += num_shards * protocol.load_partial_bytes(num_machines)
     return bytes_
 
 
-def sweep_payload_bytes(num_shards: int, num_machines: int) -> int:
-    """Wire bytes of ONE §4.5 simultaneous sweep (K candidates per shard,
-    plus the fresh O(K) load partial every sweep recomputes)."""
-    return num_shards * (num_machines * protocol.CANDIDATE_BYTES
-                         + protocol.load_partial_bytes(num_machines))
+def sweep_payload_bytes(num_shards: int, num_machines: int,
+                        incremental: bool = True) -> int:
+    """Wire bytes of ONE §4.5 simultaneous sweep: K candidates per shard,
+    plus — incrementally — the fresh O(K) load and sq-load partials and
+    the f32 cut partial for the closed-form potentials (simultaneous
+    moves are not unilateral, so the identity deltas do not apply).  The
+    recompute sweep ships one load partial and the 8-byte C_0/cut
+    partial pair per shard instead."""
+    per_shard = num_machines * protocol.CANDIDATE_BYTES
+    if incremental:
+        per_shard += 2 * protocol.load_partial_bytes(num_machines) + 4
+    else:
+        per_shard += (protocol.load_partial_bytes(num_machines)
+                      + protocol.TRACE_PARTIAL_BYTES)
+    return num_shards * per_shard
 
 
 def ghost_sync_bytes(stats: BoundaryStats) -> int:
@@ -84,20 +120,34 @@ def setup_bytes(num_machines: int) -> int:
     return 4 * num_machines + 4
 
 
+def init_potential_bytes(num_shards: int, num_machines: int) -> int:
+    """One-time traced-run setup: the initial-potential partial reduction
+    (C_0 partial + cut partial + O(K) load partial per shard)."""
+    return num_shards * (protocol.TRACE_PARTIAL_BYTES
+                         + protocol.load_partial_bytes(num_machines))
+
+
 def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
-                   *, traced: bool = False,
-                   simultaneous: bool = False) -> ExchangeLedger:
-    """Ledger for an executed run (``rounds`` = its measured turn count)."""
+                   *, traced: bool = False, simultaneous: bool = False,
+                   incremental: bool = True) -> ExchangeLedger:
+    """Ledger for an executed run (``rounds`` = its measured turn count).
+
+    ``incremental`` must match the driver flag the run used — the traced
+    and sweep wire shapes differ between the two protocols (see the
+    module docstring)."""
     s = stats.num_shards
+    setup = setup_bytes(num_machines)
     if simultaneous:
-        per_round = sweep_payload_bytes(s, num_machines)
+        per_round = sweep_payload_bytes(s, num_machines,
+                                        incremental=incremental)
         trace = 0
-        if traced:
-            trace = rounds * s * protocol.TRACE_PARTIAL_BYTES
     else:
         per_round = s * protocol.CANDIDATE_BYTES
-        trace = rounds * (turn_payload_bytes(s, num_machines, traced)
+        trace = rounds * (turn_payload_bytes(s, num_machines, traced,
+                                             incremental=incremental)
                           - per_round)
+        if traced and incremental:
+            setup += init_potential_bytes(s, num_machines)
     return ExchangeLedger(
         num_shards=s,
         num_machines=num_machines,
@@ -105,7 +155,7 @@ def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
         candidate_bytes=rounds * per_round,
         trace_bytes=trace,
         ghost_sync_bytes=ghost_sync_bytes(stats),
-        setup_bytes=setup_bytes(num_machines),
+        setup_bytes=setup,
     )
 
 

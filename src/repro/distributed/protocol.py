@@ -10,18 +10,28 @@ exchange of the turn; every machine then runs the same deterministic
 vector.  No O(N) state ever crosses the wire after the one-time
 O(boundary) ghost sync (see :mod:`~repro.distributed.views`).
 
-Traced runs additionally exchange per-shard potential partials (two f32
-scalars plus a fresh O(K) load partial) so the global potentials C_0 /
-Ct_0 can be reconstructed by pure reduction — still independent of N.
+Shard-local compute is **incremental** (DESIGN.md §10): each shard carries
+its (Ns, K) row-block aggregate in the loop and applies the elected move
+as a rank-1 column update (:func:`update_block_aggregate`) — the candidate
+costs come from :func:`shard_cost_from_aggregate` in O(Ns*K) per turn, and
+the one-time block-aggregate matmul is the only O(Ns*N) work of a run.
 
-Numerical contract: :func:`shard_cost_matrix` reproduces the rows of
-:func:`repro.core.costs.cost_matrix` *bitwise* (same formulas in the same
-operation order; the row-block aggregate matmul keeps the contraction
-dimension at exactly N), and :func:`elect` reproduces the global
-``argmax`` tie-breaking (first/lowest node index wins among equal gains).
-Together these make the distributed sequential runtime's move sequence
-identical to the single controller's — asserted by
-tests/test_distributed.py.
+Traced runs additionally exchange, per candidate, the two
+exact-potential-identity deltas (ΔC_0, ΔCt_0 — Thm. 3.1/5.1, computed by
+the proposing shard from its aggregate row in O(K)); the winner's deltas
+update every machine's replicated potentials.  8 extra bytes per
+candidate, still independent of N; the initial potentials are reduced
+once from per-shard partials.
+
+Numerical contract: :func:`shard_cost_matrix` (recompute) and
+:func:`shard_cost_from_aggregate` (incremental) reproduce the rows of the
+controller's cost matrix *bitwise* — both delegate to
+:func:`repro.core.costs.cost_matrix_from_aggregate`, and the row-block
+aggregate matmul / rank-1 updates mirror the controller's operations
+exactly.  :func:`elect` reproduces the global ``argmax`` tie-breaking
+(first/lowest node index wins among equal gains).  Together these make
+the distributed runtime's move sequence identical to the single
+controller's — asserted by tests/test_distributed.py.
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..core import aggregate as agg_mod
 from ..core import costs
 
 Array = jax.Array
@@ -38,11 +49,11 @@ I32_MAX = jnp.int32(2**31 - 1)
 
 # Wire sizes (bytes) of the protocol messages, for the accounting ledgers.
 CANDIDATE_BYTES = 16          # gain f32 + node i32 + dest i32 + weight f32
-TRACE_PARTIAL_BYTES = 8       # c0 partial f32 + cut partial f32
+TRACE_PARTIAL_BYTES = 8       # ΔC_0 f32 + ΔCt_0 f32 per traced candidate
 
 
 def load_partial_bytes(num_machines: int) -> int:
-    """Fresh O(K) load partial exchanged per shard on traced turns."""
+    """Fresh O(K) load partial exchanged per shard per §4.5 sweep."""
     return 4 * num_machines
 
 
@@ -62,17 +73,68 @@ class Winner(NamedTuple):
     dest: Array     # i32
     gain: Array     # f32
     weight: Array   # f32
+    shard: Array    # i32 — index of the winning candidate's shard (lets
+                    #       traced callers pick that shard's potential
+                    #       deltas out of the gathered arrays)
 
 
 # ---------------------------------------------------------------------------
 # Shard-local compute (no communication)
 # ---------------------------------------------------------------------------
 
+def block_aggregate(row_block: Array, assignment: Array,
+                    num_machines: int) -> Array:
+    """One-time (Ns, K) row-block aggregate: A_s = rows @ one_hot(r).
+
+    The contraction dimension stays exactly N, so the rows are bitwise
+    equal to the controller's full-aggregate rows (DESIGN.md §9.1).
+    """
+    onehot = jax.nn.one_hot(assignment, num_machines, dtype=row_block.dtype)
+    return row_block @ onehot
+
+
+def update_block_aggregate(aggregate: Array, row_block: Array, node: Array,
+                           source: Array, dest: Array,
+                           moved: Array) -> Array:
+    """Apply the elected move's rank-1 column update to the shard's block:
+    the same ``A[:, s] -= c[:, l]; A[:, d] += c[:, l]`` the controller
+    applies, restricted to the shard's rows — O(Ns), no communication
+    (every shard holds column l of its own row block)."""
+    col = row_block[:, node]
+    new = aggregate.at[:, source].add(-col).at[:, dest].add(col)
+    return jnp.where(moved, new, aggregate)
+
+
+def update_block_aggregate_sweep(aggregate: Array, row_block: Array,
+                                 picks: Array, dests: Array,
+                                 moved: Array) -> Array:
+    """§4.5 rank-K block update: machine m's move of node picks[m] (owned
+    by m, so source column = m) to dests[m], for all moving machines at
+    once — mirrors :func:`repro.core.aggregate.apply_sweep` restricted to
+    the shard's rows.  Idle machines' columns are masked to exact zero."""
+    mask = moved.astype(row_block.dtype)                     # (K,)
+    cols = row_block[:, picks] * mask[None, :]               # (Ns, K)
+    new = aggregate - cols
+    return new.at[:, dests].add(cols)                        # dups summed
+
+
+def shard_cost_from_aggregate(aggregate: Array, r_local: Array,
+                              b_local: Array, loads: Array, speeds: Array,
+                              mu: Array, total_b: Array,
+                              framework: str) -> Array:
+    """(Ns, K) cost rows from the shard's carried block aggregate — O(Ns*K)
+    per turn, bitwise equal to the controller's incremental-path rows
+    (shared assembly: :func:`repro.core.costs.cost_matrix_from_aggregate`)."""
+    return costs.cost_matrix_from_aggregate(
+        aggregate, r_local, b_local, loads, speeds, mu, framework,
+        total_weight=total_b)
+
+
 def shard_cost_matrix(row_block: Array, r_local: Array, b_local: Array,
                       assignment: Array, loads: Array, speeds: Array,
                       mu: Array, total_b: Array, framework: str) -> Array:
-    """(Ns, K) cost rows for the shard's nodes — bitwise equal to the same
-    rows of :func:`repro.core.costs.cost_matrix`.
+    """(Ns, K) cost rows rebuilt from scratch (the recompute path) —
+    bitwise equal to the same rows of :func:`repro.core.costs.cost_matrix`.
 
     ``assignment`` is the shard's O(N) *mirror* (maintained by move
     broadcasts, never re-shipped); ``loads`` the replicated O(K) vector;
@@ -80,22 +142,9 @@ def shard_cost_matrix(row_block: Array, r_local: Array, b_local: Array,
     node weights are constants of the game).
     """
     k = speeds.shape[0]
-    onehot = jax.nn.one_hot(assignment, k, dtype=row_block.dtype)
-    aggregate = row_block @ onehot                          # (Ns, K)
-    degree = jnp.sum(aggregate, axis=-1, keepdims=True)
-    cut_term = 0.5 * mu * (degree - aggregate)
-    own = jax.nn.one_hot(r_local, k, dtype=b_local.dtype)
-    others = loads[None, :] - b_local[:, None] * own
-    if framework == costs.C_FRAMEWORK:
-        load_term = (b_local[:, None] / speeds[None, :]) * others
-        return load_term + cut_term
-    elif framework == costs.CT_FRAMEWORK:
-        inv_w = 1.0 / speeds[None, :]
-        load_term = (b_local[:, None] ** 2) * inv_w**2 \
-            + 2.0 * b_local[:, None] * inv_w**2 * others \
-            - 2.0 * b_local[:, None] * inv_w * total_b
-        return load_term + cut_term
-    raise ValueError(f"unknown framework {framework!r}")
+    aggregate = block_aggregate(row_block, assignment, k)   # (Ns, K)
+    return shard_cost_from_aggregate(aggregate, r_local, b_local, loads,
+                                     speeds, mu, total_b, framework)
 
 
 def _shard_dissatisfaction(row_block, b_local, ids, valid, assignment,
@@ -127,6 +176,72 @@ def local_candidate(row_block: Array, b_local: Array, ids: Array,
     loc = jnp.argmax(masked).astype(jnp.int32)
     return Candidate(gain=masked[loc], node=ids[loc],
                      dest=best_machine[loc], weight=b_local[loc])
+
+
+def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
+                                   ids: Array, valid: Array,
+                                   assignment: Array, loads: Array,
+                                   speeds: Array, mu: Array, total_b: Array,
+                                   machine: Array, framework: str,
+                                   with_deltas: bool = False,
+                                   dissat_fn=None):
+    """Incremental-path candidate: costs from the shard's carried block
+    aggregate, O(Ns*K) — no matmul, no read of any off-shard adjacency.
+
+    With ``with_deltas=True`` additionally returns (ΔC_0, ΔCt_0) for the
+    PROPOSED move via the exact-potential identities (Thm. 3.1/5.1),
+    computed from the node's aggregate row in O(K) — the 8 traced bytes
+    each shard attaches to its candidate.  ``dissat_fn`` substitutes a
+    fused kernel for the jnp (dissat, best) reduction; it uses the SAME
+    (aggregate, row_assignment, node_weights, loads, speeds, mu,
+    framework, total_weight) convention as ``repro.core.refine``'s
+    ``dissat_fn``, so ``repro.kernels.ops.make_aggregate_dissat_fn()``
+    plugs into both.
+    """
+    r_local = assignment[ids]
+    if dissat_fn is None:
+        cost = shard_cost_from_aggregate(aggregate, r_local, b_local, loads,
+                                         speeds, mu, total_b, framework)
+        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local)
+    else:
+        dissat, best_machine = dissat_fn(aggregate, r_local, b_local, loads,
+                                         speeds, mu, framework, total_b)
+    owned = (r_local == machine) & valid
+    masked = jnp.where(owned, dissat, -jnp.inf)
+    loc = jnp.argmax(masked).astype(jnp.int32)
+    cand = Candidate(gain=masked[loc], node=ids[loc],
+                     dest=best_machine[loc], weight=b_local[loc])
+    if not with_deltas:
+        return cand
+    dc0, dct0 = agg_mod.potential_deltas(
+        aggregate[loc], b_local[loc], machine, best_machine[loc], loads,
+        speeds, mu, total_b)
+    return cand, dc0, dct0
+
+
+def local_candidates_all_machines_from_aggregate(
+        aggregate: Array, b_local: Array, ids: Array, valid: Array,
+        assignment: Array, loads: Array, speeds: Array, mu: Array,
+        total_b: Array, framework: str, dissat_fn=None) -> Candidate:
+    """§4.5 sweep candidates (one per machine) from the carried block
+    aggregate — Candidate of (K,) arrays, O(Ns*K) per sweep.
+    ``dissat_fn`` as in :func:`local_candidate_from_aggregate`."""
+    k = speeds.shape[0]
+    r_local = assignment[ids]
+    if dissat_fn is None:
+        cost = shard_cost_from_aggregate(aggregate, r_local, b_local, loads,
+                                         speeds, mu, total_b, framework)
+        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local)
+    else:
+        dissat, best_machine = dissat_fn(aggregate, r_local, b_local, loads,
+                                         speeds, mu, framework, total_b)
+    owned = valid[None, :] & (r_local[None, :]
+                              == jnp.arange(k, dtype=jnp.int32)[:, None])
+    masked = jnp.where(owned, dissat[None, :], -jnp.inf)     # (K, Ns)
+    loc = jnp.argmax(masked, axis=1).astype(jnp.int32)       # (K,)
+    return Candidate(gain=jnp.take_along_axis(masked, loc[:, None], 1)[:, 0],
+                     node=ids[loc], dest=best_machine[loc],
+                     weight=b_local[loc])
 
 
 def local_candidates_all_machines(row_block: Array, b_local: Array,
@@ -168,7 +283,8 @@ def elect(cands: Candidate, tol) -> Winner:
                   node=cands.node[shard],
                   dest=cands.dest[shard],
                   gain=best_gain,
-                  weight=cands.weight[shard])
+                  weight=cands.weight[shard],
+                  shard=shard)
 
 
 def apply_move(assignment: Array, loads: Array, winner: Winner,
@@ -218,6 +334,18 @@ def shard_cut_partial(row_block: Array, ids: Array, valid: Array,
     diff = r_local[:, None] != assignment[None, :]
     rows = jnp.where(valid[:, None], row_block, jnp.zeros_like(row_block))
     return jnp.sum(rows * diff)
+
+
+def shard_cut_partial_from_aggregate(aggregate: Array, ids: Array,
+                                     valid: Array,
+                                     assignment: Array) -> Array:
+    """Shard's (unhalved) cut contribution from its carried block aggregate
+    — O(Ns*K) instead of the O(Ns*N) row sweep: per owned node,
+    degree_i - A[i, r_i] (invariant I4 of DESIGN.md §10)."""
+    r_local = assignment[ids]
+    degree = jnp.sum(aggregate, axis=-1)
+    internal = jnp.take_along_axis(aggregate, r_local[:, None], axis=1)[:, 0]
+    return jnp.sum(jnp.where(valid, degree - internal, 0.0))
 
 
 def global_potentials(c0_partials: Array, cut_partials: Array,

@@ -14,6 +14,25 @@ Three execution modes over the same shard-local kernel + O(K) protocol:
     machine moves its most dissatisfied node in the same round (descent
     not guaranteed, K× fewer exchange rounds).
 
+Shard-local compute is **incremental by default** (DESIGN.md §10): each
+shard carries its (Ns, K) row-block aggregate through the loop — built by
+one O(Ns·N·K) matmul at round 0 — and thereafter
+
+  * assembles its candidate costs from the carried block in O(Ns·K)/turn,
+  * applies the elected move as the same rank-1 column update the
+    controller applies (`A_s[:, s] -= c_s[:, l]; A_s[:, d] += c_s[:, l]`),
+    O(Ns), using only its own rows — wire traffic stays the O(K)
+    candidate exchange,
+  * (traced) attaches the exact-potential-identity deltas (ΔC_0, ΔCt_0,
+    Thm. 3.1/5.1) to its candidate — 8 B — so every machine updates its
+    replicated potentials without any O(N) pass.
+
+``incremental=False`` restores the recompute path (block aggregate matmul
+every turn), which is also what ``cost_fn="pallas"`` drives through the
+fused Pallas cost kernel when recomputing; on the incremental path
+``cost_fn="pallas"`` routes the per-turn reduction through the fused
+aggregate→(dissat, best) kernel instead.
+
 Two drivers realize the SPMD program:
 
   * the **emulated** driver maps the shard axis with ``vmap`` and performs
@@ -25,11 +44,6 @@ Two drivers realize the SPMD program:
     with ``lax.all_gather`` — the real-collective path, exercised by
     ``benchmarks/distributed_bench.py`` under a forced multi-device host
     platform.
-
-Shard-local cost assembly defaults to the jnp path of
-:mod:`~repro.distributed.protocol` (bitwise-equal to ``core.costs``); pass
-``cost_fn="pallas"`` to run each shard's block through the fused Pallas
-kernel of :mod:`repro.kernels.dissatisfaction` instead (TPU deployments).
 """
 from __future__ import annotations
 
@@ -41,6 +55,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core import aggregate as agg_mod
 from ..core import costs
 from ..core.problem import PartitionProblem, make_state
 from ..core.refine import DEFAULT_TOL, RefineResult, Trace
@@ -62,8 +77,8 @@ def _resolve_shards(problem: PartitionProblem, num_shards: int | None) -> int:
 
 
 def _shard_cost_fn(cost_fn: str):
-    """Shard-local (Ns, K) cost-row builder: "jnp" (exact, default) or
-    "pallas" (fused kernel per row block, DESIGN.md §3.2)."""
+    """Shard-local (Ns, K) cost-row builder for the RECOMPUTE path: "jnp"
+    (exact, default) or "pallas" (fused kernel per row block, §3.2)."""
     if cost_fn == "jnp":
         return protocol.shard_cost_matrix
     if cost_fn == "pallas":
@@ -79,11 +94,33 @@ def _shard_cost_fn(cost_fn: str):
     raise ValueError(f"unknown cost_fn {cost_fn!r}")
 
 
+def _shard_dissat_fn(cost_fn: str):
+    """Shard-local (dissat, best) from the carried block aggregate, for the
+    INCREMENTAL path: "jnp" (shared O(Ns·K) assembly, bitwise equal to the
+    controller) or "pallas" (fused aggregate→(dissat, best) kernel — the
+    same ``ops.make_aggregate_dissat_fn`` adapter ``core.refine`` takes,
+    one calling convention everywhere)."""
+    if cost_fn == "jnp":
+        return None
+    if cost_fn == "pallas":
+        from ..kernels.ops import make_aggregate_dissat_fn
+        return make_aggregate_dissat_fn()
+    raise ValueError(f"unknown cost_fn {cost_fn!r}")
+
+
+def _init_block_aggregates(views: ShardViews, assignment: Array,
+                           num_machines: int) -> Array:
+    """(S, Ns, K) carried block aggregates — the one-time matmuls."""
+    return jax.vmap(
+        lambda rb: protocol.block_aggregate(rb, assignment, num_machines)
+    )(views.row_block)
+
+
 def _vmap_candidates(views: ShardViews, assignment: Array, loads: Array,
                      speeds: Array, mu: Array, total_b: Array,
                      machine: Array, framework: str,
                      cost_fn: str) -> protocol.Candidate:
-    """Emulated exchange: all S shard candidates, stacked on axis 0."""
+    """Recompute-path emulated exchange: all S candidates, stacked."""
     shard_cost = _shard_cost_fn(cost_fn)
 
     def one(rb, b, ids, valid):
@@ -96,10 +133,39 @@ def _vmap_candidates(views: ShardViews, assignment: Array, loads: Array,
                          views.valid)
 
 
+def _vmap_candidates_incremental(views: ShardViews, block_aggs: Array,
+                                 assignment: Array, loads: Array,
+                                 speeds: Array, mu: Array, total_b: Array,
+                                 machine: Array, framework: str,
+                                 cost_fn: str, with_deltas: bool = False):
+    """Incremental-path emulated exchange from the carried block aggregates."""
+    dissat_fn = _shard_dissat_fn(cost_fn)
+
+    def one(agg, b, ids, valid):
+        with jax.named_scope("shard_candidate_incremental"):
+            return protocol.local_candidate_from_aggregate(
+                agg, b, ids, valid, assignment, loads, speeds, mu, total_b,
+                machine, framework, with_deltas=with_deltas,
+                dissat_fn=dissat_fn)
+
+    return jax.vmap(one)(block_aggs, views.weights, views.ids, views.valid)
+
+
+def _update_block_aggregates(views: ShardViews, block_aggs: Array,
+                             winner: protocol.Winner,
+                             machine: Array) -> Array:
+    """Every shard applies the elected rank-1 update to its own block."""
+    return jax.vmap(
+        lambda agg, rb: protocol.update_block_aggregate(
+            agg, rb, winner.node, machine, winner.dest, winner.moved)
+    )(block_aggs, views.row_block)
+
+
 def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
                      mu: Array, total_b: Array, num_machines: int,
                      fresh_loads: Array | None = None):
-    """Emulated traced-mode reduction of the per-shard potential partials.
+    """Emulated reduction of the per-shard potential partials (used once to
+    initialize the traced potentials, and by the recompute traced path).
 
     Pass ``fresh_loads`` when the caller already reduced the shard load
     partials for ``assignment`` (the sweep driver does) to skip the
@@ -127,24 +193,54 @@ def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
-                                   "cost_fn"))
+                                   "cost_fn", "incremental"))
 def refine_distributed(problem: PartitionProblem, assignment: Array,
                        framework: str = costs.C_FRAMEWORK,
                        num_shards: int | None = None,
                        max_turns: int = 10_000, tol: float = DEFAULT_TOL,
-                       cost_fn: str = "jnp") -> RefineResult:
+                       cost_fn: str = "jnp",
+                       incremental: bool = True) -> RefineResult:
     """Distributed round-robin refinement to convergence (K idle turns).
 
     Protocol per turn: each shard computes one Candidate from local state
     (16 bytes on the wire), the candidates are all-gathered, every machine
     elects the same winner and applies the same O(1) delta to its
-    replicated assignment mirror + O(K) load vector.
+    replicated assignment mirror + O(K) load vector — and, on the default
+    incremental path, the same rank-1 update to its carried (Ns, K) block
+    aggregate, so no shard ever rebuilds its aggregate matmul after turn 0.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+
+    if incremental:
+        aggs0 = _init_block_aggregates(views, state0.assignment, k)
+
+        def cond(carry):
+            _, _, _, _, idle, turns, _ = carry
+            return (idle < k) & (turns < max_turns)
+
+        def body(carry):
+            r, loads, aggs, machine, idle, turns, moves = carry
+            cands = _vmap_candidates_incremental(
+                views, aggs, r, loads, problem.speeds, problem.mu, total_b,
+                machine, framework, cost_fn)
+            winner = protocol.elect(cands, tol)
+            aggs = _update_block_aggregates(views, aggs, winner, machine)
+            r, loads = protocol.apply_move(r, loads, winner, machine)
+            idle = jnp.where(winner.moved, 0, idle + 1)
+            return (r, loads, aggs, (machine + 1) % k, idle, turns + 1,
+                    moves + winner.moved.astype(jnp.int32))
+
+        init = (state0.assignment, state0.loads, aggs0,
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        r, loads, _, _, idle, turns, moves = jax.lax.while_loop(
+            cond, body, init)
+        return RefineResult(assignment=r, loads=loads, num_moves=moves,
+                            num_turns=turns, converged=idle >= k)
 
     def cond(carry):
         _, _, _, idle, turns, _ = carry
@@ -169,26 +265,70 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
 
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
-                                   "cost_fn"))
+                                   "cost_fn", "incremental"))
 def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
                               framework: str = costs.C_FRAMEWORK,
                               num_shards: int | None = None,
                               max_turns: int = 512,
                               tol: float = DEFAULT_TOL,
-                              cost_fn: str = "jnp"):
+                              cost_fn: str = "jnp",
+                              incremental: bool = True):
     """Fixed-length traced variant; returns ``(RefineResult, Trace)`` with
     the exact semantics (and, in sequential mode, the exact move sequence)
     of :func:`repro.core.refine.refine_traced`.
 
-    The potentials in the trace are assembled from per-shard partials
-    (O(1) + O(K) per shard per turn — see accounting.py), not from any
-    global gather of node state.
+    On the incremental path the potentials are initialized once from
+    per-shard partials and thereafter updated by the winner's 8-byte
+    exact-potential deltas (Thm. 3.1/5.1) — O(1) wire + O(K) compute per
+    turn, no O(N) pass of any kind.  ``incremental=False`` restores the
+    per-turn partial-reduction recompute.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+
+    if incremental:
+        aggs0 = _init_block_aggregates(views, state0.assignment, k)
+        c0_init, ct0_init = _vmap_potentials(views, state0.assignment,
+                                             problem.speeds, problem.mu,
+                                             total_b, k,
+                                             fresh_loads=state0.loads)
+
+        def step(carry, _):
+            r, loads, aggs, c0, ct0, machine, idle = carry
+            active = idle < k
+            cands, dc0s, dct0s = _vmap_candidates_incremental(
+                views, aggs, r, loads, problem.speeds, problem.mu, total_b,
+                machine, framework, cost_fn, with_deltas=True)
+            winner = protocol.elect(cands, tol)
+            moved = winner.moved & active
+            gated = winner._replace(moved=moved)
+            new_aggs = _update_block_aggregates(views, aggs, gated, machine)
+            new_r, new_loads = protocol.apply_move(r, loads, gated, machine)
+            new_c0 = jnp.where(moved, c0 + dc0s[winner.shard], c0)
+            new_ct0 = jnp.where(moved, ct0 + dct0s[winner.shard], ct0)
+            idle = jnp.where(moved, 0, idle + 1)
+            out = Trace(
+                moved=moved,
+                node=jnp.where(winner.moved, winner.node, -1),
+                source=jnp.where(winner.moved, machine, -1),
+                dest=jnp.where(winner.moved, winner.dest, -1),
+                gain=jnp.where(winner.moved, winner.gain, 0.0),
+                c0=new_c0, ct0=new_ct0, active=active)
+            return (new_r, new_loads, new_aggs, new_c0, new_ct0,
+                    (machine + 1) % k, idle), out
+
+        init = (state0.assignment, state0.loads, aggs0, c0_init, ct0_init,
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        (r, loads, _, _, _, _, idle), trace = jax.lax.scan(
+            step, init, None, length=max_turns)
+        moves = jnp.sum(trace.moved.astype(jnp.int32))
+        turns = jnp.sum(trace.active.astype(jnp.int32))
+        result = RefineResult(assignment=r, loads=loads, num_moves=moves,
+                              num_turns=turns, converged=idle >= k)
+        return result, trace
 
     def step(carry, _):
         r, loads, machine, idle = carry
@@ -228,27 +368,95 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_sweeps",
-                                   "cost_fn"))
+                                   "cost_fn", "incremental"))
 def refine_distributed_simultaneous(problem: PartitionProblem,
                                     assignment: Array,
                                     framework: str = costs.C_FRAMEWORK,
                                     num_shards: int | None = None,
                                     max_sweeps: int = 256,
                                     tol: float = DEFAULT_TOL,
-                                    cost_fn: str = "jnp"):
+                                    cost_fn: str = "jnp",
+                                    incremental: bool = True):
     """Distributed §4.5 sweeps: each shard ships K candidates per sweep
     (one per machine), elections run per machine, all K disjoint moves
-    apply at once.  Exchange per sweep: S*K candidates + S load partials —
-    still independent of N."""
+    apply at once as a rank-K block-aggregate update.  Exchange per sweep:
+    S*K candidates + S load/sq-load/cut partials — still independent of N.
+
+    ``num_moves`` counts actual transfers (sum of per-sweep movers), not
+    the K*sweeps upper bound.
+    """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+    sq_weights = views.weights * views.weights
+
+    if incremental:
+        aggs0 = _init_block_aggregates(views, state0.assignment, k)
+        dissat_fn = _shard_dissat_fn(cost_fn)
+
+        def sweep(carry, _):
+            r, loads, aggs, done, moves = carry
+            cands = jax.vmap(
+                lambda agg, b, ids, v:
+                    protocol.local_candidates_all_machines_from_aggregate(
+                        agg, b, ids, v, r, loads, problem.speeds,
+                        problem.mu, total_b, framework,
+                        dissat_fn=dissat_fn)
+            )(aggs, views.weights, views.ids, views.valid)       # (S, K)
+            winners = jax.vmap(protocol.elect, in_axes=(1, None),
+                               out_axes=0)(cands, tol)            # (K,)
+            any_move = jnp.any(winners.moved) & ~done
+            # Idle machines elect a fallback candidate (all gains -inf)
+            # whose node id may collide with a real move — mask their
+            # columns / drop their writes instead of racing the update.
+            safe_picks = jnp.where(winners.moved, winners.node,
+                                   jnp.int32(problem.num_nodes))
+            new_r = r.at[safe_picks].set(winners.dest, mode="drop")
+            new_r = jnp.where(any_move, new_r, r)
+            new_aggs = jax.vmap(
+                lambda agg, rb: protocol.update_block_aggregate_sweep(
+                    agg, rb, winners.node, winners.dest, winners.moved)
+            )(aggs, views.row_block)
+            new_aggs = jnp.where(any_move, new_aggs, aggs)
+            load_partials = jax.vmap(
+                lambda b, ids, v: protocol.shard_load_partial(
+                    b, ids, v, new_r, k)
+            )(views.weights, views.ids, views.valid)
+            new_loads = jnp.sum(load_partials, axis=0)
+            sq_partials = jax.vmap(
+                lambda b2, ids, v: protocol.shard_load_partial(
+                    b2, ids, v, new_r, k)
+            )(sq_weights, views.ids, views.valid)
+            sq_loads = jnp.sum(sq_partials, axis=0)
+            cut_partials = jax.vmap(
+                lambda agg, ids, v: protocol.shard_cut_partial_from_aggregate(
+                    agg, ids, v, new_r)
+            )(new_aggs, views.ids, views.valid)
+            cut = 0.5 * jnp.sum(cut_partials)
+            c0, ct0 = agg_mod.potentials_closed_form(
+                new_loads, sq_loads, cut, problem.speeds, problem.mu,
+                total_b)
+            moves = moves + jnp.where(
+                any_move, jnp.sum(winners.moved.astype(jnp.int32)), 0)
+            return ((new_r, new_loads, new_aggs, done | ~any_move, moves),
+                    (c0, ct0, any_move))
+
+        (r, loads, _, done, moves), (c0s, ct0s, active) = jax.lax.scan(
+            sweep, (state0.assignment, state0.loads, aggs0,
+                    jnp.zeros((), bool), jnp.zeros((), jnp.int32)),
+            None, length=max_sweeps)
+        result = RefineResult(
+            assignment=r, loads=loads, num_moves=moves,
+            num_turns=jnp.sum(active.astype(jnp.int32)),
+            converged=done)
+        return result, (c0s, ct0s, active)
+
     shard_cost = _shard_cost_fn(cost_fn)
 
     def sweep(carry, _):
-        r, loads, done = carry
+        r, loads, done, moves = carry
         cands = jax.vmap(
             lambda rb, b, ids, v: protocol.local_candidates_all_machines(
                 rb, b, ids, v, r, loads, problem.speeds, problem.mu,
@@ -257,9 +465,6 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
         winners = jax.vmap(protocol.elect, in_axes=(1, None),
                            out_axes=0)(cands, tol)                 # (K,)
         any_move = jnp.any(winners.moved) & ~done
-        # Idle machines elect a fallback candidate (all gains -inf) whose
-        # node id may collide with a real move — drop their writes instead
-        # of racing the real update (mirrors core refine_simultaneous).
         safe_picks = jnp.where(winners.moved, winners.node,
                                jnp.int32(problem.num_nodes))
         new_r = r.at[safe_picks].set(winners.dest, mode="drop")
@@ -270,14 +475,17 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
         new_loads = jnp.sum(load_partials, axis=0)
         c0, ct0 = _vmap_potentials(views, new_r, problem.speeds, problem.mu,
                                    total_b, k, fresh_loads=new_loads)
-        return (new_r, new_loads, done | ~any_move), (c0, ct0, any_move)
+        moves = moves + jnp.where(
+            any_move, jnp.sum(winners.moved.astype(jnp.int32)), 0)
+        return ((new_r, new_loads, done | ~any_move, moves),
+                (c0, ct0, any_move))
 
-    (r, loads, done), (c0s, ct0s, active) = jax.lax.scan(
-        sweep, (state0.assignment, state0.loads, jnp.zeros((), bool)),
+    (r, loads, done, moves), (c0s, ct0s, active) = jax.lax.scan(
+        sweep, (state0.assignment, state0.loads, jnp.zeros((), bool),
+                jnp.zeros((), jnp.int32)),
         None, length=max_sweeps)
     result = RefineResult(
-        assignment=r, loads=loads,
-        num_moves=jnp.sum(active.astype(jnp.int32)) * k,   # upper bound
+        assignment=r, loads=loads, num_moves=moves,
         num_turns=jnp.sum(active.astype(jnp.int32)),
         converged=done)
     return result, (c0s, ct0s, active)
@@ -300,9 +508,12 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
     candidates; every device then elects/applies the identical delta to
     its replicated mirror (``check_rep=False`` because the replication
     invariant is ours, established by construction, not inferable by the
-    partitioner).  Requires ``num_shards`` addressable devices — the bench
-    forces a multi-device host platform via ``XLA_FLAGS``; on one device
-    it degenerates to a 1-shard mesh (still the collective code path).
+    partitioner).  Each device also carries its (Ns, K) block aggregate —
+    built once at entry, updated by the same rank-1 delta every turn — so
+    per-turn device compute is O(Ns·K), not O(Ns·N·K).  Requires
+    ``num_shards`` addressable devices — the bench forces a multi-device
+    host platform via ``XLA_FLAGS``; on one device it degenerates to a
+    1-shard mesh (still the collective code path).
     """
     from jax.experimental.shard_map import shard_map
 
@@ -323,15 +534,16 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
 
     def spmd(rb, b, ids, valid, r0, loads0, speeds, mu, tot):
         rb, b, ids, valid = rb[0], b[0], ids[0], valid[0]
+        agg0 = protocol.block_aggregate(rb, r0, k)   # once, O(Ns·N·K)
 
         def cond(carry):
-            _, _, _, idle, turns, _ = carry
+            _, _, _, _, idle, turns, _ = carry
             return (idle < k) & (turns < max_turns)
 
         def body(carry):
-            r, loads, machine, idle, turns, moves = carry
-            cand = protocol.local_candidate(
-                rb, b, ids, valid, r, loads, speeds, mu, tot, machine,
+            r, loads, agg, machine, idle, turns, moves = carry
+            cand = protocol.local_candidate_from_aggregate(
+                agg, b, ids, valid, r, loads, speeds, mu, tot, machine,
                 framework)
             cands = protocol.Candidate(
                 gain=jax.lax.all_gather(cand.gain, "shards"),
@@ -339,15 +551,18 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
                 dest=jax.lax.all_gather(cand.dest, "shards"),
                 weight=jax.lax.all_gather(cand.weight, "shards"))
             winner = protocol.elect(cands, tol)
+            agg = protocol.update_block_aggregate(
+                agg, rb, winner.node, machine, winner.dest, winner.moved)
             r, loads = protocol.apply_move(r, loads, winner, machine)
             idle = jnp.where(winner.moved, 0, idle + 1)
-            return (r, loads, (machine + 1) % k, idle, turns + 1,
+            return (r, loads, agg, (machine + 1) % k, idle, turns + 1,
                     moves + winner.moved.astype(jnp.int32))
 
-        init = (r0, loads0, jnp.zeros((), jnp.int32),
+        init = (r0, loads0, agg0, jnp.zeros((), jnp.int32),
                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
                 jnp.zeros((), jnp.int32))
-        r, loads, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
+        r, loads, _, _, idle, turns, moves = jax.lax.while_loop(
+            cond, body, init)
         return r, loads, moves, turns, idle >= k
 
     sharded = P("shards")

@@ -1,25 +1,39 @@
-"""Fused Pallas TPU kernel for the refinement hot spot (DESIGN.md §3.2).
+"""Fused Pallas TPU kernels for the refinement hot spot (DESIGN.md §3.2, §10).
 
-Every refinement turn needs the full (N, K) node-cost matrix, whose dominant
-work is the adjacency aggregation  A[i, k] = sum_j c_ij * 1[r_j = k]  — an
-(N x N) @ (N x K) matmul.  Computing A with jnp and then assembling costs
-reads the (N, K) intermediates from HBM several times; this kernel tiles the
-adjacency into VMEM blocks, accumulates A on the MXU, and fuses the entire
-cost assembly (load term + cut term for either framework) into the final
-grid step, so the adjacency is read exactly once and nothing but the (N, K)
-cost matrix is written back.
+Two kernels:
 
-Grid: (N/TN, N/TJ), j innermost.  Per (i, j) step:
-  * build the one-hot of the column block's assignments (TJ, K) in VREGs,
-  * acc(TN, K) += C_block(TN, TJ) @ onehot  (MXU),
-  * at j == last: assemble the cost block and write it out.
+* :func:`cost_matrix_pallas` — the recompute path.  Every from-scratch
+  cost evaluation needs the aggregate  A[i, k] = sum_j c_ij * 1[r_j = k]
+  — an (N x N) @ (N x K) matmul.  Computing A with jnp and then assembling
+  costs reads the (N, K) intermediates from HBM several times; this kernel
+  tiles the adjacency into VMEM blocks, accumulates A on the MXU, and
+  fuses the entire cost assembly (load term + cut term for either
+  framework) into the final grid step, so the adjacency is read exactly
+  once and nothing but the (N, K) cost matrix is written back.
+
+  Grid: (N/TN, N/TJ), j innermost.  Per (i, j) step:
+    * build the one-hot of the column block's assignments (TJ, K) in VREGs,
+    * acc(TN, K) += C_block(TN, TJ) @ onehot  (MXU),
+    * at j == last: assemble the cost block and write it out.
+
+* :func:`dissatisfaction_from_aggregate_pallas` — the incremental path
+  (DESIGN.md §10).  The refinement loop already carries A, so no matmul is
+  needed at all: this kernel reads the (N, K) aggregate once, assembles
+  the cost block in VREGs, and reduces it to the Eq.-4 dissatisfaction and
+  arg-best machine in the same grid step — the (N, K) cost matrix never
+  touches HBM.  Per-turn kernel traffic is O(NK) in, O(N) out.
 
 All tile dims are multiples of the 128-lane MXU width; K is padded to 128
-lanes by the ops.py wrapper.
+lanes by the wrappers.
+
+``interpret`` defaults to backend auto-detection (:func:`resolve_interpret`):
+interpret mode everywhere except a real TPU backend, overridable explicitly
+or via ``REPRO_PALLAS_COMPILE=1``.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +44,19 @@ Array = jax.Array
 
 DEFAULT_TILE_N = 128
 DEFAULT_TILE_J = 128
+
+_BIG = 3.0e38   # finite "+inf" for masked K lanes (0*inf = nan)
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Backend auto-detection for the ``interpret`` flag: explicit values
+    win; ``REPRO_PALLAS_COMPILE=1`` forces compiled; otherwise interpret
+    everywhere except a real TPU backend."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(c_ref, r_cols_ref, r_rows_ref, b_rows_ref, loads_ref, speeds_ref,
@@ -78,7 +105,7 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
                        framework: str = "c", *,
                        tile_n: int = DEFAULT_TILE_N,
                        tile_j: int = DEFAULT_TILE_J,
-                       interpret: bool = True,
+                       interpret: bool | None = None,
                        row_assignment: Array | None = None,
                        total_weight: Array | None = None) -> Array:
     """Padded + tiled pallas_call; returns the (rows, K) cost matrix.
@@ -95,9 +122,11 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
     keep the original signature: both default to ``assignment`` /
     ``sum(node_weights)``.
 
-    ``interpret=True`` executes the kernel body in Python on CPU (this
-    container has no TPU); on real hardware pass interpret=False.
+    ``interpret=None`` auto-detects (interpret mode unless the backend is
+    a real TPU — see :func:`resolve_interpret`); pass an explicit bool to
+    override.
     """
+    interpret = resolve_interpret(interpret)
     n_rows, n_cols = adjacency.shape
     k = loads.shape[0]
     if row_assignment is None:
@@ -145,3 +174,106 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
         interpret=interpret,
     )(c, r_cols, r_rows, b, l_pad, w_pad, scalars)
     return out[:n_rows, :k]
+
+
+# ---------------------------------------------------------------------------
+# incremental path: (dissat, best) straight from the carried aggregate
+# ---------------------------------------------------------------------------
+
+def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, loads_ref, speeds_ref,
+                   scalars_ref, dissat_ref, best_ref, *, framework: str,
+                   k_real: int):
+    kpad = loads_ref.shape[-1]
+    tn = agg_ref.shape[0]
+    aggregate = agg_ref[...].astype(jnp.float32)               # (TN, K)
+    mu = scalars_ref[0, 0]
+    total_b = scalars_ref[0, 1]
+    b = b_rows_ref[0, :].astype(jnp.float32)[:, None]          # (TN, 1)
+    r_rows = r_rows_ref[0, :]                                  # (TN,)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (tn, kpad), 1)
+    own = (r_rows[:, None] == kidx).astype(jnp.float32)
+    loads = loads_ref[0, :][None, :]                           # (1, K)
+    inv_w = 1.0 / speeds_ref[0, :][None, :]
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)
+    others = loads - b * own
+    cut_term = 0.5 * mu * (degree - aggregate)
+    if framework == "c":
+        cost = (b * inv_w) * others + cut_term
+    else:
+        cost = (b * b) * inv_w * inv_w \
+            + 2.0 * b * inv_w * inv_w * others \
+            - 2.0 * b * inv_w * total_b + cut_term
+    # Padded K lanes must not win the min; keep them finite (0 * inf = nan).
+    cost = jnp.where(kidx < k_real, cost, _BIG)
+    best_val = jnp.min(cost, axis=1)
+    # lowest-index argmin (DESIGN.md §7) via the iota-min trick
+    best_idx = jnp.min(jnp.where(cost <= best_val[:, None], kidx, kpad),
+                       axis=1).astype(jnp.int32)
+    current = jnp.sum(jnp.where(own > 0, cost, 0.0), axis=1)
+    dissat_ref[0, :] = current - best_val
+    best_ref[0, :] = best_idx
+
+
+def dissatisfaction_from_aggregate_pallas(
+        aggregate: Array, row_assignment: Array, node_weights: Array,
+        loads: Array, speeds: Array, mu, framework: str = "c", *,
+        total_weight: Array | None = None, tile_n: int = DEFAULT_TILE_N,
+        interpret: bool | None = None) -> tuple[Array, Array]:
+    """Fused Eq.-4 reduction over an already-built (rows, K) aggregate.
+
+    Returns ``(dissat (rows,), best_machine (rows,))`` without ever
+    materializing the (rows, K) cost matrix in HBM: each grid step reads
+    one aggregate tile, assembles its cost block in VREGs, and reduces to
+    the dissatisfaction + lowest-index arg-best machine in place.  This is
+    the per-turn kernel of the incremental refinement path (the aggregate
+    itself is maintained by rank-1 carry updates, DESIGN.md §10); row
+    blocks of the distributed runtime drive it the same way (pass the
+    shard's ``row_assignment`` / ``node_weights`` slices and the global
+    ``total_weight``).
+    """
+    interpret = resolve_interpret(interpret)
+    n_rows, k = aggregate.shape
+    assert loads.shape[0] == k, (aggregate.shape, loads.shape)
+    if total_weight is None:
+        total_weight = jnp.sum(node_weights)
+    rows_pad = -(-n_rows // tile_n) * tile_n
+    k_pad = -(-k // 128) * 128
+
+    a = jnp.zeros((rows_pad, k_pad), jnp.float32)
+    a = a.at[:n_rows, :k].set(aggregate.astype(jnp.float32))
+    # padded rows point at a padded machine with zero weight; their outputs
+    # are sliced off below
+    r_rows = jnp.full((1, rows_pad), k_pad - 1, jnp.int32).at[0, :n_rows].set(
+        jnp.asarray(row_assignment, jnp.int32))
+    b = jnp.zeros((1, rows_pad), jnp.float32).at[0, :n_rows].set(
+        node_weights.astype(jnp.float32))
+    l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
+        loads.astype(jnp.float32))
+    w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
+        speeds.astype(jnp.float32))
+    scalars = jnp.stack([jnp.asarray(mu, jnp.float32),
+                         jnp.asarray(total_weight, jnp.float32)])[None, :]
+
+    num_i = rows_pad // tile_n
+    dissat, best = pl.pallas_call(
+        functools.partial(_dissat_kernel, framework=framework, k_real=k),
+        grid=(num_i,),
+        in_specs=[
+            pl.BlockSpec((tile_n, k_pad), lambda i: (i, 0)),   # aggregate
+            pl.BlockSpec((1, tile_n), lambda i: (0, i)),       # r (rows)
+            pl.BlockSpec((1, tile_n), lambda i: (0, i)),       # b (rows)
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),        # loads
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),        # speeds
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),            # mu, B
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_n), lambda i: (0, i)),
+            pl.BlockSpec((1, tile_n), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, rows_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, rows_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, r_rows, b, l_pad, w_pad, scalars)
+    return dissat[0, :n_rows], best[0, :n_rows]

@@ -1,12 +1,11 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container executes on CPU; on a
-TPU runtime pass ``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to run
-the compiled kernels.
+``interpret`` defaults to backend auto-detection (interpret mode unless the
+default backend is a real TPU); pass an explicit bool, or set
+REPRO_PALLAS_COMPILE=1, to override.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
@@ -14,15 +13,15 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention_pallas
-from .dissatisfaction import cost_matrix_pallas
+from .dissatisfaction import (cost_matrix_pallas,
+                              dissatisfaction_from_aggregate_pallas,
+                              resolve_interpret)
 
 Array = jax.Array
 
 
 def _default_interpret() -> bool:
-    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
-        return False
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 @partial(jax.jit, static_argnames=("framework", "interpret"))
@@ -46,12 +45,40 @@ def cost_matrix_reference(adjacency: Array, assignment: Array,
 
 def make_core_cost_matrix_fn(interpret: bool | None = None):
     """Adapter with the (problem, state, framework) signature expected by
-    repro.core.refine(..., cost_matrix_fn=...), so the refinement loop can
-    run on the Pallas kernel instead of the jnp path."""
+    repro.core.refine(..., cost_matrix_fn=...), so the recompute-path
+    refinement loop can run on the Pallas kernel instead of the jnp path."""
     def fn(problem, state, framework):
         return cost_matrix(problem.adjacency, state.assignment,
                            problem.node_weights, state.loads, problem.speeds,
                            problem.mu, framework, interpret=interpret)
+    return fn
+
+
+@partial(jax.jit, static_argnames=("framework", "interpret"))
+def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
+                                   node_weights: Array, loads: Array,
+                                   speeds: Array, mu, total_weight,
+                                   framework: str = "c",
+                                   interpret: bool | None = None):
+    """(dissat, best_machine) from a carried aggregate via the fused kernel
+    — the incremental refinement hot path (no (N, K) cost matrix in HBM)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return dissatisfaction_from_aggregate_pallas(
+        aggregate, row_assignment, node_weights, loads, speeds, mu,
+        framework, total_weight=total_weight, interpret=interpret)
+
+
+def make_aggregate_dissat_fn(interpret: bool | None = None):
+    """Adapter with the (aggregate, assignment, node_weights, loads, speeds,
+    mu, framework, total_weight) signature expected by
+    repro.core.refine(..., dissat_fn=...), so the incremental loop's
+    per-turn reduction runs as the fused Pallas kernel."""
+    def fn(aggregate, assignment, node_weights, loads, speeds, mu,
+           framework, total_weight):
+        return dissatisfaction_from_aggregate(
+            aggregate, assignment, node_weights, loads, speeds, mu,
+            total_weight, framework, interpret=interpret)
     return fn
 
 

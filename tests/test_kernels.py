@@ -17,7 +17,8 @@ from hypothesis import strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.dissatisfaction import cost_matrix_pallas
+from repro.kernels.dissatisfaction import (
+    cost_matrix_pallas, dissatisfaction_from_aggregate_pallas)
 
 
 def _problem_arrays(n, k, seed, dtype=jnp.float32):
@@ -112,6 +113,83 @@ def test_refine_with_pallas_kernel_matches_jnp():
                      cost_matrix_fn=ops.make_core_cost_matrix_fn(interpret=True))
     np.testing.assert_array_equal(np.asarray(res_jnp.assignment),
                                   np.asarray(res_pal.assignment))
+
+
+# ---------------------------------------------------------------------------
+# fused dissatisfaction-from-aggregate kernel (incremental path, §10)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 64, 128, 130, 300])
+@pytest.mark.parametrize("k", [2, 5, 16])
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_dissat_from_aggregate_kernel_shapes(n, k, framework):
+    """(dissat, best) from the fused kernel == the jnp assembly + Eq. 4
+    reduction, including the lowest-index argmin tie-breaking."""
+    from repro.core import costs as core_costs
+    adj, r, b, loads, speeds = _problem_arrays(n, k, seed=n * 13 + k)
+    agg = core_costs.adjacency_aggregate(adj, r, k)
+    cost = core_costs.cost_matrix_from_aggregate(
+        agg, r, b, loads, speeds, 8.0, framework)
+    want_d, want_b = core_costs.dissatisfaction_from_cost(cost, r)
+    got_d, got_b = dissatisfaction_from_aggregate_pallas(
+        agg, r, b, loads, speeds, 8.0, framework, interpret=True)
+    assert got_d.shape == (n,) and got_b.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=2e-4, atol=2e-2)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+def test_dissat_from_aggregate_kernel_row_block():
+    """Rectangular row blocks (the distributed per-shard case): the fused
+    kernel on a block aggregate reproduces the matching rows of the full
+    reduction (Ct framework needs the explicit global total_weight)."""
+    from repro.core import costs as core_costs
+    adj, r, b, loads, speeds = _problem_arrays(90, 5, seed=33)
+    agg = core_costs.adjacency_aggregate(adj, r, 5)
+    total_b = jnp.sum(b)
+    for fw in ("c", "ct"):
+        cost = core_costs.cost_matrix_from_aggregate(
+            agg, r, b, loads, speeds, 4.0, fw, total_weight=total_b)
+        want_d, want_b = core_costs.dissatisfaction_from_cost(cost, r)
+        lo, hi = 30, 60
+        got_d, got_b = dissatisfaction_from_aggregate_pallas(
+            agg[lo:hi], r[lo:hi], b[lo:hi], loads, speeds, 4.0, fw,
+            total_weight=total_b, interpret=True)
+        np.testing.assert_allclose(np.asarray(got_d),
+                                   np.asarray(want_d[lo:hi]),
+                                   rtol=2e-4, atol=2e-2)
+        np.testing.assert_array_equal(np.asarray(got_b),
+                                      np.asarray(want_b[lo:hi]))
+
+
+def test_refine_with_aggregate_dissat_kernel():
+    """Incremental refinement with the fused kernel as its per-turn
+    reduction lands on the jnp incremental path's equilibrium."""
+    from repro.core.problem import make_problem
+    from repro.core.refine import refine
+    adj, r, b, loads, speeds = _problem_arrays(48, 3, seed=21)
+    prob = make_problem(adj, b, speeds, mu=8.0, normalize_speeds=False)
+    res_jnp = refine(prob, r, "c", max_turns=300)
+    res_pal = refine(prob, r, "c", max_turns=300,
+                     dissat_fn=ops.make_aggregate_dissat_fn(interpret=True))
+    np.testing.assert_array_equal(np.asarray(res_jnp.assignment),
+                                  np.asarray(res_pal.assignment))
+    assert int(res_jnp.num_moves) == int(res_pal.num_moves)
+
+
+def test_interpret_auto_detection():
+    """interpret=None auto-detects from the backend (satellite: no more
+    hard-coded interpret=True default); explicit values win."""
+    from repro.kernels.dissatisfaction import resolve_interpret
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    expected = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expected
+    # the kernel entry points accept interpret=None (the new default)
+    adj, r, b, loads, speeds = _problem_arrays(16, 3, seed=1)
+    out = cost_matrix_pallas(adj, r, b, loads, speeds, 2.0, "c",
+                             interpret=None)
+    assert out.shape == (16, 3)
 
 
 # ---------------------------------------------------------------------------
