@@ -124,26 +124,42 @@ def node_costs(problem: PartitionProblem, state: PartitionState,
     return jnp.take_along_axis(cm, state.assignment[:, None], axis=1)[:, 0]
 
 
-def dissatisfaction_from_cost(cost: Array, row_assignment: Array):
+def dissatisfaction_from_cost(cost: Array, row_assignment: Array,
+                              theta: Array | None = None):
     """Eq. 4 from an already-assembled cost block: I(i) and the arg-best
-    machine.  Ties break toward the lowest machine index (DESIGN.md §7)."""
+    machine.  Ties break toward the lowest machine index (DESIGN.md §7).
+
+    ``theta`` is the per-node migration-price (hysteresis) threshold of
+    DESIGN.md §11: the returned dissatisfaction is NET of it
+    (``I(i) - theta_i``), so a node is movable only when its raw Eq.-4
+    dissatisfaction exceeds its migration price.  This is THE one place
+    theta is subtracted — core, distributed and kernel paths all route
+    through it (or mirror its exact op order), preserving the bitwise
+    core↔distributed contract.  ``theta=None`` skips the subtraction
+    entirely and is bit-for-bit today's behavior.
+    """
     current = jnp.take_along_axis(cost, row_assignment[:, None], axis=1)[:, 0]
     best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
     best = jnp.min(cost, axis=1)
-    return current - best, best_machine
+    dissat = current - best
+    if theta is not None:
+        dissat = dissat - theta
+    return dissat, best_machine
 
 
 def dissatisfaction(problem: PartitionProblem, state: PartitionState,
                     framework: str = C_FRAMEWORK,
-                    cost: Array | None = None):
+                    cost: Array | None = None,
+                    theta: Array | None = None):
     """Eq. 4:  I(i) = C_i(r_i) - min_k C_i(k), with the arg-best machine.
 
     Returns (dissat (N,), best_machine (N,)).  Ties break toward the lowest
-    machine index (deterministic, DESIGN.md §7).
+    machine index (deterministic, DESIGN.md §7).  ``theta`` as in
+    :func:`dissatisfaction_from_cost` (net-of-migration-price Eq. 4).
     """
     if cost is None:
         cost = cost_matrix(problem, state, framework)
-    return dissatisfaction_from_cost(cost, state.assignment)
+    return dissatisfaction_from_cost(cost, state.assignment, theta)
 
 
 # ---------------------------------------------------------------------------

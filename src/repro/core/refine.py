@@ -33,6 +33,15 @@ Also implements the paper-§4.5 *simultaneous transfer* mode (one move per
 machine per sweep, descent not guaranteed — measured in benchmarks), which
 applies a rank-K aggregate update per sweep and re-derives both potentials
 via the O(K) closed forms of :mod:`repro.core.aggregate`.
+
+Migration-aware hysteresis (DESIGN.md §11): every entry point takes a
+per-node threshold ``theta`` (scalar or (N,), the node's migration price).
+A node is movable only when its Eq.-4 dissatisfaction EXCEEDS ``theta_i``;
+the recorded gain is net of it.  Convergence (Thm. 4.1) is preserved
+because every accepted move still strictly descends the potential — by at
+least ``2*theta_i`` for C_0 (Thm. 3.1) and ``theta_i`` for Ct_0
+(Thm. 5.1).  ``theta=None`` (default) and ``theta=0`` reproduce today's
+move sequences bitwise.
 """
 from __future__ import annotations
 
@@ -63,14 +72,23 @@ class TurnResult(NamedTuple):
     ct0: Array            # float  — Ct_0 after the turn
 
 
+def _resolve_theta(theta, num_nodes: int) -> Array | None:
+    """Normalize the hysteresis threshold to None or an (N,) f32 array."""
+    if theta is None:
+        return None
+    theta = jnp.asarray(theta, jnp.float32)
+    return jnp.broadcast_to(theta, (num_nodes,))
+
+
 def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
-          framework: str, tol: float, cost_matrix_fn=None):
+          framework: str, tol: float, cost_matrix_fn=None, theta=None):
     """One machine turn, recompute path: rebuild costs from scratch."""
     if cost_matrix_fn is None:
         cost = costs.cost_matrix(problem, state, framework)
     else:
         cost = cost_matrix_fn(problem, state, framework)
-    dissat, best = costs.dissatisfaction(problem, state, framework, cost=cost)
+    dissat, best = costs.dissatisfaction(problem, state, framework, cost=cost,
+                                         theta=theta)
     owned = state.assignment == machine
     masked = jnp.where(owned, dissat, -jnp.inf)
     node = jnp.argmax(masked).astype(jnp.int32)
@@ -98,25 +116,27 @@ def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
 
 def _turn_incremental(problem: PartitionProblem, agg: agg_mod.AggregateState,
                       machine: Array, framework: str, tol: float,
-                      total_b: Array, dissat_fn=None):
+                      total_b: Array, dissat_fn=None, theta=None):
     """One machine turn, incremental path: O(NK) costs from the carried
     aggregate, O(N) rank-1 move (DESIGN.md §10).
 
     ``dissat_fn(aggregate, assignment, node_weights, loads, speeds, mu,
-    framework, total_weight) -> (dissat, best)`` substitutes the fused
-    Pallas kernel (``repro.kernels.ops.make_aggregate_dissat_fn``) for the
-    jnp assembly.
+    framework, total_weight, theta) -> (dissat, best)`` substitutes the
+    fused Pallas kernel (``repro.kernels.ops.make_aggregate_dissat_fn``)
+    for the jnp assembly; like the jnp path it returns dissatisfaction NET
+    of the hysteresis threshold ``theta`` (None = no threshold).
     """
     if dissat_fn is None:
         cost = costs.cost_matrix_from_aggregate(
             agg.aggregate, agg.assignment, problem.node_weights, agg.loads,
             problem.speeds, problem.mu, framework, total_weight=total_b)
-        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment)
+        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment,
+                                                       theta)
     else:
         dissat, best = dissat_fn(agg.aggregate, agg.assignment,
                                  problem.node_weights, agg.loads,
                                  problem.speeds, problem.mu, framework,
-                                 total_b)
+                                 total_b, theta)
     owned = agg.assignment == machine
     masked = jnp.where(owned, dissat, -jnp.inf)
     node = jnp.argmax(masked).astype(jnp.int32)
@@ -153,16 +173,20 @@ def refine(problem: PartitionProblem, assignment: Array,
            framework: str = costs.C_FRAMEWORK,
            max_turns: int = 10_000, tol: float = DEFAULT_TOL,
            cost_matrix_fn=None, incremental: bool = True,
-           verify_every: int = 0, dissat_fn=None) -> RefineResult:
+           verify_every: int = 0, dissat_fn=None,
+           theta=None) -> RefineResult:
     """Run round-robin refinement to convergence (K consecutive idle turns).
 
     ``incremental=True`` (default) carries the aggregate state; passing
     ``cost_matrix_fn`` forces the recompute path (a custom cost function
     rebuilds from the full adjacency).  ``verify_every=M > 0`` rebuilds the
     carry from scratch every M turns and records the drift (incremental
-    path only).
+    path only).  ``theta`` (scalar or (N,)) is the per-node migration-price
+    hysteresis threshold (DESIGN.md §11); ``None``/``0`` reproduces the
+    threshold-free move sequence bitwise.
     """
     K = problem.num_machines
+    theta = _resolve_theta(theta, problem.num_nodes)
     if cost_matrix_fn is not None:
         incremental = False
 
@@ -176,7 +200,7 @@ def refine(problem: PartitionProblem, assignment: Array,
         def body(carry):
             state, machine, idle, turns, moves = carry
             state, res = _turn(problem, state, machine, framework, tol,
-                               cost_matrix_fn)
+                               cost_matrix_fn, theta)
             idle = jnp.where(res.moved, 0, idle + 1)
             return (state, (machine + 1) % K, idle, turns + 1,
                     moves + res.moved.astype(jnp.int32))
@@ -199,7 +223,7 @@ def refine(problem: PartitionProblem, assignment: Array,
     def body(carry):
         agg, machine, idle, turns, moves, max_drift = carry
         agg, res = _turn_incremental(problem, agg, machine, framework, tol,
-                                     total_b, dissat_fn)
+                                     total_b, dissat_fn, theta)
         idle = jnp.where(res.moved, 0, idle + 1)
         turns = turns + 1
         if verify_every:
@@ -242,7 +266,8 @@ class Trace(NamedTuple):
 def refine_traced(problem: PartitionProblem, assignment: Array,
                   framework: str = costs.C_FRAMEWORK,
                   max_turns: int = 512, tol: float = DEFAULT_TOL,
-                  incremental: bool = True, verify_every: int = 0):
+                  incremental: bool = True, verify_every: int = 0,
+                  theta=None):
     """Fixed-length scan variant recording both potentials after every turn.
 
     Returns (RefineResult, Trace).  Turns after convergence are no-ops with
@@ -252,9 +277,12 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
     carried values, updated per move by the exact-potential identities —
     no O(N^2) pass per turn.  On the recompute path they are evaluated
     from scratch each turn (the oracle ``tests/test_incremental.py``
-    compares against).
+    compares against).  ``theta`` as in :func:`refine`; recorded gains are
+    net of it, while the traced potentials remain the actual C_0/Ct_0
+    values (which descend by at least 2*theta/theta per accepted move).
     """
     K = problem.num_machines
+    theta = _resolve_theta(theta, problem.num_nodes)
 
     if not incremental:
         state0 = make_state(problem, assignment)
@@ -263,7 +291,7 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
             state, machine, idle = carry
             active = idle < K
             new_state, res = _turn(problem, state, framework=framework,
-                                   tol=tol, machine=machine)
+                                   tol=tol, machine=machine, theta=theta)
             new_state = jax.tree.map(
                 lambda new, old: jnp.where(active, new, old), new_state, state)
             moved = res.moved & active
@@ -293,7 +321,7 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
         agg, machine, idle, max_drift = carry
         active = idle < K
         new_agg, res = _turn_incremental(problem, agg, machine, framework,
-                                         tol, total_b)
+                                         tol, total_b, theta=theta)
         new_agg = jax.tree.map(
             lambda new, old: jnp.where(active, new, old), new_agg, agg)
         moved = res.moved & active
@@ -323,7 +351,8 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
 @partial(jax.jit, static_argnames=("framework", "max_sweeps"))
 def refine_simultaneous(problem: PartitionProblem, assignment: Array,
                         framework: str = costs.C_FRAMEWORK,
-                        max_sweeps: int = 256, tol: float = DEFAULT_TOL):
+                        max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                        theta=None):
     """§4.5 asynchronous mode: every machine moves its most dissatisfied node
     in the same sweep.  Faster wall-clock (one cost evaluation per sweep
     serves all K machines) but descent is NOT guaranteed; ``refine_traced``
@@ -337,9 +366,12 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
     apply — DESIGN.md §10).
 
     ``num_moves`` counts ACTUAL transfers (``sum(will_move)`` per sweep),
-    not the ``K * sweeps`` upper bound.
+    not the ``K * sweeps`` upper bound.  ``theta`` as in :func:`refine`
+    (each machine's pick maximizes — and its move gate tests — the
+    dissatisfaction net of the node's migration price).
     """
     K = problem.num_machines
+    theta = _resolve_theta(theta, problem.num_nodes)
     agg0 = agg_mod.init_aggregate_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
 
@@ -348,7 +380,8 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
         cost = costs.cost_matrix_from_aggregate(
             agg.aggregate, agg.assignment, problem.node_weights, agg.loads,
             problem.speeds, problem.mu, framework, total_weight=total_b)
-        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment)
+        dissat, best = costs.dissatisfaction_from_cost(cost, agg.assignment,
+                                                       theta)
         # Per machine: the most dissatisfied owned node.
         owned = jax.nn.one_hot(agg.assignment, K, dtype=cost.dtype)   # (N,K)
         masked = jnp.where(owned.T > 0, dissat[None, :], -jnp.inf)    # (K,N)

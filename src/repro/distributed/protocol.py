@@ -23,6 +23,12 @@ update every machine's replicated potentials.  8 extra bytes per
 candidate, still independent of N; the initial potentials are reduced
 once from per-shard partials.
 
+Hysteresis (DESIGN.md §11): the per-node migration-price threshold
+``theta`` is a *shard-local* input — each shard subtracts its own slice
+before picking its candidate, so candidates carry gains net of the
+migration price and the wire payload is unchanged (still 16 B/candidate,
+O(K) per turn, independent of N).
+
 Numerical contract: :func:`shard_cost_matrix` (recompute) and
 :func:`shard_cost_from_aggregate` (incremental) reproduce the rows of the
 controller's cost matrix *bitwise* — both delegate to
@@ -149,16 +155,22 @@ def shard_cost_matrix(row_block: Array, r_local: Array, b_local: Array,
 
 def _shard_dissatisfaction(row_block, b_local, ids, valid, assignment,
                            loads, speeds, mu, total_b, framework,
-                           cost_matrix_fn=None):
-    """Per-node dissatisfaction + best machine for the shard's rows."""
+                           cost_matrix_fn=None, theta_local=None):
+    """Per-node dissatisfaction + best machine for the shard's rows.
+
+    ``theta_local`` is the shard's slice of the per-node hysteresis
+    threshold (DESIGN.md §11) — evaluated locally, so the wire payload
+    stays the same O(K) candidates; the subtraction delegates to
+    :func:`repro.core.costs.dissatisfaction_from_cost` so the net values
+    are bitwise identical to the controller's.
+    """
     if cost_matrix_fn is None:
         cost_matrix_fn = shard_cost_matrix
     r_local = assignment[ids]
     cost = cost_matrix_fn(row_block, r_local, b_local, assignment,
                           loads, speeds, mu, total_b, framework)
-    current = jnp.take_along_axis(cost, r_local[:, None], axis=1)[:, 0]
-    best_machine = jnp.argmin(cost, axis=1).astype(jnp.int32)
-    dissat = current - jnp.min(cost, axis=1)
+    dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local,
+                                                           theta_local)
     return r_local, dissat, best_machine
 
 
@@ -166,11 +178,11 @@ def local_candidate(row_block: Array, b_local: Array, ids: Array,
                     valid: Array, assignment: Array, loads: Array,
                     speeds: Array, mu: Array, total_b: Array,
                     machine: Array, framework: str,
-                    cost_matrix_fn=None) -> Candidate:
+                    cost_matrix_fn=None, theta_local=None) -> Candidate:
     """The shard's most dissatisfied node owned by ``machine`` (Eq. 4)."""
     r_local, dissat, best_machine = _shard_dissatisfaction(
         row_block, b_local, ids, valid, assignment, loads, speeds, mu,
-        total_b, framework, cost_matrix_fn)
+        total_b, framework, cost_matrix_fn, theta_local)
     owned = (r_local == machine) & valid
     masked = jnp.where(owned, dissat, -jnp.inf)
     loc = jnp.argmax(masked).astype(jnp.int32)
@@ -184,7 +196,7 @@ def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
                                    speeds: Array, mu: Array, total_b: Array,
                                    machine: Array, framework: str,
                                    with_deltas: bool = False,
-                                   dissat_fn=None):
+                                   dissat_fn=None, theta_local=None):
     """Incremental-path candidate: costs from the shard's carried block
     aggregate, O(Ns*K) — no matmul, no read of any off-shard adjacency.
 
@@ -194,18 +206,22 @@ def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
     each shard attaches to its candidate.  ``dissat_fn`` substitutes a
     fused kernel for the jnp (dissat, best) reduction; it uses the SAME
     (aggregate, row_assignment, node_weights, loads, speeds, mu,
-    framework, total_weight) convention as ``repro.core.refine``'s
+    framework, total_weight, theta) convention as ``repro.core.refine``'s
     ``dissat_fn``, so ``repro.kernels.ops.make_aggregate_dissat_fn()``
-    plugs into both.
+    plugs into both.  ``theta_local`` is the shard's slice of the per-node
+    hysteresis threshold (DESIGN.md §11) — subtracted shard-locally, so
+    candidates carry net gains and the wire stays O(K).
     """
     r_local = assignment[ids]
     if dissat_fn is None:
         cost = shard_cost_from_aggregate(aggregate, r_local, b_local, loads,
                                          speeds, mu, total_b, framework)
-        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local)
+        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local,
+                                                               theta_local)
     else:
         dissat, best_machine = dissat_fn(aggregate, r_local, b_local, loads,
-                                         speeds, mu, framework, total_b)
+                                         speeds, mu, framework, total_b,
+                                         theta_local)
     owned = (r_local == machine) & valid
     masked = jnp.where(owned, dissat, -jnp.inf)
     loc = jnp.argmax(masked).astype(jnp.int32)
@@ -222,19 +238,23 @@ def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
 def local_candidates_all_machines_from_aggregate(
         aggregate: Array, b_local: Array, ids: Array, valid: Array,
         assignment: Array, loads: Array, speeds: Array, mu: Array,
-        total_b: Array, framework: str, dissat_fn=None) -> Candidate:
+        total_b: Array, framework: str, dissat_fn=None,
+        theta_local=None) -> Candidate:
     """§4.5 sweep candidates (one per machine) from the carried block
     aggregate — Candidate of (K,) arrays, O(Ns*K) per sweep.
-    ``dissat_fn`` as in :func:`local_candidate_from_aggregate`."""
+    ``dissat_fn`` / ``theta_local`` as in
+    :func:`local_candidate_from_aggregate`."""
     k = speeds.shape[0]
     r_local = assignment[ids]
     if dissat_fn is None:
         cost = shard_cost_from_aggregate(aggregate, r_local, b_local, loads,
                                          speeds, mu, total_b, framework)
-        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local)
+        dissat, best_machine = costs.dissatisfaction_from_cost(cost, r_local,
+                                                               theta_local)
     else:
         dissat, best_machine = dissat_fn(aggregate, r_local, b_local, loads,
-                                         speeds, mu, framework, total_b)
+                                         speeds, mu, framework, total_b,
+                                         theta_local)
     owned = valid[None, :] & (r_local[None, :]
                               == jnp.arange(k, dtype=jnp.int32)[:, None])
     masked = jnp.where(owned, dissat[None, :], -jnp.inf)     # (K, Ns)
@@ -248,12 +268,13 @@ def local_candidates_all_machines(row_block: Array, b_local: Array,
                                   ids: Array, valid: Array, assignment: Array,
                                   loads: Array, speeds: Array, mu: Array,
                                   total_b: Array, framework: str,
-                                  cost_matrix_fn=None) -> Candidate:
+                                  cost_matrix_fn=None,
+                                  theta_local=None) -> Candidate:
     """§4.5 sweep mode: one candidate per machine — Candidate of (K,) arrays."""
     k = speeds.shape[0]
     r_local, dissat, best_machine = _shard_dissatisfaction(
         row_block, b_local, ids, valid, assignment, loads, speeds, mu,
-        total_b, framework, cost_matrix_fn)
+        total_b, framework, cost_matrix_fn, theta_local)
     owned = valid[None, :] & (r_local[None, :]
                               == jnp.arange(k, dtype=jnp.int32)[:, None])
     masked = jnp.where(owned, dissat[None, :], -jnp.inf)     # (K, Ns)

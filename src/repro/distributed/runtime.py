@@ -60,9 +60,34 @@ from ..core import costs
 from ..core.problem import PartitionProblem, make_state
 from ..core.refine import DEFAULT_TOL, RefineResult, Trace
 from . import protocol
-from .views import ShardViews, build_views
+from .views import ShardViews, build_views, shard_node_values
 
 Array = jax.Array
+
+
+def _vmap_shards(fn, theta_blocks: Array | None, *axes):
+    """Map ``fn(*per_shard_args, theta_local)`` over the shard axis with
+    the optional (S, Ns) theta operand.  THE one place the optional-theta
+    dispatch lives: ``theta_blocks=None`` passes a literal ``None``
+    threshold through (the bitwise no-subtraction path of DESIGN.md §11)
+    instead of mapping a zero block."""
+    if theta_blocks is None:
+        return jax.vmap(lambda *a: fn(*a, None))(*axes)
+    return jax.vmap(fn)(*axes, theta_blocks)
+
+
+def _shard_theta(theta, problem: PartitionProblem,
+                 num_shards: int) -> Array | None:
+    """(S, Ns) shard blocks of the per-node hysteresis threshold, or None.
+
+    theta never crosses the wire: each shard reads only its own block
+    (DESIGN.md §11), mirroring the single controller's (N,) broadcast.
+    """
+    if theta is None:
+        return None
+    theta = jnp.broadcast_to(jnp.asarray(theta, jnp.float32),
+                             (problem.num_nodes,))
+    return shard_node_values(theta, num_shards)
 
 
 def shard_problem(problem: PartitionProblem, num_shards: int) -> ShardViews:
@@ -118,37 +143,40 @@ def _init_block_aggregates(views: ShardViews, assignment: Array,
 
 def _vmap_candidates(views: ShardViews, assignment: Array, loads: Array,
                      speeds: Array, mu: Array, total_b: Array,
-                     machine: Array, framework: str,
-                     cost_fn: str) -> protocol.Candidate:
+                     machine: Array, framework: str, cost_fn: str,
+                     theta_blocks: Array | None = None) -> protocol.Candidate:
     """Recompute-path emulated exchange: all S candidates, stacked."""
     shard_cost = _shard_cost_fn(cost_fn)
 
-    def one(rb, b, ids, valid):
+    def one(rb, b, ids, valid, th):
         with jax.named_scope("shard_candidate"):
             return protocol.local_candidate(
                 rb, b, ids, valid, assignment, loads, speeds, mu, total_b,
-                machine, framework, cost_matrix_fn=shard_cost)
+                machine, framework, cost_matrix_fn=shard_cost,
+                theta_local=th)
 
-    return jax.vmap(one)(views.row_block, views.weights, views.ids,
-                         views.valid)
+    return _vmap_shards(one, theta_blocks, views.row_block, views.weights,
+                        views.ids, views.valid)
 
 
 def _vmap_candidates_incremental(views: ShardViews, block_aggs: Array,
                                  assignment: Array, loads: Array,
                                  speeds: Array, mu: Array, total_b: Array,
                                  machine: Array, framework: str,
-                                 cost_fn: str, with_deltas: bool = False):
+                                 cost_fn: str, with_deltas: bool = False,
+                                 theta_blocks: Array | None = None):
     """Incremental-path emulated exchange from the carried block aggregates."""
     dissat_fn = _shard_dissat_fn(cost_fn)
 
-    def one(agg, b, ids, valid):
+    def one(agg, b, ids, valid, th):
         with jax.named_scope("shard_candidate_incremental"):
             return protocol.local_candidate_from_aggregate(
                 agg, b, ids, valid, assignment, loads, speeds, mu, total_b,
                 machine, framework, with_deltas=with_deltas,
-                dissat_fn=dissat_fn)
+                dissat_fn=dissat_fn, theta_local=th)
 
-    return jax.vmap(one)(block_aggs, views.weights, views.ids, views.valid)
+    return _vmap_shards(one, theta_blocks, block_aggs, views.weights,
+                        views.ids, views.valid)
 
 
 def _update_block_aggregates(views: ShardViews, block_aggs: Array,
@@ -199,7 +227,8 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
                        num_shards: int | None = None,
                        max_turns: int = 10_000, tol: float = DEFAULT_TOL,
                        cost_fn: str = "jnp",
-                       incremental: bool = True) -> RefineResult:
+                       incremental: bool = True,
+                       theta=None) -> RefineResult:
     """Distributed round-robin refinement to convergence (K idle turns).
 
     Protocol per turn: each shard computes one Candidate from local state
@@ -208,12 +237,18 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
     replicated assignment mirror + O(K) load vector — and, on the default
     incremental path, the same rank-1 update to its carried (Ns, K) block
     aggregate, so no shard ever rebuilds its aggregate matmul after turn 0.
+
+    ``theta`` (scalar or (N,)) is the migration-price hysteresis threshold
+    (DESIGN.md §11), evaluated shard-locally — the wire stays O(K) and
+    ``theta=None``/``0`` reproduces the threshold-free move sequence
+    bitwise (the core↔distributed contract).
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+    theta_blocks = _shard_theta(theta, problem, s)
 
     if incremental:
         aggs0 = _init_block_aggregates(views, state0.assignment, k)
@@ -226,7 +261,7 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
             r, loads, aggs, machine, idle, turns, moves = carry
             cands = _vmap_candidates_incremental(
                 views, aggs, r, loads, problem.speeds, problem.mu, total_b,
-                machine, framework, cost_fn)
+                machine, framework, cost_fn, theta_blocks=theta_blocks)
             winner = protocol.elect(cands, tol)
             aggs = _update_block_aggregates(views, aggs, winner, machine)
             r, loads = protocol.apply_move(r, loads, winner, machine)
@@ -249,7 +284,8 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
     def body(carry):
         r, loads, machine, idle, turns, moves = carry
         cands = _vmap_candidates(views, r, loads, problem.speeds, problem.mu,
-                                 total_b, machine, framework, cost_fn)
+                                 total_b, machine, framework, cost_fn,
+                                 theta_blocks=theta_blocks)
         winner = protocol.elect(cands, tol)
         r, loads = protocol.apply_move(r, loads, winner, machine)
         idle = jnp.where(winner.moved, 0, idle + 1)
@@ -272,7 +308,8 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
                               max_turns: int = 512,
                               tol: float = DEFAULT_TOL,
                               cost_fn: str = "jnp",
-                              incremental: bool = True):
+                              incremental: bool = True,
+                              theta=None):
     """Fixed-length traced variant; returns ``(RefineResult, Trace)`` with
     the exact semantics (and, in sequential mode, the exact move sequence)
     of :func:`repro.core.refine.refine_traced`.
@@ -281,13 +318,15 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
     per-shard partials and thereafter updated by the winner's 8-byte
     exact-potential deltas (Thm. 3.1/5.1) — O(1) wire + O(K) compute per
     turn, no O(N) pass of any kind.  ``incremental=False`` restores the
-    per-turn partial-reduction recompute.
+    per-turn partial-reduction recompute.  ``theta`` as in
+    :func:`refine_distributed`.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+    theta_blocks = _shard_theta(theta, problem, s)
 
     if incremental:
         aggs0 = _init_block_aggregates(views, state0.assignment, k)
@@ -301,7 +340,8 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
             active = idle < k
             cands, dc0s, dct0s = _vmap_candidates_incremental(
                 views, aggs, r, loads, problem.speeds, problem.mu, total_b,
-                machine, framework, cost_fn, with_deltas=True)
+                machine, framework, cost_fn, with_deltas=True,
+                theta_blocks=theta_blocks)
             winner = protocol.elect(cands, tol)
             moved = winner.moved & active
             gated = winner._replace(moved=moved)
@@ -334,7 +374,8 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
         r, loads, machine, idle = carry
         active = idle < k
         cands = _vmap_candidates(views, r, loads, problem.speeds, problem.mu,
-                                 total_b, machine, framework, cost_fn)
+                                 total_b, machine, framework, cost_fn,
+                                 theta_blocks=theta_blocks)
         winner = protocol.elect(cands, tol)
         new_r, new_loads = protocol.apply_move(r, loads, winner, machine)
         new_r = jnp.where(active, new_r, r)
@@ -376,14 +417,15 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
                                     max_sweeps: int = 256,
                                     tol: float = DEFAULT_TOL,
                                     cost_fn: str = "jnp",
-                                    incremental: bool = True):
+                                    incremental: bool = True,
+                                    theta=None):
     """Distributed §4.5 sweeps: each shard ships K candidates per sweep
     (one per machine), elections run per machine, all K disjoint moves
     apply at once as a rank-K block-aggregate update.  Exchange per sweep:
     S*K candidates + S load/sq-load/cut partials — still independent of N.
 
     ``num_moves`` counts actual transfers (sum of per-sweep movers), not
-    the K*sweeps upper bound.
+    the K*sweeps upper bound.  ``theta`` as in :func:`refine_distributed`.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
@@ -391,6 +433,16 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
     sq_weights = views.weights * views.weights
+    theta_blocks = _shard_theta(theta, problem, s)
+
+    def _sweep_cands_incremental(aggs, r, loads, dissat_fn):
+        def one(agg, b, ids, v, th):
+            return protocol.local_candidates_all_machines_from_aggregate(
+                agg, b, ids, v, r, loads, problem.speeds, problem.mu,
+                total_b, framework, dissat_fn=dissat_fn, theta_local=th)
+
+        return _vmap_shards(one, theta_blocks, aggs, views.weights,
+                            views.ids, views.valid)              # (S, K)
 
     if incremental:
         aggs0 = _init_block_aggregates(views, state0.assignment, k)
@@ -398,13 +450,7 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
 
         def sweep(carry, _):
             r, loads, aggs, done, moves = carry
-            cands = jax.vmap(
-                lambda agg, b, ids, v:
-                    protocol.local_candidates_all_machines_from_aggregate(
-                        agg, b, ids, v, r, loads, problem.speeds,
-                        problem.mu, total_b, framework,
-                        dissat_fn=dissat_fn)
-            )(aggs, views.weights, views.ids, views.valid)       # (S, K)
+            cands = _sweep_cands_incremental(aggs, r, loads, dissat_fn)
             winners = jax.vmap(protocol.elect, in_axes=(1, None),
                                out_axes=0)(cands, tol)            # (K,)
             any_move = jnp.any(winners.moved) & ~done
@@ -457,11 +503,15 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
 
     def sweep(carry, _):
         r, loads, done, moves = carry
-        cands = jax.vmap(
-            lambda rb, b, ids, v: protocol.local_candidates_all_machines(
+
+        def one(rb, b, ids, v, th):
+            return protocol.local_candidates_all_machines(
                 rb, b, ids, v, r, loads, problem.speeds, problem.mu,
-                total_b, framework, cost_matrix_fn=shard_cost)
-        )(views.row_block, views.weights, views.ids, views.valid)  # (S, K)
+                total_b, framework, cost_matrix_fn=shard_cost,
+                theta_local=th)
+
+        cands = _vmap_shards(one, theta_blocks, views.row_block,
+                             views.weights, views.ids, views.valid)  # (S, K)
         winners = jax.vmap(protocol.elect, in_axes=(1, None),
                            out_axes=0)(cands, tol)                 # (K,)
         any_move = jnp.any(winners.moved) & ~done
@@ -500,7 +550,7 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
                                  num_shards: int | None = None,
                                  max_turns: int = 10_000,
                                  tol: float = DEFAULT_TOL,
-                                 devices=None) -> RefineResult:
+                                 devices=None, theta=None) -> RefineResult:
     """Sequential-turn refinement with each shard on its own device.
 
     Row blocks are placed along a 1-D ``Mesh`` axis ``"shards"``; the
@@ -531,9 +581,15 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
     views = build_views(problem, s)
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
+    # theta is a shard-local per-node input (DESIGN.md §11): placed on the
+    # shard axis like the weights, never exchanged.  A zero block is the
+    # exact no-threshold game (the subtraction of 0 is lossless in f32).
+    theta_blocks = _shard_theta(theta, problem, s)
+    if theta_blocks is None:
+        theta_blocks = jnp.zeros((s, views.shard_size), jnp.float32)
 
-    def spmd(rb, b, ids, valid, r0, loads0, speeds, mu, tot):
-        rb, b, ids, valid = rb[0], b[0], ids[0], valid[0]
+    def spmd(rb, b, ids, valid, th, r0, loads0, speeds, mu, tot):
+        rb, b, ids, valid, th = rb[0], b[0], ids[0], valid[0], th[0]
         agg0 = protocol.block_aggregate(rb, r0, k)   # once, O(Ns·N·K)
 
         def cond(carry):
@@ -544,7 +600,7 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
             r, loads, agg, machine, idle, turns, moves = carry
             cand = protocol.local_candidate_from_aggregate(
                 agg, b, ids, valid, r, loads, speeds, mu, tot, machine,
-                framework)
+                framework, theta_local=th)
             cands = protocol.Candidate(
                 gain=jax.lax.all_gather(cand.gain, "shards"),
                 node=jax.lax.all_gather(cand.node, "shards"),
@@ -568,12 +624,12 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
     sharded = P("shards")
     rep = P()
     fn = shard_map(spmd, mesh=mesh,
-                   in_specs=(sharded, sharded, sharded, sharded,
+                   in_specs=(sharded, sharded, sharded, sharded, sharded,
                              rep, rep, rep, rep, rep),
                    out_specs=(rep, rep, rep, rep, rep),
                    check_rep=False)
     r, loads, moves, turns, converged = jax.jit(fn)(
-        views.row_block, views.weights, views.ids, views.valid,
+        views.row_block, views.weights, views.ids, views.valid, theta_blocks,
         state0.assignment, state0.loads, problem.speeds, problem.mu, total_b)
     return RefineResult(assignment=r, loads=loads, num_moves=moves,
                         num_turns=turns, converged=converged)

@@ -90,6 +90,23 @@ def build_views(problem: PartitionProblem, num_shards: int) -> ShardViews:
     )
 
 
+def shard_node_values(values: Array, num_shards: int, fill=0.0) -> Array:
+    """Pad + reshape an (N,) per-node array into (S, Ns) shard blocks with
+    the same row layout as :func:`build_views` (padding rows get ``fill``).
+
+    Used for per-node side inputs that must be read shard-locally — e.g.
+    the hysteresis threshold ``theta`` (DESIGN.md §11), which never
+    crosses the wire: each shard only ever evaluates its own block.
+    """
+    values = jnp.asarray(values)
+    n = values.shape[0]
+    if not 1 <= num_shards <= n:
+        raise ValueError(f"num_shards={num_shards} must be in [1, {n}]")
+    ns = -(-n // num_shards)
+    out = jnp.full((ns * num_shards,), fill, values.dtype).at[:n].set(values)
+    return out.reshape(num_shards, ns)
+
+
 @dataclasses.dataclass(frozen=True)
 class BoundaryStats:
     """Host-side ghost/boundary summary per shard (powers accounting).

@@ -180,9 +180,9 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
 # incremental path: (dissat, best) straight from the carried aggregate
 # ---------------------------------------------------------------------------
 
-def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, loads_ref, speeds_ref,
-                   scalars_ref, dissat_ref, best_ref, *, framework: str,
-                   k_real: int):
+def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
+                   loads_ref, speeds_ref, scalars_ref, dissat_ref, best_ref,
+                   *, framework: str, k_real: int):
     kpad = loads_ref.shape[-1]
     tn = agg_ref.shape[0]
     aggregate = agg_ref[...].astype(jnp.float32)               # (TN, K)
@@ -210,14 +210,16 @@ def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, loads_ref, speeds_ref,
     best_idx = jnp.min(jnp.where(cost <= best_val[:, None], kidx, kpad),
                        axis=1).astype(jnp.int32)
     current = jnp.sum(jnp.where(own > 0, cost, 0.0), axis=1)
-    dissat_ref[0, :] = current - best_val
+    # net-of-migration-price Eq. 4 (DESIGN.md §11); theta rows default to 0
+    dissat_ref[0, :] = current - best_val - theta_rows_ref[0, :]
     best_ref[0, :] = best_idx
 
 
 def dissatisfaction_from_aggregate_pallas(
         aggregate: Array, row_assignment: Array, node_weights: Array,
         loads: Array, speeds: Array, mu, framework: str = "c", *,
-        total_weight: Array | None = None, tile_n: int = DEFAULT_TILE_N,
+        theta: Array | None = None, total_weight: Array | None = None,
+        tile_n: int = DEFAULT_TILE_N,
         interpret: bool | None = None) -> tuple[Array, Array]:
     """Fused Eq.-4 reduction over an already-built (rows, K) aggregate.
 
@@ -230,6 +232,12 @@ def dissatisfaction_from_aggregate_pallas(
     blocks of the distributed runtime drive it the same way (pass the
     shard's ``row_assignment`` / ``node_weights`` slices and the global
     ``total_weight``).
+
+    ``theta`` is the optional (rows,) per-node migration-price threshold
+    (DESIGN.md §11): the returned dissatisfaction is net of it (subtracted
+    in the same fused reduction — still one aggregate read, O(rows) out).
+    ``None`` rides a zero operand through the same subtraction, which is
+    exact for the finite Eq.-4 values.
     """
     interpret = resolve_interpret(interpret)
     n_rows, k = aggregate.shape
@@ -247,6 +255,10 @@ def dissatisfaction_from_aggregate_pallas(
         jnp.asarray(row_assignment, jnp.int32))
     b = jnp.zeros((1, rows_pad), jnp.float32).at[0, :n_rows].set(
         node_weights.astype(jnp.float32))
+    t = jnp.zeros((1, rows_pad), jnp.float32)
+    if theta is not None:
+        t = t.at[0, :n_rows].set(
+            jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (n_rows,)))
     l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
         loads.astype(jnp.float32))
     w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
@@ -262,6 +274,7 @@ def dissatisfaction_from_aggregate_pallas(
             pl.BlockSpec((tile_n, k_pad), lambda i: (i, 0)),   # aggregate
             pl.BlockSpec((1, tile_n), lambda i: (0, i)),       # r (rows)
             pl.BlockSpec((1, tile_n), lambda i: (0, i)),       # b (rows)
+            pl.BlockSpec((1, tile_n), lambda i: (0, i)),       # theta (rows)
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),        # loads
             pl.BlockSpec((1, k_pad), lambda i: (0, 0)),        # speeds
             pl.BlockSpec((1, 2), lambda i: (0, 0)),            # mu, B
@@ -275,5 +288,5 @@ def dissatisfaction_from_aggregate_pallas(
             jax.ShapeDtypeStruct((1, rows_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(a, r_rows, b, l_pad, w_pad, scalars)
+    )(a, r_rows, b, t, l_pad, w_pad, scalars)
     return dissat[0, :n_rows], best[0, :n_rows]

@@ -59,26 +59,31 @@ def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
                                    node_weights: Array, loads: Array,
                                    speeds: Array, mu, total_weight,
                                    framework: str = "c",
+                                   theta: Array | None = None,
                                    interpret: bool | None = None):
     """(dissat, best_machine) from a carried aggregate via the fused kernel
-    — the incremental refinement hot path (no (N, K) cost matrix in HBM)."""
+    — the incremental refinement hot path (no (N, K) cost matrix in HBM).
+    ``theta`` (rows,) subtracts the per-node migration price inside the
+    fused reduction (DESIGN.md §11); the result is net dissatisfaction."""
     if interpret is None:
         interpret = _default_interpret()
     return dissatisfaction_from_aggregate_pallas(
         aggregate, row_assignment, node_weights, loads, speeds, mu,
-        framework, total_weight=total_weight, interpret=interpret)
+        framework, theta=theta, total_weight=total_weight,
+        interpret=interpret)
 
 
 def make_aggregate_dissat_fn(interpret: bool | None = None):
     """Adapter with the (aggregate, assignment, node_weights, loads, speeds,
-    mu, framework, total_weight) signature expected by
+    mu, framework, total_weight, theta) signature expected by
     repro.core.refine(..., dissat_fn=...), so the incremental loop's
-    per-turn reduction runs as the fused Pallas kernel."""
+    per-turn reduction runs as the fused Pallas kernel (theta=None means
+    no hysteresis threshold)."""
     def fn(aggregate, assignment, node_weights, loads, speeds, mu,
-           framework, total_weight):
+           framework, total_weight, theta=None):
         return dissatisfaction_from_aggregate(
             aggregate, assignment, node_weights, loads, speeds, mu,
-            total_weight, framework, interpret=interpret)
+            total_weight, framework, theta=theta, interpret=interpret)
     return fn
 
 

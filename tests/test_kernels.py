@@ -162,6 +162,34 @@ def test_dissat_from_aggregate_kernel_row_block():
                                       np.asarray(want_b[lo:hi]))
 
 
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_dissat_from_aggregate_kernel_theta(framework):
+    """The (N,) theta operand subtracts the migration price inside the
+    fused reduction (DESIGN.md §11): net dissatisfaction == jnp net path,
+    best machine unchanged, and theta=None == explicit zeros."""
+    from repro.core import costs as core_costs
+    adj, r, b, loads, speeds = _problem_arrays(70, 5, seed=51)
+    agg = core_costs.adjacency_aggregate(adj, r, 5)
+    theta = jnp.asarray(
+        np.random.default_rng(52).uniform(0, 30, 70), jnp.float32)
+    cost = core_costs.cost_matrix_from_aggregate(
+        agg, r, b, loads, speeds, 8.0, framework)
+    want_d, want_b = core_costs.dissatisfaction_from_cost(cost, r, theta)
+    got_d, got_b = dissatisfaction_from_aggregate_pallas(
+        agg, r, b, loads, speeds, 8.0, framework, theta=theta,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=2e-4, atol=2e-2)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+    none_d, none_b = dissatisfaction_from_aggregate_pallas(
+        agg, r, b, loads, speeds, 8.0, framework, interpret=True)
+    zero_d, zero_b = dissatisfaction_from_aggregate_pallas(
+        agg, r, b, loads, speeds, 8.0, framework,
+        theta=jnp.zeros(70), interpret=True)
+    np.testing.assert_array_equal(np.asarray(none_d), np.asarray(zero_d))
+    np.testing.assert_array_equal(np.asarray(none_b), np.asarray(zero_b))
+
+
 def test_refine_with_aggregate_dissat_kernel():
     """Incremental refinement with the fused kernel as its per-turn
     reduction lands on the jnp incremental path's equilibrium."""
