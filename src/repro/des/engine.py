@@ -82,6 +82,9 @@ class DESConfig:
     intra_delay: int = 1          # event-tick for same-machine transfer
     hop_sim_latency: float = 1.0  # simulation-time increment per hop
     max_ticks: int = 20_000
+    # relative per-machine speeds (1.0 = nominal); None = uniform.  Fed
+    # into the refinement game as the w_k of Eq. 1/6.
+    machine_speeds: tuple[float, ...] | None = None
     # partition refinement
     refine_freq: int = 0          # 0 = never refine
     refine_framework: str = game_costs.C_FRAMEWORK
@@ -238,6 +241,17 @@ def make_initial_state(cfg: DESConfig, machine0: Array,
 # ---------------------------------------------------------------------------
 # One wall-clock tick
 # ---------------------------------------------------------------------------
+
+def _base_speeds(cfg: DESConfig) -> Array:
+    """(K,) static relative machine speeds from the config (1.0 = nominal)."""
+    if cfg.machine_speeds is None:
+        return jnp.ones((cfg.num_machines,), jnp.float32)
+    if len(cfg.machine_speeds) != cfg.num_machines:
+        raise ValueError(
+            f"machine_speeds has {len(cfg.machine_speeds)} entries for "
+            f"{cfg.num_machines} machines")
+    return jnp.asarray(cfg.machine_speeds, jnp.float32)
+
 
 def _select_events(ev: EventLists, idle: Array):
     """Per LP: pick the lowest-timestamp ready event (tick == 0); among ties
@@ -582,23 +596,32 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
 
     # ---- P6: periodic partition refinement (the paper's contribution) ------
     if cfg.refine_freq > 0:
+        speeds = _base_speeds(cfg)
         new_state = jax.lax.cond(
             (tick % cfg.refine_freq == 0) & ~done,
-            lambda s: _refine_partition(cfg, adj, s),
+            lambda s: _refine_partition(cfg, adj, s, speeds),
             lambda s: s, new_state)
     return new_state
 
 
-def _refine_partition(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
-    """Measure node/edge weights from live event lists and refine (§6.1)."""
+def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
+                      speeds: Array) -> DESState:
+    """Measure node/edge weights from live event lists and refine (§6.1).
+
+    ``speeds`` is the (K,) vector of the machines\' actual relative
+    speeds, normalized into the ``w_k`` of the cost frameworks (Eq. 1/6)
+    — refinement must optimize the game the machines are actually
+    playing, not a hardcoded-uniform one.
+    """
     K = cfg.num_machines
     b = jnp.sum(state.ev.valid, axis=1).astype(jnp.float32)
     spawn = jnp.sum(state.ev.valid & (state.ev.count > 0),
                     axis=1).astype(jnp.float32)
     c = (adj > 0).astype(jnp.float32) * (spawn[:, None] + spawn[None, :])
+    live = jnp.maximum(speeds.astype(jnp.float32), 1e-6)
     prob = PartitionProblem(
         adjacency=c, node_weights=b,
-        speeds=jnp.full((K,), 1.0 / K, jnp.float32),
+        speeds=live / jnp.sum(live),
         mu=jnp.asarray(cfg.refine_mu, jnp.float32))
     if cfg.refine_backend == "distributed":
         from ..distributed.runtime import refine_distributed

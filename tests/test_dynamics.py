@@ -1,0 +1,32 @@
+"""Dynamic rebalancing: the refinement game must see the real machines."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.des.engine import DESConfig, _refine_partition, make_initial_state
+
+
+def test_refine_partition_uses_live_speeds():
+    """REGRESSION (hardcoded speeds = 1/K): refinement must optimize the
+    machines' actual speeds.  8 identical LPs on a 3x-vs-1x pair start
+    balanced — the uniform-speed game is already at equilibrium there (the
+    old code made zero moves), the true game shifts load 3:1."""
+    n = 8
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=2 * n,
+                    event_capacity=8, history_capacity=16, refine_freq=1,
+                    refine_mu=1.0)
+    # two seed events per LP, zero adjacency: a pure load game with b_i = 2
+    src = np.repeat(np.arange(n, dtype=np.int32), 2)
+    state = make_initial_state(cfg, jnp.asarray(np.arange(n) % 2, jnp.int32),
+                               src, np.zeros(2 * n, np.float32),
+                               np.zeros(2 * n, np.int32))
+    adj = jnp.zeros((n, n), jnp.float32)
+    speeds = jnp.asarray([3.0, 1.0], jnp.float32)
+    out = _refine_partition(cfg, adj, state, speeds)
+    loads = np.zeros(2)
+    np.add.at(loads, np.asarray(out.machine),
+              np.asarray(jnp.sum(state.ev.valid, axis=1), np.float64))
+    assert loads[0] >= 2.0 * loads[1], \
+        f"refinement ignored the live speeds: loads {loads}"
