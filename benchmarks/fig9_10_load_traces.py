@@ -35,7 +35,10 @@ def trace_run(adj, refine_freq: int, seed: int = 3, num_machines: int = 4):
                            jax.random.PRNGKey(seed))
     state = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
     out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
-    tr = np.asarray(out.trace)[:int(out.trace_ptr)]
+    ptr = int(out.trace_ptr)
+    assert ptr <= cfg.max_trace, \
+        f"trace_ptr {ptr} exceeds max_trace {cfg.max_trace}"
+    tr = np.asarray(out.trace)[:ptr]
     return out, tr
 
 

@@ -7,4 +7,13 @@ from .engine import (  # noqa: F401
     make_initial_state,
     run_simulation,
 )
+from .scenarios import (  # noqa: F401
+    SpeedSchedule,
+    constant,
+    failure_recovery,
+    make_schedule,
+    random_churn,
+    slowdown,
+    speeds_at,
+)
 from .workload import ThreadSpec, flooded_packet_workload  # noqa: F401

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 from ..core import costs as game_costs
 from ..core.problem import PartitionProblem
 from ..core.refine import refine
+from .scenarios import SpeedSchedule, speeds_at
 
 Array = jax.Array
 
@@ -82,8 +83,10 @@ class DESConfig:
     intra_delay: int = 1          # event-tick for same-machine transfer
     hop_sim_latency: float = 1.0  # simulation-time increment per hop
     max_ticks: int = 20_000
-    # relative per-machine speeds (1.0 = nominal); None = uniform.  Fed
-    # into the refinement game as the w_k of Eq. 1/6.
+    # heterogeneous machines (DESIGN.md §11): relative per-machine speeds
+    # (1.0 = nominal; busy-time divides by the resident machine's speed).
+    # None = uniform.  A SpeedSchedule passed to run_simulation/des_tick
+    # overrides this per tick (speed churn scenarios, des/scenarios.py).
     machine_speeds: tuple[float, ...] | None = None
     # partition refinement
     refine_freq: int = 0          # 0 = never refine
@@ -103,6 +106,16 @@ class DESConfig:
     # long-running simulations).
     refine_incremental: bool = True
     refine_verify_every: int = 0
+    # migration-aware hysteresis (DESIGN.md §11): an LP migrates only when
+    # its dissatisfaction exceeds theta_i = refine_theta_scale * its live
+    # state size (event-list + history occupancy — the records a migration
+    # must ship).  0 = migration treated as free (today's behavior).
+    refine_theta_scale: float = 0.0
+    # transfer freeze: a migrated LP is frozen for
+    # round(migration_freeze * state_size * inter_delay) wall ticks (the
+    # state transfer it must wait for), so load traces reflect thrashing.
+    # 0 = instantaneous migration (today's behavior).
+    migration_freeze: float = 0.0
     # load trace (Figs 9/10)
     trace_stride: int = 50
     max_trace: int = 512
@@ -162,6 +175,10 @@ class DESState(NamedTuple):
     moves: Array        # () i32 — LP migrations applied by refinement
     # load trace (Figs 9/10): mean event-list length per machine over time
     trace: Array        # (max_trace, K) f32
+    # speed-normalized machine backlog Q_k / w_k at the same trace ticks:
+    # drain rate is proportional to machine speed, so equal Q_k/w_k means
+    # equal time-to-drain — the L_k/w_k balance of Eq. 8 (DESIGN.md §11)
+    trace_wload: Array  # (max_trace, K) f32
     trace_ptr: Array    # () i32
 
     @property
@@ -234,6 +251,7 @@ def make_initial_state(cfg: DESConfig, machine0: Array,
         refines=jnp.zeros((), jnp.int32),
         moves=jnp.zeros((), jnp.int32),
         trace=jnp.zeros((cfg.max_trace, K), jnp.float32),
+        trace_wload=jnp.zeros((cfg.max_trace, K), jnp.float32),
         trace_ptr=jnp.zeros((), jnp.int32),
     )
 
@@ -253,6 +271,13 @@ def _base_speeds(cfg: DESConfig) -> Array:
     return jnp.asarray(cfg.machine_speeds, jnp.float32)
 
 
+def _live_state_size(state: DESState) -> Array:
+    """(N,) per-LP live state size: event-list + history occupancy — the
+    records a migration must ship (sizes theta and the transfer freeze)."""
+    return (jnp.sum(state.ev.valid, axis=1)
+            + jnp.sum(state.hist.valid, axis=1)).astype(jnp.float32)
+
+
 def _select_events(ev: EventLists, idle: Array):
     """Per LP: pick the lowest-timestamp ready event (tick == 0); among ties
     prefer ROLLBACK events, then the lowest slot.  Returns (has, slot)."""
@@ -270,13 +295,21 @@ def _select_events(ev: EventLists, idle: Array):
     return has, slot
 
 
-def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
-    """Advance the simulator by one wall-clock tick."""
+def des_tick(cfg: DESConfig, adj: Array, state: DESState,
+             speed_schedule: SpeedSchedule | None = None) -> DESState:
+    """Advance the simulator by one wall-clock tick.
+
+    ``speed_schedule`` (optional) supplies the per-machine speeds in
+    effect this tick (speed-churn scenarios, :mod:`repro.des.scenarios`);
+    otherwise ``cfg.machine_speeds`` applies throughout.
+    """
     N, E, H = cfg.num_lps, cfg.event_capacity, cfg.history_capacity
     K = cfg.num_machines
     ev, hist = state.ev, state.hist
     nbr = adj > 0
     rows = jnp.arange(N)
+    speeds = _base_speeds(cfg) if speed_schedule is None \
+        else speeds_at(speed_schedule, state.tick)
 
     # ---- P0: transfer-delay countdown (only events already in lists) -------
     ev = ev._replace(tick=jnp.maximum(ev.tick - (ev.valid & (ev.tick > 0)), 0))
@@ -303,7 +336,10 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
     busy_tick = jnp.where(was_busy, state.busy_tick - 1, state.busy_tick)
     completed = was_busy & (busy_tick <= 0)
     still_busy = was_busy & ~completed
-    processed = state.processed + jnp.sum(completed.astype(jnp.int32))
+    # transfer-freeze completions (cur_thread == -1, no event in flight —
+    # see _refine_partition) release the LP without counting as processed
+    processed = state.processed + jnp.sum(
+        (completed & (state.cur_thread >= 0)).astype(jnp.int32))
 
     fwd_send = completed & (state.cur_count > 0)
     fwd_thread = state.cur_thread
@@ -404,9 +440,15 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
     hist = hist._replace(valid=hist.valid & ~cancel_hist & ~restore)
 
     # -- start processing (normal + straggler) -------------------------------
+    # busy-time = (#resident LPs x process_time) / machine speed: the
+    # paper's density model scaled by the machine's current relative speed
+    # (heterogeneity + churn, DESIGN.md §11; speed 1.0 is bit-for-bit the
+    # original integer cost)
     starts = normal | straggler
     nlps = jnp.zeros((K,), jnp.int32).at[state.machine].add(1)
-    busy_cost = nlps[state.machine] * cfg.proc_ticks
+    busy_cost = jnp.maximum(jnp.ceil(
+        (nlps[state.machine] * cfg.proc_ticks).astype(jnp.float32)
+        / speeds[state.machine]).astype(jnp.int32), 1)
     busy = still_busy | starts
     busy_tick = jnp.where(starts, busy_cost, busy_tick)
     cur_time = jnp.where(starts, sel_time, state.cur_time)
@@ -579,12 +621,22 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
     lens = jnp.sum(ev.valid, axis=1).astype(jnp.float32)
     nlps_f = jnp.maximum(
         jnp.zeros((K,), jnp.float32).at[state.machine].add(1.0), 1.0)
-    mean_len = jnp.zeros((K,), jnp.float32).at[state.machine].add(lens) / nlps_f
-    do_trace = (tick % cfg.trace_stride == 0)
+    total_len = jnp.zeros((K,), jnp.float32).at[state.machine].add(lens)
+    mean_len = total_len / nlps_f
+    wload = total_len / jnp.maximum(speeds, 1e-6)
+    # the trace stops (rather than overwriting its last row) once full:
+    # trace_ptr is clamped to max_trace so downstream slicing with it is
+    # always in bounds
+    do_trace = (tick % cfg.trace_stride == 0) \
+        & (state.trace_ptr < cfg.max_trace)
     ptr = jnp.clip(state.trace_ptr, 0, cfg.max_trace - 1)
     trace = jnp.where(do_trace,
                       state.trace.at[ptr].set(mean_len), state.trace)
-    trace_ptr = state.trace_ptr + do_trace.astype(jnp.int32)
+    trace_wload = jnp.where(do_trace,
+                            state.trace_wload.at[ptr].set(wload),
+                            state.trace_wload)
+    trace_ptr = jnp.minimum(state.trace_ptr + do_trace.astype(jnp.int32),
+                            cfg.max_trace)
 
     new_state = state._replace(
         ev=ev, hist=hist, local_time=local_time, busy=busy,
@@ -592,11 +644,11 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
         cur_count=cur_count, cur_sender=cur_sender, seen_time=seen_time,
         epoch=new_epoch, tick=tick, gvt=gvt, done=done,
         rollbacks=rollbacks, processed=processed, dropped=dropped,
-        hist_evict=hist_evict, trace=trace, trace_ptr=trace_ptr)
+        hist_evict=hist_evict, trace=trace, trace_wload=trace_wload,
+        trace_ptr=trace_ptr)
 
     # ---- P6: periodic partition refinement (the paper's contribution) ------
     if cfg.refine_freq > 0:
-        speeds = _base_speeds(cfg)
         new_state = jax.lax.cond(
             (tick % cfg.refine_freq == 0) & ~done,
             lambda s: _refine_partition(cfg, adj, s, speeds),
@@ -608,10 +660,13 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
                       speeds: Array) -> DESState:
     """Measure node/edge weights from live event lists and refine (§6.1).
 
-    ``speeds`` is the (K,) vector of the machines\' actual relative
-    speeds, normalized into the ``w_k`` of the cost frameworks (Eq. 1/6)
-    — refinement must optimize the game the machines are actually
-    playing, not a hardcoded-uniform one.
+    ``speeds`` is the (K,) vector of LIVE relative machine speeds this
+    tick — normalized into the ``w_k`` of the cost frameworks (Eq. 1/6),
+    so refinement optimizes the game the machines are actually playing.
+    With ``refine_theta_scale > 0`` each LP's hysteresis threshold is
+    sized by its live state (event-list + history records a migration
+    must ship), and with ``migration_freeze > 0`` migrated LPs pay the
+    transfer as a busy freeze (DESIGN.md §11).
     """
     K = cfg.num_machines
     b = jnp.sum(state.ev.valid, axis=1).astype(jnp.float32)
@@ -623,32 +678,65 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
         adjacency=c, node_weights=b,
         speeds=live / jnp.sum(live),
         mu=jnp.asarray(cfg.refine_mu, jnp.float32))
+    state_size = _live_state_size(state)
+    theta = cfg.refine_theta_scale * state_size \
+        if cfg.refine_theta_scale > 0 else None
     if cfg.refine_backend == "distributed":
         from ..distributed.runtime import refine_distributed
         res = refine_distributed(prob, state.machine, cfg.refine_framework,
                                  num_shards=cfg.refine_num_shards or K,
                                  max_turns=cfg.refine_max_turns,
-                                 incremental=cfg.refine_incremental)
+                                 incremental=cfg.refine_incremental,
+                                 theta=theta)
     elif cfg.refine_backend == "single":
         res = refine(prob, state.machine, cfg.refine_framework,
                      max_turns=cfg.refine_max_turns,
                      incremental=cfg.refine_incremental,
-                     verify_every=cfg.refine_verify_every)
+                     verify_every=cfg.refine_verify_every,
+                     theta=theta)
     else:
         raise ValueError(f"unknown refine_backend {cfg.refine_backend!r}")
-    moved = jnp.sum((res.assignment != state.machine).astype(jnp.int32))
-    return state._replace(machine=res.assignment,
-                          refines=state.refines + 1,
-                          moves=state.moves + moved)
+    moved_mask = res.assignment != state.machine
+    new_state = state._replace(
+        machine=res.assignment,
+        refines=state.refines + 1,
+        moves=state.moves + jnp.sum(moved_mask.astype(jnp.int32)))
+    if cfg.migration_freeze > 0:
+        # the state transfer freezes the migrated LP for ticks proportional
+        # to (records shipped) x (inter-machine delay); an LP mid-event
+        # simply finishes that much later, an idle LP becomes busy with a
+        # no-op marker (cur_thread = -1: no forward, not counted processed)
+        freeze = jnp.round(cfg.migration_freeze * state_size
+                           * cfg.inter_delay).astype(jnp.int32)
+        frozen = moved_mask & (freeze > 0)
+        newly_busy = frozen & ~state.busy
+        busy_tick = jnp.where(
+            frozen & state.busy, state.busy_tick + freeze,
+            jnp.where(newly_busy, freeze, state.busy_tick))
+        new_state = new_state._replace(
+            busy=state.busy | frozen,
+            busy_tick=busy_tick,
+            cur_time=jnp.where(newly_busy, state.local_time, state.cur_time),
+            cur_thread=jnp.where(newly_busy, -1, state.cur_thread),
+            cur_count=jnp.where(newly_busy, 0, state.cur_count),
+            cur_sender=jnp.where(newly_busy, -1, state.cur_sender),
+        )
+    return new_state
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def run_simulation(cfg: DESConfig, adj: Array, state: DESState) -> DESState:
-    """Run ticks until all event lists drain (or max_ticks)."""
+def run_simulation(cfg: DESConfig, adj: Array, state: DESState,
+                   speed_schedule: SpeedSchedule | None = None) -> DESState:
+    """Run ticks until all event lists drain (or max_ticks).
+
+    ``speed_schedule`` drives per-tick machine-speed churn (slowdown /
+    failure / recovery scenarios, :mod:`repro.des.scenarios`); ``None``
+    keeps ``cfg.machine_speeds`` (or uniform) throughout.
+    """
     def cond(s):
         return (~s.done) & (s.tick < cfg.max_ticks)
 
     def body(s):
-        return des_tick(cfg, adj, s)
+        return des_tick(cfg, adj, s, speed_schedule)
 
     return jax.lax.while_loop(cond, body, state)

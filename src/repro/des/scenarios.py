@@ -1,0 +1,123 @@
+"""Machine-churn scenarios: piecewise-constant per-machine speed schedules.
+
+The paper's cost frameworks carry per-machine speeds ``w_k`` (Eq. 1/6)
+precisely because real clusters are not uniform AND not static: machines
+slow down (co-tenancy, thermal throttling), fail, and recover while the
+workload's hot spots move.  A :class:`SpeedSchedule` is the minimal model
+of that churn — a sorted list of wall-clock tick boundaries and, per
+segment, the (K,) relative machine speeds in effect (1.0 = nominal; see
+DESIGN.md §11).  ``repro.des.engine`` consumes it per tick: busy-time
+scales inversely with the resident machine's current speed, and each
+refinement round feeds the live speeds into the partition game.
+
+Builders are host-side (numpy); the schedule itself is jnp arrays so
+``speeds_at`` traces inside the engine's ``lax.while_loop``.
+
+Speeds are clamped to ``MIN_SPEED`` — a "failed" machine is modeled as
+nearly-stopped rather than stopped, both because busy-time divides by
+speed and because a truly dead machine needs LP re-homing, which is the
+refinement layer's job (the failure scenario is exactly what should
+trigger it).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MIN_SPEED = 0.02   # floor for "failed" machines (busy-time divides by speed)
+
+
+class SpeedSchedule(NamedTuple):
+    """Piecewise-constant machine speeds over wall-clock ticks.
+
+    Segment ``s`` is in effect for ticks in ``[times[s], times[s+1])``
+    (the last segment extends forever).  ``times[0]`` must be 0 so every
+    tick is covered.
+    """
+    times: Array    # (S,) int32 — ascending segment-start ticks, times[0]=0
+    speeds: Array   # (S, K) float32 — relative speeds, 1.0 = nominal
+
+    @property
+    def num_machines(self) -> int:
+        return self.speeds.shape[1]
+
+
+def make_schedule(times, speeds) -> SpeedSchedule:
+    """Validate + clamp host-side arrays into a :class:`SpeedSchedule`."""
+    times = np.asarray(times, np.int32)
+    speeds = np.asarray(speeds, np.float32)
+    if times.ndim != 1 or speeds.ndim != 2 or times.shape[0] != speeds.shape[0]:
+        raise ValueError(f"shape mismatch: times {times.shape} vs "
+                         f"speeds {speeds.shape}")
+    if times.shape[0] == 0 or times[0] != 0:
+        raise ValueError("times must start at tick 0")
+    if np.any(np.diff(times) <= 0):
+        raise ValueError("times must be strictly ascending")
+    speeds = np.maximum(speeds, MIN_SPEED)
+    return SpeedSchedule(times=jnp.asarray(times),
+                         speeds=jnp.asarray(speeds))
+
+
+def speeds_at(schedule: SpeedSchedule, tick: Array) -> Array:
+    """(K,) speeds in effect at wall-clock ``tick`` (traceable)."""
+    idx = jnp.sum((schedule.times <= tick).astype(jnp.int32)) - 1
+    idx = jnp.clip(idx, 0, schedule.times.shape[0] - 1)
+    return schedule.speeds[idx]
+
+
+# ---------------------------------------------------------------------------
+# scenario builders (host-side)
+# ---------------------------------------------------------------------------
+
+def constant(num_machines: int, speeds=None) -> SpeedSchedule:
+    """One segment: fixed (possibly heterogeneous) speeds forever."""
+    row = np.ones(num_machines, np.float32) if speeds is None \
+        else np.asarray(speeds, np.float32)
+    return make_schedule([0], row[None, :])
+
+
+def slowdown(num_machines: int, machine: int, at_tick: int,
+             factor: float = 0.25, recover_tick: int | None = None,
+             base=None) -> SpeedSchedule:
+    """``machine`` drops to ``factor`` of its base speed at ``at_tick``
+    (co-tenant / throttling churn), optionally recovering later."""
+    base = np.ones(num_machines, np.float32) if base is None \
+        else np.asarray(base, np.float32)
+    rows, times = [base], [0]
+    slow = base.copy()
+    slow[machine] = base[machine] * factor
+    rows.append(slow)
+    times.append(at_tick)
+    if recover_tick is not None:
+        rows.append(base)
+        times.append(recover_tick)
+    return make_schedule(times, np.stack(rows))
+
+
+def failure_recovery(num_machines: int, machine: int, fail_tick: int,
+                     recover_tick: int, floor: float = MIN_SPEED,
+                     base=None) -> SpeedSchedule:
+    """``machine`` all-but-stops at ``fail_tick`` and comes back at
+    ``recover_tick`` — the scenario that forces LP re-homing and then
+    tests whether the partitioner thrashes everything straight back."""
+    return slowdown(num_machines, machine, fail_tick,
+                    factor=floor, recover_tick=recover_tick, base=base)
+
+
+def random_churn(num_machines: int, num_segments: int, segment_ticks: int,
+                 seed, low: float = 0.3, high: float = 1.0) -> SpeedSchedule:
+    """Every ``segment_ticks`` ticks each machine's speed is re-drawn
+    uniformly from [low, high] — sustained background churn."""
+    if num_segments < 1 or segment_ticks < 1:
+        raise ValueError("need >= 1 segment of >= 1 tick")
+    rng = np.random.default_rng(seed)
+    rows = rng.uniform(low, high,
+                       size=(num_segments, num_machines)).astype(np.float32)
+    times = np.arange(num_segments, dtype=np.int32) * segment_ticks
+    return make_schedule(times, rows)

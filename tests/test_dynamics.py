@@ -1,11 +1,255 @@
-"""Dynamic rebalancing: the refinement game must see the real machines."""
+"""Dynamic rebalancing under churn (DESIGN.md §11).
+
+Three layers under test:
+
+  * **hysteresis refinement** — per-node migration-price thresholds
+    ``theta``: theta=0 reproduces the threshold-free move sequences
+    BITWISE (single and distributed backends — the repo's core↔distributed
+    contract), accepted moves descend the potential by at least the
+    threshold margin (2*theta_i for C_0 via Thm. 3.1, theta_i for Ct_0 via
+    Thm. 5.1), and larger thresholds never move more;
+  * **heterogeneous machines** — busy-time scales inversely with the
+    resident machine's speed, refinement optimizes the LIVE speeds
+    (regression for the hardcoded-uniform bug), and speed schedules drive
+    churn scenarios;
+  * **migration cost in the DES** — state-sized transfer freezes, with the
+    flood-closure oracle proving the Time Warp semantics survive the whole
+    churn + hysteresis + freeze stack.
+"""
 from __future__ import annotations
 
 import numpy as np
+import pytest
 
 import jax.numpy as jnp
 
-from repro.des.engine import DESConfig, _refine_partition, make_initial_state
+from repro.core import costs
+from repro.core.problem import make_problem
+from repro.core.refine import refine, refine_simultaneous, refine_traced
+from repro.des import scenarios
+from repro.des.engine import (DESConfig, _refine_partition, des_tick,
+                              make_initial_state, run_simulation)
+from repro.des.workload import flooded_packet_workload
+from repro.distributed import refine_distributed, refine_distributed_traced
+from repro.graphs.generators import random_degree_graph, random_weights
+
+
+def _problem(n=80, k=4, seed=0, mu=8.0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    speeds = np.asarray([0.1, 0.2, 0.3, 0.4][:k])
+    prob = make_problem(c, b, speeds, mu=mu)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def _theta(n, seed, scale=10.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(0, scale, n), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# theta = 0 bitwise contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+@pytest.mark.parametrize("zero", [0.0, "vector"])
+def test_theta_zero_bitwise_single(framework, zero):
+    """theta=0 (scalar and (N,)) reproduces today's move sequence bitwise
+    on the single controller — gains compared with assert_array_equal."""
+    prob, r0 = _problem(seed=3)
+    theta = jnp.zeros(prob.num_nodes) if zero == "vector" else zero
+    ref_res, ref_tr = refine_traced(prob, r0, framework, max_turns=300)
+    res, tr = refine_traced(prob, r0, framework, max_turns=300, theta=theta)
+    for field in ("moved", "node", "source", "dest", "gain", "c0", "ct0"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref_tr, field)),
+                                      np.asarray(getattr(tr, field)),
+                                      err_msg=field)
+    np.testing.assert_array_equal(np.asarray(ref_res.assignment),
+                                  np.asarray(res.assignment))
+    assert int(ref_res.num_moves) == int(res.num_moves)
+
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+def test_theta_zero_bitwise_distributed(framework):
+    """theta=0 through the sharded runtime == the threshold-free single
+    controller, move for move (the core↔distributed contract holds with
+    the hysteresis path threaded in)."""
+    prob, r0 = _problem(seed=5)
+    ref_res, ref_tr = refine_traced(prob, r0, framework, max_turns=300)
+    res, tr = refine_distributed_traced(prob, r0, framework, num_shards=3,
+                                        max_turns=300,
+                                        theta=jnp.zeros(prob.num_nodes))
+    for field in ("moved", "node", "source", "dest", "gain"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref_tr, field)),
+                                      np.asarray(getattr(tr, field)),
+                                      err_msg=field)
+    np.testing.assert_array_equal(np.asarray(ref_res.assignment),
+                                  np.asarray(res.assignment))
+
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+def test_theta_nonzero_distributed_matches_single(framework):
+    """Per-node thresholds are evaluated shard-locally yet the distributed
+    move sequence stays bitwise-identical to the controller's."""
+    prob, r0 = _problem(seed=7)
+    theta = _theta(prob.num_nodes, seed=8, scale=20.0)
+    ref_res, ref_tr = refine_traced(prob, r0, framework, max_turns=300,
+                                    theta=theta)
+    res, tr = refine_distributed_traced(prob, r0, framework, num_shards=5,
+                                        max_turns=300, theta=theta)
+    for field in ("moved", "node", "source", "dest", "gain"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref_tr, field)),
+                                      np.asarray(getattr(tr, field)),
+                                      err_msg=field)
+    np.testing.assert_array_equal(np.asarray(ref_res.assignment),
+                                  np.asarray(res.assignment))
+    # while-loop production drivers land on the same fixed point
+    w_ref = refine(prob, r0, framework, theta=theta)
+    w_dist = refine_distributed(prob, r0, framework, num_shards=5,
+                                theta=theta)
+    np.testing.assert_array_equal(np.asarray(w_ref.assignment),
+                                  np.asarray(w_dist.assignment))
+    assert int(w_ref.num_moves) == int(w_dist.num_moves)
+
+
+# ---------------------------------------------------------------------------
+# descent + monotonicity properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("framework", costs.FRAMEWORKS)
+def test_hysteresis_descent_margin(framework):
+    """Every accepted move decreases the framework's own potential by at
+    least the threshold margin: 2*theta_i for C_0 (Thm. 3.1), theta_i for
+    Ct_0 (Thm. 5.1) — the reason Thm. 4.1 convergence survives theta."""
+    prob, r0 = _problem(seed=11)
+    theta = _theta(prob.num_nodes, seed=12, scale=15.0)
+    _, tr = refine_traced(prob, r0, framework, max_turns=300, theta=theta)
+    own = np.asarray(tr.c0 if framework == costs.C_FRAMEWORK else tr.ct0,
+                     np.float64)
+    init = float(costs.global_cost(prob, r0, framework))
+    prev = np.concatenate([[init], own[:-1]])
+    moved = np.asarray(tr.moved)
+    node = np.asarray(tr.node)
+    margin = 2.0 if framework == costs.C_FRAMEWORK else 1.0
+    th = np.asarray(theta, np.float64)
+    assert moved.any(), "instance produced no moves — test is vacuous"
+    for t in np.flatnonzero(moved):
+        delta = own[t] - prev[t]
+        bound = -margin * th[node[t]] + 1e-4 * abs(prev[t]) + 1e-3
+        assert delta <= bound, \
+            f"turn {t}: potential fell by {-delta:.4f} < " \
+            f"{margin}*theta={margin * th[node[t]]:.4f}"
+
+
+def test_theta_monotone_no_more_moves():
+    """Raising a uniform threshold never increases the number of accepted
+    moves, and a prohibitive threshold accepts none (instant convergence)."""
+    prob, r0 = _problem(seed=13)
+    moves = []
+    for th in (0.0, 2.0, 10.0, 50.0, 1e9):
+        res = refine(prob, r0, "c", theta=th)
+        assert bool(res.converged)
+        moves.append(int(res.num_moves))
+    assert all(a >= b for a, b in zip(moves, moves[1:])), moves
+    assert moves[0] > 0
+    assert moves[-1] == 0
+
+
+def test_theta_simultaneous_mode():
+    """§4.5 sweep mode honors theta: zero thresholds reproduce the
+    unthresholded sweeps bitwise; prohibitive thresholds freeze the game."""
+    prob, r0 = _problem(seed=17)
+    ref_res, (rc0, rct0, ract) = refine_simultaneous(prob, r0, "c")
+    res, (c0, ct0, act) = refine_simultaneous(prob, r0, "c",
+                                              theta=jnp.zeros(prob.num_nodes))
+    np.testing.assert_array_equal(np.asarray(ref_res.assignment),
+                                  np.asarray(res.assignment))
+    np.testing.assert_array_equal(np.asarray(rc0), np.asarray(c0))
+    assert int(ref_res.num_moves) == int(res.num_moves)
+    frozen, _ = refine_simultaneous(prob, r0, "c", theta=1e9)
+    assert int(frozen.num_moves) == 0
+    np.testing.assert_array_equal(np.asarray(frozen.assignment),
+                                  np.asarray(r0))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous machines in the DES engine
+# ---------------------------------------------------------------------------
+
+def _flat_workload(n, num_threads, scope=0):
+    """num_threads threads spread round-robin over LPs, all at t=0."""
+    src = np.arange(num_threads, dtype=np.int32) % n
+    return (src, np.zeros(num_threads, np.float32),
+            np.full(num_threads, scope, np.int32))
+
+
+def test_busy_ticks_scale_with_machine_speed():
+    """One tick: an LP starting an event on a 4x machine owes a quarter of
+    the busy ticks of the same-density 1x machine."""
+    n = 4
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=n,
+                    event_capacity=8, history_capacity=16, proc_ticks=2,
+                    machine_speeds=(1.0, 4.0))
+    src, time, count = _flat_workload(n, n)
+    state = make_initial_state(cfg, jnp.asarray([0, 0, 1, 1], jnp.int32),
+                               src, time, count)
+    adj = jnp.zeros((n, n), jnp.float32)
+    out = des_tick(cfg, adj, state)
+    # both machines host 2 LPs: base cost 2*2 = 4 ticks; machine 1 is 4x
+    np.testing.assert_array_equal(np.asarray(out.busy_tick), [4, 4, 1, 1])
+    assert bool(out.busy.all())
+
+
+def test_machine_speeds_must_match_machine_count():
+    cfg = DESConfig(num_lps=4, num_machines=2, num_threads=1,
+                    machine_speeds=(1.0, 1.0, 1.0))
+    src, time, count = _flat_workload(4, 1)
+    state = make_initial_state(cfg, jnp.zeros(4, jnp.int32), src, time, count)
+    with pytest.raises(ValueError, match="machine_speeds"):
+        des_tick(cfg, jnp.zeros((4, 4), jnp.float32), state)
+
+
+def test_fast_machines_drain_sooner():
+    """The same workload finishes in fewer wall ticks when every machine
+    is 4x, and with per-machine imbalance the slow machine's event lists
+    run longer than the fast machine's."""
+    n, t = 20, 6
+    adj = random_degree_graph(n, seed=21, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 22, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    ticks = {}
+    for name, sp in (("slow", (1.0, 1.0)), ("fast", (4.0, 4.0))):
+        cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                        event_capacity=32, history_capacity=64,
+                        machine_speeds=sp, max_ticks=60_000)
+        state = make_initial_state(cfg, jnp.arange(n, dtype=jnp.int32) % 2,
+                                   spec.src, spec.time, spec.count)
+        out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+        assert bool(out.done)
+        ticks[name] = int(out.tick)
+    assert ticks["fast"] < ticks["slow"], ticks
+
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                    event_capacity=32, history_capacity=64,
+                    machine_speeds=(0.25, 1.0), trace_stride=5,
+                    max_ticks=60_000)
+    state = make_initial_state(cfg, jnp.arange(n, dtype=jnp.int32) % 2,
+                               spec.src, spec.time, spec.count)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+    ptr = int(out.trace_ptr)
+    tr = np.asarray(out.trace)[:ptr]
+    assert tr.shape[0] > 0
+    # slower machine (column 0) carries the longer queues on average
+    assert tr[:, 0].mean() > tr[:, 1].mean()
+    # speed-normalized backlog trace: wload = total queue / speed, so the
+    # 4x-slower machine's drain-time disadvantage is even starker (each LP
+    # hosts 10 LPs/machine: wload = mean_len * 10 / speed)
+    wl = np.asarray(out.trace_wload)[:ptr]
+    np.testing.assert_allclose(wl[:, 0], tr[:, 0] * 10 / 0.25, rtol=1e-5)
+    np.testing.assert_allclose(wl[:, 1], tr[:, 1] * 10 / 1.0, rtol=1e-5)
+    assert wl[:, 0].mean() > wl[:, 1].mean()
 
 
 def test_refine_partition_uses_live_speeds():
@@ -30,3 +274,181 @@ def test_refine_partition_uses_live_speeds():
               np.asarray(jnp.sum(state.ev.valid, axis=1), np.float64))
     assert loads[0] >= 2.0 * loads[1], \
         f"refinement ignored the live speeds: loads {loads}"
+
+
+# ---------------------------------------------------------------------------
+# speed schedules (churn scenarios)
+# ---------------------------------------------------------------------------
+
+def test_schedule_lookup_boundaries():
+    sched = scenarios.make_schedule(
+        [0, 10, 20], [[1.0, 1.0], [0.5, 1.0], [1.0, 0.25]])
+    for tick, want in ((0, [1.0, 1.0]), (9, [1.0, 1.0]), (10, [0.5, 1.0]),
+                       (19, [0.5, 1.0]), (20, [1.0, 0.25]),
+                       (1000, [1.0, 0.25])):
+        np.testing.assert_allclose(
+            np.asarray(scenarios.speeds_at(sched, jnp.int32(tick))), want)
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="start at tick 0"):
+        scenarios.make_schedule([5], [[1.0]])
+    with pytest.raises(ValueError, match="ascending"):
+        scenarios.make_schedule([0, 10, 10], [[1.0]] * 3)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        scenarios.make_schedule([0, 10], [[1.0]])
+    # failed machines are floored, not stopped (busy-time divides by speed)
+    sched = scenarios.make_schedule([0], [[0.0, 1.0]])
+    assert float(sched.speeds[0, 0]) == pytest.approx(scenarios.MIN_SPEED)
+
+
+def test_scenario_builders():
+    sd = scenarios.slowdown(3, machine=1, at_tick=100, factor=0.25,
+                            recover_tick=300)
+    assert sd.speeds.shape == (3, 3)
+    np.testing.assert_allclose(np.asarray(sd.speeds[:, 1]),
+                               [1.0, 0.25, 1.0])
+    np.testing.assert_allclose(np.asarray(sd.speeds[:, 0]), 1.0)
+    fr = scenarios.failure_recovery(2, machine=0, fail_tick=50,
+                                    recover_tick=200)
+    assert float(fr.speeds[1, 0]) == pytest.approx(scenarios.MIN_SPEED)
+    assert float(fr.speeds[2, 0]) == pytest.approx(1.0)
+    ch = scenarios.random_churn(4, num_segments=6, segment_ticks=50, seed=3,
+                                low=0.3, high=1.0)
+    sp = np.asarray(ch.speeds)
+    assert sp.shape == (6, 4) and (sp >= 0.3).all() and (sp <= 1.0).all()
+    np.testing.assert_array_equal(np.asarray(ch.times),
+                                  np.arange(6) * 50)
+    with pytest.raises(ValueError):
+        scenarios.random_churn(2, num_segments=0, segment_ticks=50, seed=0)
+
+
+def test_constant_schedule_matches_static_speeds():
+    """A constant all-ones schedule is the uniform no-schedule run."""
+    n, t = 16, 4
+    adj = random_degree_graph(n, seed=31, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 32, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                    event_capacity=32, history_capacity=64, max_ticks=40_000)
+    m0 = jnp.arange(n, dtype=jnp.int32) % 2
+    adjj = jnp.asarray(adj, jnp.float32)
+    base = run_simulation(cfg, adjj, make_initial_state(
+        cfg, m0, spec.src, spec.time, spec.count))
+    sched = run_simulation(cfg, adjj, make_initial_state(
+        cfg, m0, spec.src, spec.time, spec.count), scenarios.constant(2))
+    assert int(base.tick) == int(sched.tick)
+    assert int(base.processed) == int(sched.processed)
+    np.testing.assert_array_equal(np.asarray(base.seen),
+                                  np.asarray(sched.seen))
+
+
+# ---------------------------------------------------------------------------
+# workload fixes
+# ---------------------------------------------------------------------------
+
+def test_workload_per_thread_scope_rides_the_time_sort():
+    """Per-thread scopes must stay associated with their thread after the
+    injection-time sort.  Scopes are constant per window, and windows
+    partition the time axis — so every returned thread's count must equal
+    its window's scope (the un-permuted bug returns generation order)."""
+    adj = random_degree_graph(30, seed=41, dmin=2, dmax=4)
+    t, w, wt = 16, 4, 25.0
+    scope = np.repeat(np.arange(1, w + 1, dtype=np.int32), t // w)
+    spec = flooded_packet_workload(adj, 42, num_threads=t, num_windows=w,
+                                   window_sim_time=wt, scope=scope)
+    want = (np.asarray(spec.time) // wt).astype(np.int32) + 1
+    np.testing.assert_array_equal(spec.count, want)
+    # scalar scope is unchanged behavior
+    spec_s = flooded_packet_workload(adj, 42, num_threads=t, num_windows=w,
+                                     window_sim_time=wt, scope=3)
+    np.testing.assert_array_equal(spec_s.count, 3)
+    np.testing.assert_array_equal(spec_s.src, spec.src)
+
+
+def test_workload_capacity_overflow_raises():
+    """More threads than seed slots must fail loudly, not overflow the
+    seeding scatter (silent OOB drops under jit)."""
+    adj = np.ones((2, 2)) - np.eye(2)
+    with pytest.raises(ValueError, match="max_per_lp"):
+        flooded_packet_workload(adj, 1, num_threads=10, max_per_lp=2)
+
+
+def test_trace_ptr_clamped_at_max_trace():
+    n, t = 12, 3
+    adj = random_degree_graph(n, seed=51, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 52, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                    event_capacity=32, history_capacity=64,
+                    trace_stride=1, max_trace=4, max_ticks=40_000)
+    state = make_initial_state(cfg, jnp.arange(n, dtype=jnp.int32) % 2,
+                               spec.src, spec.time, spec.count)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+    assert int(out.tick) > 4          # ran long past the trace capacity
+    assert int(out.trace_ptr) == 4    # ... but the pointer stopped at max
+
+
+# ---------------------------------------------------------------------------
+# the whole stack: churn + hysteresis + freeze keep Time Warp semantics
+# ---------------------------------------------------------------------------
+
+from test_des import _hop_closure  # noqa: E402 — the one closure oracle
+
+
+@pytest.mark.parametrize("backend", ["single", "distributed"])
+def test_flood_closure_oracle_under_churn_stack(backend):
+    """Heterogeneous speeds + failure/recovery churn + state-sized
+    hysteresis + transfer freezes: the final seen-sets still equal the
+    exact k-hop closures, and both refine backends drain."""
+    n, t = 24, 6
+    adj = random_degree_graph(n, seed=61, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 62, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    cfg = DESConfig(num_lps=n, num_machines=3, num_threads=t,
+                    event_capacity=32, history_capacity=64,
+                    refine_freq=100, max_ticks=60_000,
+                    machine_speeds=(1.0, 0.5, 2.0),
+                    refine_theta_scale=0.1, migration_freeze=0.25,
+                    refine_backend=backend)
+    sched = scenarios.failure_recovery(3, machine=2, fail_tick=150,
+                                       recover_tick=400)
+    state = make_initial_state(cfg, jnp.arange(n, dtype=jnp.int32) % 3,
+                               spec.src, spec.time, spec.count)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state, sched)
+    assert bool(out.done), f"not drained after {int(out.tick)} ticks"
+    assert int(out.refines) >= 1
+    seen = np.asarray(out.seen)
+    for j in range(t):
+        want = _hop_closure(adj, int(spec.src[j]), int(spec.count[j]))
+        np.testing.assert_array_equal(seen[:, j], want,
+                                      err_msg=f"thread {j}")
+
+
+def test_des_backends_agree_with_theta_and_churn():
+    """single vs distributed refine backends stay move-for-move identical
+    with live speeds + state-sized theta in play (the bitwise contract,
+    end to end through the engine)."""
+    n, t = 24, 6
+    adj = random_degree_graph(n, seed=71, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 72, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    outs = {}
+    for backend in ("single", "distributed"):
+        cfg = DESConfig(num_lps=n, num_machines=3, num_threads=t,
+                        event_capacity=32, history_capacity=64,
+                        refine_freq=120, max_ticks=60_000,
+                        machine_speeds=(2.0, 1.0, 0.5),
+                        refine_theta_scale=0.15, migration_freeze=0.2,
+                        refine_backend=backend)
+        state = make_initial_state(cfg, jnp.arange(n, dtype=jnp.int32) % 3,
+                                   spec.src, spec.time, spec.count)
+        outs[backend] = run_simulation(cfg, jnp.asarray(adj, jnp.float32),
+                                       state)
+    a, b = outs["single"], outs["distributed"]
+    assert bool(a.done) and bool(b.done)
+    assert int(a.refines) > 0
+    np.testing.assert_array_equal(np.asarray(a.machine),
+                                  np.asarray(b.machine))
+    assert int(a.moves) == int(b.moves)
+    assert int(a.tick) == int(b.tick)
