@@ -17,8 +17,8 @@ import time
 import traceback
 
 from . import (baselines_compare, batch_study, distributed_bench,
-               fig7_8_simtime, fig9_10_load_traces, kernel_bench,
-               planner_bench, refine_bench, roofline,
+               dynamics_bench, fig7_8_simtime, fig9_10_load_traces,
+               kernel_bench, planner_bench, refine_bench, roofline,
                table1_cost_frameworks, train_bench)
 from .common import write_bench_json
 
@@ -34,11 +34,12 @@ SUITES = {
     "roofline": roofline.run,
     "distributed": distributed_bench.run,
     "refine": refine_bench.run,
+    "dynamics": dynamics_bench.run,
 }
 
-# refine_bench writes BENCH_refine.json itself (it must also do so when
-# invoked standalone by the CI smoke job)
-_SELF_WRITING = {"refine"}
+# these write their BENCH_<name>.json themselves (they must also do so
+# when invoked standalone by the CI smoke jobs)
+_SELF_WRITING = {"refine", "dynamics"}
 
 
 def main() -> None:
