@@ -26,6 +26,10 @@ Hard gates (run every time, CI smoke included):
      as N grows 16x at fixed K, with per-node thresholds in play (theta
      is shard-local, never on the wire).
 
+The grid's scenario axis runs as one batched DES program per mode by
+default (``run_simulation_batch``, DESIGN.md §12.4; per-element states
+are the looped states bitwise — ``--no-batched`` restores the loop).
+
 Full runs additionally assert the headline claim: state-sized hysteresis
 beats refine-off on load CV and theta=0 on migration count at comparable
 CV.  Results land in BENCH_dynamics.json.
@@ -37,10 +41,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import sweeps
 from repro.core.refine import refine_traced
 from repro.core.problem import make_problem
 from repro.des import scenarios
-from repro.des.engine import DESConfig, make_initial_state, run_simulation
+from repro.des.engine import (DESConfig, make_initial_state, run_simulation,
+                              run_simulation_batch)
 from repro.des.workload import flooded_packet_workload
 from repro.distributed import (boundary_stats, ledger_for_run,
                                refine_distributed,
@@ -187,7 +193,10 @@ REFINE_FREQ = 300        # repartition cadence (wall ticks)
 def _schedules(quick: bool):
     k = len(BASE_SPEEDS)
     return {
-        "hetero-static": None,
+        # static heterogeneity as a one-segment schedule: identical speeds
+        # to passing None (the engine reads the same (K,) row every tick),
+        # and stackable with the churn scenarios for the batched grid
+        "hetero-static": scenarios.constant(k, BASE_SPEEDS),
         "slowdown-recover": scenarios.slowdown(
             k, machine=0, at_tick=400, factor=0.25,
             recover_tick=1600, base=BASE_SPEEDS),
@@ -212,48 +221,67 @@ MODES = {
 }
 
 
-def run_grid(quick: bool):
+def _cell_stats(out, max_trace: int) -> dict:
+    ptr = int(out.trace_ptr)
+    assert ptr <= max_trace
+    return {
+        "load_cv": _cv(np.asarray(out.trace_wload)[:ptr]),
+        "migrations": int(out.moves),
+        "rollbacks": int(out.rollbacks),
+        "refines": int(out.refines),
+        "ticks": int(out.tick),
+    }
+
+
+def run_grid(quick: bool, batched: bool = True):
+    """The scenario x mode grid.  ``batched=True`` (default) runs each
+    mode's scenarios as ONE batched DES program (DESIGN.md §12.4; modes
+    stay separate — a mode's DESConfig is compile-time structure); per
+    element the states are the looped states bitwise, so the grid values
+    and the CI gates are mode-independent."""
     n = 48 if quick else 96
     adj, t, spec = _grid_workload(n, quick)
     deg = int((adj > 0).sum(1).max())
     k = len(BASE_SPEEDS)
     m0 = jnp.asarray(np.arange(n) % k, jnp.int32)
     adjj = jnp.asarray(adj, jnp.float32)
+    schedules = _schedules(quick)
     cells = {}
-    rows = []
-    for sname, sched in _schedules(quick).items():
-        for mname, overrides in MODES.items():
-            cfg = DESConfig(
-                num_lps=n, num_machines=k, num_threads=t,
-                event_capacity=max(48, 2 * deg + 8),
-                history_capacity=max(96, 4 * deg + 16),
-                inter_delay=8, intra_delay=1, trace_stride=25,
-                max_ticks=120_000, machine_speeds=BASE_SPEEDS,
-                **overrides)
-            state = make_initial_state(cfg, m0, spec.src, spec.time,
-                                       spec.count)
-            out = run_simulation(cfg, adjj, state, sched)
+    for mname, overrides in MODES.items():
+        cfg = DESConfig(
+            num_lps=n, num_machines=k, num_threads=t,
+            event_capacity=max(48, 2 * deg + 8),
+            history_capacity=max(96, 4 * deg + 16),
+            inter_delay=8, intra_delay=1, trace_stride=25,
+            max_ticks=120_000, machine_speeds=BASE_SPEEDS,
+            **overrides)
+        state = make_initial_state(cfg, m0, spec.src, spec.time,
+                                   spec.count)
+        if batched:
+            stacked = scenarios.stack_schedules(list(schedules.values()))
+            bsz = len(schedules)
+            outb = run_simulation_batch(
+                cfg, jnp.stack([adjj] * bsz),
+                sweeps.stack_pytrees([state] * bsz), stacked)
+            outs = {sname: sweeps.unstack_pytree(outb, i)
+                    for i, sname in enumerate(schedules)}
+        else:
+            outs = {sname: run_simulation(cfg, adjj, state, sched)
+                    for sname, sched in schedules.items()}
+        for sname, out in outs.items():
             assert bool(out.done), \
                 f"{sname}/{mname} not drained after {int(out.tick)} ticks"
-            ptr = int(out.trace_ptr)
-            assert ptr <= cfg.max_trace
-            cell = {
-                "load_cv": _cv(np.asarray(out.trace_wload)[:ptr]),
-                "migrations": int(out.moves),
-                "rollbacks": int(out.rollbacks),
-                "refines": int(out.refines),
-                "ticks": int(out.tick),
-            }
-            cells[f"{sname}/{mname}"] = cell
-            rows.append([sname, mname, f"{cell['load_cv']:.3f}",
-                         cell["migrations"], cell["rollbacks"],
-                         cell["ticks"]])
+            cells[f"{sname}/{mname}"] = _cell_stats(out, cfg.max_trace)
+    rows = [[sname, mname, f"{cell['load_cv']:.3f}", cell["migrations"],
+             cell["rollbacks"], cell["ticks"]]
+            for sname in schedules for mname in MODES
+            for cell in [cells[f"{sname}/{mname}"]]]
     table(["scenario", "mode", "load CV", "migrations", "rollbacks",
            "ticks"], rows)
     return cells
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, batched: bool = True):
     section("theta=0 vs recompute oracle (bitwise, single + distributed)")
     oracle = check_theta_oracle(n=64 if quick else 96)
     for fw, st in oracle["frameworks"].items():
@@ -262,8 +290,9 @@ def run(quick: bool = False):
     section("Distributed wire bytes/round with shard-local theta (flat in N)")
     wire = check_wire_flat(sizes=(64, 256) if quick else (64, 256, 1024))
 
-    section("Churn x heterogeneity x hysteresis grid (DES engine)")
-    cells = run_grid(quick)
+    section("Churn x heterogeneity x hysteresis grid (DES engine, "
+            + ("batched" if batched else "python loop") + ")")
+    cells = run_grid(quick, batched=batched)
 
     # headline: state-sized hysteresis balances like theta=0 but without
     # the thrashing — and both beat leaving the initial partition alone
@@ -297,11 +326,12 @@ def run(quick: bool = False):
                "summary": summary,
                "params": {"theta_scale": THETA_SCALE, "freeze": FREEZE,
                           "base_speeds": list(BASE_SPEEDS),
-                          "quick": quick}}
+                          "quick": quick, "batched": batched}}
     write_bench_json("dynamics", payload)
     return payload
 
 
 if __name__ == "__main__":
     import sys
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv,
+        batched="--no-batched" not in sys.argv)

@@ -14,8 +14,14 @@ Two claims measured (ISSUE 2 acceptance criteria):
      path's move sequence EXACTLY (same turns, nodes, destinations) and
      both potentials to <= 1e-3 relative over a 512-turn trace, for both
      cost frameworks.  Asserted here (and by the CI bench-smoke job at
-     N=256) on every run.
+     N=256) on every run.  By default the incremental side runs through
+     the batched sweep runtime (DESIGN.md §12) over several seeds — one
+     vmapped program per framework, each element checked against its own
+     looped recompute oracle (``--no-batched`` restores the seed-0-only
+     looped check).
 
+The timing sweep below stays a Python loop over sizes by design: mixed
+(N, K) shapes are separate compiles, hence separate stacks (§12.1).
 Results are emitted machine-readably to BENCH_refine.json.
 """
 from __future__ import annotations
@@ -24,6 +30,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import sweeps
 from repro.core.refine import refine_traced
 from repro.graphs.generators import random_degree_graph, random_weights
 from repro.core.problem import make_problem
@@ -43,6 +50,25 @@ def _instance(n: int, k: int, seed: int = 0):
     return prob, r0
 
 
+def _assert_trace_agreement(fw: str, tr_i, tr_r, res_i, res_r, tag: str = ""):
+    for field in ("moved", "node", "source", "dest"):
+        a = np.asarray(getattr(tr_i, field))
+        b = np.asarray(getattr(tr_r, field))
+        assert np.array_equal(a, b), \
+            f"{fw}{tag}: incremental {field} sequence diverged at " \
+            f"turns {np.flatnonzero(a != b)[:5]}"
+    assert np.array_equal(np.asarray(res_i.assignment),
+                          np.asarray(res_r.assignment))
+    rel = {}
+    for pot in ("c0", "ct0"):
+        a = np.asarray(getattr(tr_i, pot), np.float64)
+        b = np.asarray(getattr(tr_r, pot), np.float64)
+        rel[pot] = float(np.max(np.abs(a - b) / np.abs(b)))
+        assert rel[pot] <= AGREE_TOL, \
+            f"{fw}{tag}: {pot} drifted {rel[pot]:.2e} > {AGREE_TOL}"
+    return rel
+
+
 def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
     """Assert the ISSUE-2 acceptance contract at one size; return stats."""
     prob, r0 = _instance(n, k)
@@ -51,21 +77,7 @@ def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
         res_i, tr_i = refine_traced(prob, r0, fw, max_turns=max_turns)
         res_r, tr_r = refine_traced(prob, r0, fw, max_turns=max_turns,
                                     incremental=False)
-        for field in ("moved", "node", "source", "dest"):
-            a = np.asarray(getattr(tr_i, field))
-            b = np.asarray(getattr(tr_r, field))
-            assert np.array_equal(a, b), \
-                f"{fw}: incremental {field} sequence diverged at " \
-                f"turns {np.flatnonzero(a != b)[:5]}"
-        assert np.array_equal(np.asarray(res_i.assignment),
-                              np.asarray(res_r.assignment))
-        rel = {}
-        for pot in ("c0", "ct0"):
-            a = np.asarray(getattr(tr_i, pot), np.float64)
-            b = np.asarray(getattr(tr_r, pot), np.float64)
-            rel[pot] = float(np.max(np.abs(a - b) / np.abs(b)))
-            assert rel[pot] <= AGREE_TOL, \
-                f"{fw}: {pot} drifted {rel[pot]:.2e} > {AGREE_TOL}"
+        rel = _assert_trace_agreement(fw, tr_i, tr_r, res_i, res_r)
         out["frameworks"][fw] = {
             "moves": int(res_i.num_moves),
             "moves_equal": True,
@@ -74,16 +86,54 @@ def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
     return out
 
 
-def run(quick: bool = False):
+def check_agreement_batched(seeds=(0, 1, 2), n: int = 256, k: int = 8,
+                            max_turns: int = 512):
+    """The same contract, incremental side batched: every (seed, framework)
+    cell of a sweep-runtime fleet vs its own looped recompute oracle —
+    gating the §10 incremental contract AND the §12.2 vmap-vs-loop
+    contract in one pass."""
+    instances = [_instance(n, k, seed=seed) for seed in seeds]
+    cases = [sweeps.SweepCase(problem=p, assignment=r0, framework=fw,
+                              label=f"s{seed}/{fw}")
+             for seed, (p, r0) in zip(seeds, instances)
+             for fw in ("c", "ct")]
+    res = sweeps.run_sweep(sweeps.make_spec(cases, mode="traced",
+                                            max_turns=max_turns))
+    out = {"n": n, "k": k, "turns": max_turns, "seeds": list(seeds),
+           "frameworks": {}}
+    for i, case in enumerate(cases):
+        res_r, tr_r = refine_traced(case.problem,
+                                    jnp.asarray(case.assignment),
+                                    case.framework, max_turns=max_turns,
+                                    incremental=False)
+        rel = _assert_trace_agreement(case.framework, res.traces[i], tr_r,
+                                      res.results[i], res_r,
+                                      tag=f"[{case.label}]")
+        st = out["frameworks"].setdefault(
+            case.framework, {"moves": [], "moves_equal": True,
+                             "rel_potential_diff": {"c0": 0.0, "ct0": 0.0}})
+        st["moves"].append(int(res.results[i].num_moves))
+        for pot in ("c0", "ct0"):
+            st["rel_potential_diff"][pot] = max(
+                st["rel_potential_diff"][pot], rel[pot])
+    return out
+
+
+def run(quick: bool = False, batched: bool = True):
     k = 8
     sizes = [256, 1024] if quick else [256, 1024, 4096]
     timing_turns = 48 if quick else 64
 
     # ---- acceptance: exact moves + <=1e-3 potentials, both frameworks ----
-    section("Incremental refinement: move/potential agreement (512 turns)")
-    agreement = check_agreement(n=256, k=k)
+    if batched:
+        section("Incremental (batched sweep) vs recompute oracle (512 turns)")
+        agreement = check_agreement_batched(seeds=(0, 1) if quick
+                                            else (0, 1, 2), k=k)
+    else:
+        section("Incremental refinement: move/potential agreement (512 turns)")
+        agreement = check_agreement(n=256, k=k)
     for fw, st in agreement["frameworks"].items():
-        print(f"  [{fw}] {st['moves']} moves identical; "
+        print(f"  [{fw}] moves {st['moves']} identical; "
               f"max rel potential diff "
               f"c0={st['rel_potential_diff']['c0']:.2e} "
               f"ct0={st['rel_potential_diff']['ct0']:.2e}")
@@ -134,11 +184,12 @@ def run(quick: bool = False):
             f"at N={top['n']}, K={k}"
 
     payload = {"agreement": agreement, "scaling": results,
-               "timing_turns": timing_turns}
+               "timing_turns": timing_turns, "batched": batched}
     write_bench_json("refine", payload)
     return payload
 
 
 if __name__ == "__main__":
     import sys
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv,
+        batched="--no-batched" not in sys.argv)

@@ -19,7 +19,7 @@ import traceback
 from . import (baselines_compare, batch_study, distributed_bench,
                dynamics_bench, fig7_8_simtime, fig9_10_load_traces,
                kernel_bench, planner_bench, refine_bench, roofline,
-               table1_cost_frameworks, train_bench)
+               sweep_bench, table1_cost_frameworks, train_bench)
 from .common import write_bench_json
 
 SUITES = {
@@ -35,11 +35,12 @@ SUITES = {
     "distributed": distributed_bench.run,
     "refine": refine_bench.run,
     "dynamics": dynamics_bench.run,
+    "sweeps": sweep_bench.run,
 }
 
 # these write their BENCH_<name>.json themselves (they must also do so
 # when invoked standalone by the CI smoke jobs)
-_SELF_WRITING = {"refine", "dynamics"}
+_SELF_WRITING = {"refine", "dynamics", "sweeps"}
 
 
 def main() -> None:

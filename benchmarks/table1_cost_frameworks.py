@@ -7,6 +7,11 @@ machine turn order for both frameworks; report C_0, Ct_0 and iterations
 
 Paper's claim to reproduce: the C_i framework converges to better values of
 BOTH global costs, while Ct_i converges in fewer iterations.
+
+By default the trials run through the batched sweep runtime (DESIGN.md
+§12): all realizations of a framework execute as ONE vmapped program
+(``--no-batched`` restores the per-trial Python loop; per-element
+results are the looped results bitwise, so the table is identical).
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import sweeps
 from repro.core import costs
 from repro.core.initial import initial_partition
 from repro.core.problem import make_problem
@@ -25,17 +31,23 @@ from .common import section, table
 
 SPEEDS = (0.1, 0.2, 0.3, 0.3, 0.1)
 MU = 8.0
+MAX_TURNS = 4000
 
 
-def one_trial(seed: int, n: int = 230):
+def _instance(seed: int, n: int = 230):
     adj = random_degree_graph(n, seed=seed, dmin=3, dmax=6)
     b, c = random_weights(adj, seed=seed + 1000, mean=5.0)
     prob = make_problem(c, b, SPEEDS, mu=MU)
     r0 = initial_partition(jnp.asarray(adj), len(SPEEDS),
                            jax.random.PRNGKey(seed))
+    return prob, r0
+
+
+def one_trial(seed: int, n: int = 230):
+    prob, r0 = _instance(seed, n)
     out = {}
     for fw in costs.FRAMEWORKS:
-        res = refine(prob, r0, fw, max_turns=4000)
+        res = refine(prob, r0, fw, max_turns=MAX_TURNS)
         out[fw] = dict(
             c0=float(costs.global_cost_c0(prob, res.assignment)),
             ct0=float(costs.global_cost_ct0(prob, res.assignment)),
@@ -45,13 +57,41 @@ def one_trial(seed: int, n: int = 230):
     return out
 
 
-def run(quick: bool = False):
-    section("Table I — two cost frameworks at convergence (paper §5.1)")
-    trials = 3 if quick else 5
+def batched_trials(seeds: list[int], n: int = 230):
+    """All (trial, framework) cells via the sweep runtime: one compiled
+    vmap per framework (the framework is a compile-time group key)."""
+    instances = [_instance(seed, n) for seed in seeds]
+    cases = [sweeps.SweepCase(problem=p, assignment=r0, framework=fw,
+                              label=f"seed{seed}/{fw}")
+             for seed, (p, r0) in zip(seeds, instances)
+             for fw in costs.FRAMEWORKS]
+    result = sweeps.run_sweep(sweeps.make_spec(cases, mode="refine",
+                                               max_turns=MAX_TURNS))
+    c0s, ct0s = result.final_potentials()
+    trials = []
+    for t in range(len(seeds)):
+        out = {}
+        for f, fw in enumerate(costs.FRAMEWORKS):
+            i = t * len(costs.FRAMEWORKS) + f
+            out[fw] = dict(c0=float(c0s[i]), ct0=float(ct0s[i]),
+                           iters=int(result.moves[i]),
+                           converged=bool(result.converged[i]))
+        trials.append(out)
+    return trials
+
+
+def run(quick: bool = False, batched: bool = True):
+    mode = "batched sweep" if batched else "python loop"
+    section(f"Table I — two cost frameworks at convergence ({mode})")
+    num = 3 if quick else 5
+    seeds = [10 + t for t in range(num)]
+    if batched:
+        trials = batched_trials(seeds)
+    else:
+        trials = [one_trial(seed) for seed in seeds]
     rows = []
     c_wins_both = 0
-    for t in range(trials):
-        r = one_trial(seed=10 + t)
+    for t, r in enumerate(trials):
         a, b = r["c"], r["ct"]
         if a["c0"] <= b["c0"] and a["ct0"] <= b["ct0"]:
             c_wins_both += 1
@@ -61,10 +101,12 @@ def run(quick: bool = False):
     table(["trial", "C_i: C0", "C_i: Ct0", "C_i iters",
            "Ct_i: C0", "Ct_i: Ct0", "Ct_i iters"], rows)
     print(f"\nC_i framework better on BOTH global costs in "
-          f"{c_wins_both}/{trials} trials "
+          f"{c_wins_both}/{num} trials "
           f"(paper Table I: 5/5).")
-    return {"c_wins_both": c_wins_both, "trials": trials}
+    return {"c_wins_both": c_wins_both, "trials": num, "batched": batched}
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv,
+        batched="--no-batched" not in sys.argv)

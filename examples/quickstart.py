@@ -47,6 +47,13 @@ def main():
     loads = jnp.zeros(5).at[r].add(problem.node_weights) / problem.speeds
     print("weighted machine loads:", [f"{float(x):.0f}" for x in loads])
 
+    # Next step: examples/sweep_study.py runs a whole scenario fleet
+    # (graph families x frameworks x hysteresis levels) through the
+    # batched sweep runtime (repro.sweeps, DESIGN.md §12) — same game,
+    # one compiled batch per case group instead of a Python loop.
+    print("\nnext: PYTHONPATH=src python examples/sweep_study.py "
+          "(batched scenario fleets)")
+
 
 if __name__ == "__main__":
     main()

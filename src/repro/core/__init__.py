@@ -6,12 +6,23 @@ Public API:
     dissatisfaction, global potentials C_0 / Ct_0
   * refine / refine_traced / refine_simultaneous — iterative improvement
     (incremental aggregate-state path by default, DESIGN.md §10)
+  * batched variants (stack_problems + refine*_batched, DESIGN.md §12) —
+    scenario fleets under one jax.vmap-compiled program
   * AggregateState / init_aggregate_state — the carried aggregate
   * initial_partition (focal nodes + hop expansion), er_cluster_growth
   * simulated_annealing, cluster_move_pass — §4.4/§7 meta-heuristics
 """
 from . import aggregate, costs  # noqa: F401
 from .aggregate import AggregateState, init_aggregate_state  # noqa: F401
+from .batch import (  # noqa: F401
+    batch_size,
+    refine_batched,
+    refine_simultaneous_batched,
+    refine_traced_batched,
+    stack_problems,
+    stack_pytrees,
+    unstack_pytree,
+)
 from .annealing import AnnealResult, simulated_annealing  # noqa: F401
 from .constrained import (  # noqa: F401
     contiguous_stage_dp,

@@ -113,13 +113,25 @@ def apply_move(problem: PartitionProblem, agg: AggregateState, node: Array,
                source: Array, dest: Array, do_move: Array,
                total_weight: Array) -> AggregateState:
     """Apply one (gated) unilateral move: O(N) rank-1 aggregate update,
-    O(1) load delta, O(K) potential deltas via the exact identities."""
+    O(1) load delta, O(K) potential deltas via the exact identities.
+
+    The rank-1 update is expressed as a dense outer product against the
+    ``±1`` one-hot column delta rather than a two-column scatter: the
+    values are bitwise identical (the untouched columns add an exact
+    ``+0.0``, and an accepted move always has ``source != dest`` — an
+    own-column argmin yields non-positive net dissatisfaction, and
+    rejected turns are discarded by the ``do_move`` select), while the
+    dense form vectorizes under ``jax.vmap`` where a batched two-column
+    scatter serializes (DESIGN.md §12.2)."""
     col = problem.adjacency[node]           # symmetric: row l == column l
     b_node = problem.node_weights[node]
     dc0, dct0 = potential_deltas(agg.aggregate[node], b_node, source, dest,
                                  agg.loads, problem.speeds, problem.mu,
                                  total_weight)
-    new_aggregate = agg.aggregate.at[:, source].add(-col).at[:, dest].add(col)
+    kidx = jnp.arange(agg.loads.shape[0])
+    col_delta = (kidx == dest).astype(col.dtype) \
+        - (kidx == source).astype(col.dtype)
+    new_aggregate = agg.aggregate + col[:, None] * col_delta[None, :]
     new_assignment = agg.assignment.at[node].set(dest)
     new_loads = agg.loads.at[source].add(-b_node).at[dest].add(b_node)
     return AggregateState(

@@ -1,0 +1,207 @@
+"""Batched ("fleet") execution of the partition game (DESIGN.md §12).
+
+The paper's claims are statistical — equilibria, potential descent and
+load balance over *families* of topologies, seeds and cost frameworks —
+so the natural unit of execution is not one ``PartitionProblem`` but a
+stack of them.  This module provides the stacking primitives and the
+batched refinement entry points: ``B`` same-shaped problems (same N and
+K; adjacency, node weights, speeds, mu and theta all varying per
+element) are stacked leaf-wise into one pytree with a leading batch
+axis, and a single ``jax.vmap``-compiled program runs all ``B``
+refinements at once.  Scenario coverage then scales with hardware
+instead of with a Python loop's dispatch overhead.
+
+Per-element semantics are the looped semantics (DESIGN.md §12): JAX's
+batching rules turn ``lax.while_loop`` into a run-until-all-converge
+loop that select-masks finished elements, and ``lax.scan`` into a scan
+of the batched body, so every batch element reproduces the move
+sequence, assignment, loads and gains of its own unbatched run
+*bitwise*.  The one documented exception: the carried potentials
+(``Trace.c0`` / ``Trace.ct0``) may differ from the looped run in the
+last float32 ULP, because XLA may fuse the exact-potential-identity
+update ``c0 + dc0`` differently in batched layouts; they stay within
+the same ≤1e-3 relative budget the incremental path already carries
+(``benchmarks/sweep_bench.py`` gates both properties in CI).
+
+The higher-level ``SweepSpec → SweepResult`` API (grouping cases by
+their static dims, reduction helpers) lives in :mod:`repro.sweeps`; the
+batched DES engine entry point is
+:func:`repro.des.engine.run_simulation_batch`.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import costs
+from .problem import PartitionProblem
+from .refine import DEFAULT_TOL, refine, refine_simultaneous, refine_traced
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pytree stacking (DESIGN.md §12.1)
+# ---------------------------------------------------------------------------
+
+def stack_pytrees(trees: Sequence):
+    """Stack same-structure, same-leaf-shape pytrees along a new leading
+    batch axis.  The result has the SAME pytree type as the inputs, so a
+    stack of ``PartitionProblem``\\ s is itself a ``PartitionProblem``
+    whose leaves carry a leading ``(B, ...)`` dimension — exactly what
+    ``jax.vmap`` with ``in_axes=0`` consumes (DESIGN.md §12.1)."""
+    trees = list(trees)
+    if not trees:
+        raise ValueError("cannot stack an empty sequence of pytrees")
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def unstack_pytree(tree, index: int):
+    """Element ``index`` of a stacked pytree (inverse of one stack slot)."""
+    return jax.tree.map(lambda leaf: leaf[index], tree)
+
+
+def batch_size(tree) -> int:
+    """Leading batch dimension of a stacked pytree."""
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def stack_problems(problems: Sequence[PartitionProblem]) -> PartitionProblem:
+    """Stack ``B`` problems (same N, same K) into one batched problem.
+
+    Adjacency, node weights, speeds and mu may all differ per element;
+    the *shapes* must agree because one compiled program serves the whole
+    stack (mixed sizes belong in separate stacks — ``repro.sweeps``
+    groups by shape automatically)."""
+    problems = list(problems)
+    shapes = {(p.num_nodes, p.num_machines) for p in problems}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"stack_problems needs one (N, K) shape, got {sorted(shapes)}; "
+            "group differently-shaped problems into separate stacks")
+    return stack_pytrees(problems)
+
+
+def shard_across_devices(tree, devices=None):
+    """Shard a stacked pytree's leading batch axis across devices.
+
+    The batch axis is embarrassingly parallel, so on multi-device
+    hardware (TPU slice, GPUs, or a CPU host forced to expose
+    ``--xla_force_host_platform_device_count=N`` devices) placing each
+    element's slab on its own device lets the vmapped program run
+    batch-parallel — per-element results are unchanged (each element's
+    program is untouched SPMD; DESIGN.md §12.5).  No-op on a single
+    device or when the batch does not divide the device count.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    bsz = batch_size(tree)
+    ndev = len(devices)
+    if ndev <= 1 or bsz % ndev != 0:
+        return tree
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("batch",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("batch"))
+    return jax.tree.map(lambda leaf: jax.device_put(leaf, sharding), tree)
+
+
+def _stack_theta(theta, num_problems: int, num_nodes: int):
+    """Normalize a per-batch theta spec to None or a (B, N) f32 array."""
+    if theta is None:
+        return None
+    theta = jnp.asarray(theta, jnp.float32)
+    return jnp.broadcast_to(theta, (num_problems, num_nodes))
+
+
+# ---------------------------------------------------------------------------
+# batched refinement entry points
+# ---------------------------------------------------------------------------
+
+def _vmap_over_theta(fn, problems, assignments, theta):
+    """vmap ``fn(problem, assignment, theta)`` with theta optionally absent.
+
+    ``theta=None`` must stay a *literal* ``None`` inside every element
+    (the threshold-free code path of DESIGN.md §11), so it cannot ride a
+    vmapped zeros array — it is dispatched statically here instead."""
+    if theta is None:
+        return jax.vmap(lambda p, r: fn(p, r, None))(problems, assignments)
+    return jax.vmap(fn)(problems, assignments, theta)
+
+
+@partial(jax.jit, static_argnames=("framework", "max_turns", "incremental",
+                                   "verify_every", "dissat_fn"))
+def refine_batched(problems: PartitionProblem, assignments: Array,
+                   framework: str = costs.C_FRAMEWORK,
+                   max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+                   incremental: bool = True, verify_every: int = 0,
+                   dissat_fn=None, theta=None):
+    """:func:`repro.core.refine.refine` over a problem stack (DESIGN.md §12).
+
+    ``problems`` is a stacked ``PartitionProblem`` (leaves ``(B, ...)``,
+    see :func:`stack_problems`), ``assignments`` is ``(B, N)`` and
+    ``theta`` is ``None`` or broadcastable to ``(B, N)``.  Returns a
+    ``RefineResult`` whose leaves carry a leading batch axis.  The
+    batched ``lax.while_loop`` runs until every element converges,
+    select-masking the finished ones, so each element's result equals
+    its unbatched run bitwise.  ``dissat_fn`` follows the convention of
+    :mod:`repro.core.refine`; ``repro.kernels.ops.make_aggregate_dissat_fn``
+    stays on the fused Pallas kernel under this vmap via its batch-grid
+    variant (DESIGN.md §12.3)."""
+    b, n = assignments.shape
+
+    def one(problem, r0, th):
+        return refine(problem, r0, framework, max_turns=max_turns, tol=tol,
+                      incremental=incremental, verify_every=verify_every,
+                      dissat_fn=dissat_fn, theta=th)
+
+    return _vmap_over_theta(one, problems, assignments,
+                            _stack_theta(theta, b, n))
+
+
+@partial(jax.jit, static_argnames=("framework", "max_turns", "incremental",
+                                   "verify_every"))
+def refine_traced_batched(problems: PartitionProblem, assignments: Array,
+                          framework: str = costs.C_FRAMEWORK,
+                          max_turns: int = 512, tol: float = DEFAULT_TOL,
+                          incremental: bool = True, verify_every: int = 0,
+                          theta=None):
+    """:func:`repro.core.refine.refine_traced` over a problem stack.
+
+    Returns ``(RefineResult, Trace)`` with a leading batch axis on every
+    leaf: ``Trace.moved`` is ``(B, T)``, etc.  Fixed-length scans batch
+    trivially, so per-element move sequences are bitwise those of the
+    looped runs; the carried potentials keep the ≤1e-3 relative budget
+    (DESIGN.md §12.2)."""
+    b, n = assignments.shape
+
+    def one(problem, r0, th):
+        return refine_traced(problem, r0, framework, max_turns=max_turns,
+                             tol=tol, incremental=incremental,
+                             verify_every=verify_every, theta=th)
+
+    return _vmap_over_theta(one, problems, assignments,
+                            _stack_theta(theta, b, n))
+
+
+@partial(jax.jit, static_argnames=("framework", "max_sweeps"))
+def refine_simultaneous_batched(problems: PartitionProblem,
+                                assignments: Array,
+                                framework: str = costs.C_FRAMEWORK,
+                                max_sweeps: int = 256,
+                                tol: float = DEFAULT_TOL, theta=None):
+    """§4.5 simultaneous-sweep mode over a problem stack (DESIGN.md §12).
+
+    Returns ``(RefineResult, (c0s, ct0s, active))`` with leading batch
+    axes (the per-sweep potential traces are ``(B, max_sweeps)``)."""
+    b, n = assignments.shape
+
+    def one(problem, r0, th):
+        return refine_simultaneous(problem, r0, framework,
+                                   max_sweeps=max_sweeps, tol=tol, theta=th)
+
+    return _vmap_over_theta(one, problems, assignments,
+                            _stack_theta(theta, b, n))

@@ -42,6 +42,40 @@ because every accepted move still strictly descends the potential — by at
 least ``2*theta_i`` for C_0 (Thm. 3.1) and ``theta_i`` for Ct_0
 (Thm. 5.1).  ``theta=None`` (default) and ``theta=0`` reproduce today's
 move sequences bitwise.
+
+The ``dissat_fn`` convention
+----------------------------
+
+THE canonical calling convention for a pluggable per-turn reduction —
+everything that accepts a ``dissat_fn`` (``refine`` here, the shard
+candidates of :mod:`repro.distributed`, the kernel adapters of
+:mod:`repro.kernels.ops`) uses exactly this 9-argument signature::
+
+    dissat_fn(aggregate, assignment, node_weights, loads, speeds, mu,
+              framework, total_weight, theta) -> (dissat, best_machine)
+
+1. ``aggregate``    — (rows, K) f32, ``A[i, k] = sum_j c_ij 1[r_j = k]``
+   for the rows being evaluated (the full graph, or a shard's row block).
+2. ``assignment``   — (rows,) i32, the rows' OWN current machines.
+3. ``node_weights`` — (rows,) f32, the rows' computational loads ``b_i``.
+4. ``loads``        — (K,) f32, GLOBAL machine loads ``L_k``.
+5. ``speeds``       — (K,) f32, machine capacities ``w_k``.
+6. ``mu``           — () f32, inter-machine cost weight (paper §3.1).
+7. ``framework``    — static str, ``"c"`` (Eq. 1) or ``"ct"`` (Eq. 6).
+8. ``total_weight`` — () f32, the global weight sum ``B``.  The Ct
+   framework needs it and a row block cannot compute it locally.
+9. ``theta``        — ``None`` or (rows,) f32 per-node migration price
+   (DESIGN.md §11, added in PR 3).  The returned dissatisfaction is NET
+   of it; ``None`` means no threshold and must match ``theta=0`` bitwise.
+
+Returns ``(dissat (rows,), best_machine (rows,))``: the net Eq.-4
+dissatisfaction and the LOWEST-INDEX arg-best machine (the DESIGN.md §7
+tie-break).  Reference implementation: ``costs.cost_matrix_from_aggregate``
+followed by ``costs.dissatisfaction_from_cost`` (the default when
+``dissat_fn=None``); fused implementation:
+``repro.kernels.ops.make_aggregate_dissat_fn`` — which under ``jax.vmap``
+(the batched sweeps of DESIGN.md §12) stays on the fused batch-grid
+kernel rather than falling back.
 """
 from __future__ import annotations
 
@@ -120,11 +154,9 @@ def _turn_incremental(problem: PartitionProblem, agg: agg_mod.AggregateState,
     """One machine turn, incremental path: O(NK) costs from the carried
     aggregate, O(N) rank-1 move (DESIGN.md §10).
 
-    ``dissat_fn(aggregate, assignment, node_weights, loads, speeds, mu,
-    framework, total_weight, theta) -> (dissat, best)`` substitutes the
-    fused Pallas kernel (``repro.kernels.ops.make_aggregate_dissat_fn``)
-    for the jnp assembly; like the jnp path it returns dissatisfaction NET
-    of the hysteresis threshold ``theta`` (None = no threshold).
+    ``dissat_fn`` follows the canonical 9-argument convention (module
+    docstring) and substitutes e.g. the fused Pallas kernel
+    (``repro.kernels.ops.make_aggregate_dissat_fn``) for the jnp assembly.
     """
     if dissat_fn is None:
         cost = costs.cost_matrix_from_aggregate(

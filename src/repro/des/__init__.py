@@ -6,14 +6,17 @@ from .engine import (  # noqa: F401
     des_tick,
     make_initial_state,
     run_simulation,
+    run_simulation_batch,
 )
 from .scenarios import (  # noqa: F401
     SpeedSchedule,
     constant,
     failure_recovery,
     make_schedule,
+    pad_segments,
     random_churn,
     slowdown,
     speeds_at,
+    stack_schedules,
 )
 from .workload import ThreadSpec, flooded_packet_workload  # noqa: F401

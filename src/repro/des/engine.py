@@ -740,3 +740,81 @@ def run_simulation(cfg: DESConfig, adj: Array, state: DESState,
         return des_tick(cfg, adj, s, speed_schedule)
 
     return jax.lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# batched scenario fleets (DESIGN.md §12.4)
+# ---------------------------------------------------------------------------
+
+DEFAULT_BATCH_CHUNK = 256
+
+
+@partial(jax.jit, static_argnames=("cfg", "chunk"))
+def run_simulation_batch(cfg: DESConfig, adjs: Array, states: DESState,
+                         speed_schedules: SpeedSchedule | None = None,
+                         chunk: int = DEFAULT_BATCH_CHUNK) -> DESState:
+    """:func:`run_simulation` over a stack of B scenarios in one program.
+
+    ``adjs`` is ``(B, N, N)``, ``states`` a :class:`DESState` whose
+    leaves carry a leading batch axis (stack B
+    :func:`make_initial_state` results), and ``speed_schedules`` is
+    ``None`` or a stacked :class:`~repro.des.scenarios.SpeedSchedule`
+    (``(B, S)`` times / ``(B, S, K)`` speeds — see
+    :func:`repro.des.scenarios.stack_schedules`).  ``cfg`` is shared:
+    the config is compile-time structure (capacities, cadences), while
+    everything data-like (graph, workload, speeds) varies per element.
+
+    A naive ``vmap(run_simulation)`` would pay the refinement branch of
+    the per-tick ``lax.cond`` on EVERY tick for the whole batch (a
+    batched predicate executes both branches).  Instead ticks run in
+    chunks of ``cfg.refine_freq`` with refinement compiled out of the
+    tick, and one vmapped refinement round applies after each chunk,
+    masked per element — the same per-element cadence and cost profile
+    as the looped engine (DESIGN.md §12.4).  Elements that drain (or hit
+    ``max_ticks``) mid-chunk are select-masked exactly like the batched
+    ``while_loop`` rule would, so every element's final state — traces
+    included — is bitwise the state its own looped :func:`run_simulation`
+    produces (``tests/test_sweeps.py`` + ``benchmarks/sweep_bench.py``
+    pin this).  ``chunk`` only applies when ``cfg.refine_freq == 0``
+    (no cadence to align with).
+    """
+    inner_cfg = dataclasses.replace(cfg, refine_freq=0)
+    chunk = cfg.refine_freq if cfg.refine_freq > 0 \
+        else max(1, min(chunk, cfg.max_ticks))
+    sched_axes = None if speed_schedules is None \
+        else jax.tree.map(lambda _: 0, speed_schedules)
+
+    def masked(pred, new, old):
+        return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+    def tick_one(adj, s, sched):
+        alive = (~s.done) & (s.tick < cfg.max_ticks)   # the while_loop cond
+        return masked(alive, des_tick(inner_cfg, adj, s, sched), s)
+
+    def refine_one(adj, s, sched, advanced):
+        # des_tick refines at the END of a tick whose post-increment tick
+        # hits the cadence, using that tick's live speeds — i.e. the
+        # schedule row at s.tick - 1.  ``advanced`` (the element ticked
+        # during this chunk) keeps an element frozen at ``max_ticks`` on
+        # a cadence boundary from being re-refined every outer iteration
+        # — the looped engine refines such an element exactly once.
+        speeds = _base_speeds(cfg) if sched is None \
+            else speeds_at(sched, s.tick - 1)
+        pred = (s.tick % cfg.refine_freq == 0) & ~s.done & advanced
+        return masked(pred, _refine_partition(cfg, adj, s, speeds), s)
+
+    def chunk_body(ss):
+        prev_tick = ss.tick
+        def scan_body(carry, _):
+            return jax.vmap(tick_one, in_axes=(0, 0, sched_axes))(
+                adjs, carry, speed_schedules), None
+        ss, _ = jax.lax.scan(scan_body, ss, None, length=chunk)
+        if cfg.refine_freq > 0:
+            ss = jax.vmap(refine_one, in_axes=(0, 0, sched_axes, 0))(
+                adjs, ss, speed_schedules, ss.tick != prev_tick)
+        return ss
+
+    def cond(ss):
+        return jnp.any((~ss.done) & (ss.tick < cfg.max_ticks))
+
+    return jax.lax.while_loop(cond, chunk_body, states)

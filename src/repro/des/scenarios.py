@@ -110,6 +110,47 @@ def failure_recovery(num_machines: int, machine: int, fail_tick: int,
                     factor=floor, recover_tick=recover_tick, base=base)
 
 
+def pad_segments(schedule: SpeedSchedule, num_segments: int) -> SpeedSchedule:
+    """Extend a schedule to ``num_segments`` by repeating its last row.
+
+    The last segment extends forever, so appending copies of it at later
+    tick boundaries is semantics-preserving: ``speeds_at`` returns the
+    same (K,) vector at every tick.  This is how differently-shaped
+    schedules become stackable for a batched DES run (DESIGN.md §12.4).
+    """
+    have = schedule.times.shape[0]
+    if have > num_segments:
+        raise ValueError(f"schedule already has {have} > {num_segments} "
+                         "segments")
+    if have == num_segments:
+        return schedule
+    extra = num_segments - have
+    times = jnp.concatenate([
+        schedule.times,
+        schedule.times[-1] + jnp.arange(1, extra + 1, dtype=jnp.int32)])
+    speeds = jnp.concatenate([
+        schedule.speeds, jnp.tile(schedule.speeds[-1:], (extra, 1))])
+    return SpeedSchedule(times=times, speeds=speeds)
+
+
+def stack_schedules(schedules) -> SpeedSchedule:
+    """Stack B schedules into one ``SpeedSchedule`` with ``(B, S)`` times
+    and ``(B, S, K)`` speeds, padding shorter ones via :func:`pad_segments`
+    — the schedule operand of a batched DES run
+    (:func:`repro.des.engine.run_simulation_batch`, DESIGN.md §12.4)."""
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("cannot stack an empty sequence of schedules")
+    ks = {s.num_machines for s in schedules}
+    if len(ks) != 1:
+        raise ValueError(f"schedules disagree on machine count: {sorted(ks)}")
+    target = max(s.times.shape[0] for s in schedules)
+    padded = [pad_segments(s, target) for s in schedules]
+    return SpeedSchedule(
+        times=jnp.stack([s.times for s in padded]),
+        speeds=jnp.stack([s.speeds for s in padded]))
+
+
 def random_churn(num_machines: int, num_segments: int, segment_ticks: int,
                  seed, low: float = 0.3, high: float = 1.0) -> SpeedSchedule:
     """Every ``segment_ticks`` ticks each machine's speed is re-drawn

@@ -204,11 +204,11 @@ def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
     PROPOSED move via the exact-potential identities (Thm. 3.1/5.1),
     computed from the node's aggregate row in O(K) — the 8 traced bytes
     each shard attaches to its candidate.  ``dissat_fn`` substitutes a
-    fused kernel for the jnp (dissat, best) reduction; it uses the SAME
-    (aggregate, row_assignment, node_weights, loads, speeds, mu,
-    framework, total_weight, theta) convention as ``repro.core.refine``'s
-    ``dissat_fn``, so ``repro.kernels.ops.make_aggregate_dissat_fn()``
-    plugs into both.  ``theta_local`` is the shard's slice of the per-node
+    fused kernel for the jnp (dissat, best) reduction; it follows the
+    canonical 9-argument convention of :mod:`repro.core.refine` ("The
+    ``dissat_fn`` convention"), so
+    ``repro.kernels.ops.make_aggregate_dissat_fn()`` plugs into both.
+    ``theta_local`` is the shard's slice of the per-node
     hysteresis threshold (DESIGN.md §11) — subtracted shard-locally, so
     candidates carry net gains and the wire stays O(K).
     """

@@ -122,9 +122,10 @@ def _shard_cost_fn(cost_fn: str):
 def _shard_dissat_fn(cost_fn: str):
     """Shard-local (dissat, best) from the carried block aggregate, for the
     INCREMENTAL path: "jnp" (shared O(Ns·K) assembly, bitwise equal to the
-    controller) or "pallas" (fused aggregate→(dissat, best) kernel — the
-    same ``ops.make_aggregate_dissat_fn`` adapter ``core.refine`` takes,
-    one calling convention everywhere)."""
+    controller) or "pallas" (fused aggregate→(dissat, best) kernel).  Both
+    follow the canonical 9-argument ``dissat_fn`` convention — see "The
+    ``dissat_fn`` convention" in :mod:`repro.core.refine` — so the same
+    ``ops.make_aggregate_dissat_fn`` adapter plugs in everywhere."""
     if cost_fn == "jnp":
         return None
     if cost_fn == "pallas":

@@ -1,6 +1,6 @@
 """Fused Pallas TPU kernels for the refinement hot spot (DESIGN.md §3.2, §10).
 
-Two kernels:
+Three kernels:
 
 * :func:`cost_matrix_pallas` — the recompute path.  Every from-scratch
   cost evaluation needs the aggregate  A[i, k] = sum_j c_ij * 1[r_j = k]
@@ -22,6 +22,18 @@ Two kernels:
   the cost block in VREGs, and reduces it to the Eq.-4 dissatisfaction and
   arg-best machine in the same grid step — the (N, K) cost matrix never
   touches HBM.  Per-turn kernel traffic is O(NK) in, O(N) out.
+
+* :func:`dissatisfaction_from_aggregate_batched_pallas` — the same fused
+  reduction over a STACK of B independent problems (DESIGN.md §12.3).
+  The grid grows a leading batch dimension, ``grid=(B, rows/TN)``, and
+  every operand's BlockSpec indexes its element's slab, so one
+  ``pallas_call`` serves a whole scenario fleet while each (b, i) step
+  runs the identical op sequence on the identical tile the unbatched
+  kernel would see — per-element outputs are bitwise those of B separate
+  unbatched calls.  ``repro.kernels.ops`` routes ``jax.vmap`` of the
+  unbatched entry point here via ``jax.custom_batching.custom_vmap``, so
+  the batched sweep runtime (:mod:`repro.sweeps`) keeps the hot path
+  fused instead of falling back to an unrolled per-element kernel.
 
 All tile dims are multiples of the 128-lane MXU width; K is padded to 128
 lanes by the wrappers.
@@ -290,3 +302,122 @@ def dissatisfaction_from_aggregate_pallas(
         interpret=interpret,
     )(a, r_rows, b, t, l_pad, w_pad, scalars)
     return dissat[0, :n_rows], best[0, :n_rows]
+
+
+# ---------------------------------------------------------------------------
+# batch-grid variant: one fused call over a stack of B problems (§12.3)
+# ---------------------------------------------------------------------------
+
+def _dissat_kernel_batched(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
+                           loads_ref, speeds_ref, scalars_ref, dissat_ref,
+                           best_ref, *, framework: str, k_real: int):
+    """Per-(b, i) grid step — the *identical* op sequence of
+    :func:`_dissat_kernel` on batch element b's row tile i (the leading
+    block axes are size-1 slabs), so per-element outputs are bitwise
+    those of the unbatched kernel."""
+    kpad = loads_ref.shape[-1]
+    tn = agg_ref.shape[1]
+    aggregate = agg_ref[0].astype(jnp.float32)                 # (TN, K)
+    mu = scalars_ref[0, 0, 0]
+    total_b = scalars_ref[0, 0, 1]
+    b = b_rows_ref[0, 0, :].astype(jnp.float32)[:, None]       # (TN, 1)
+    r_rows = r_rows_ref[0, 0, :]                               # (TN,)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (tn, kpad), 1)
+    own = (r_rows[:, None] == kidx).astype(jnp.float32)
+    loads = loads_ref[0, 0, :][None, :]                        # (1, K)
+    inv_w = 1.0 / speeds_ref[0, 0, :][None, :]
+    degree = jnp.sum(aggregate, axis=-1, keepdims=True)
+    others = loads - b * own
+    cut_term = 0.5 * mu * (degree - aggregate)
+    if framework == "c":
+        cost = (b * inv_w) * others + cut_term
+    else:
+        cost = (b * b) * inv_w * inv_w \
+            + 2.0 * b * inv_w * inv_w * others \
+            - 2.0 * b * inv_w * total_b + cut_term
+    cost = jnp.where(kidx < k_real, cost, _BIG)
+    best_val = jnp.min(cost, axis=1)
+    best_idx = jnp.min(jnp.where(cost <= best_val[:, None], kidx, kpad),
+                       axis=1).astype(jnp.int32)
+    current = jnp.sum(jnp.where(own > 0, cost, 0.0), axis=1)
+    dissat_ref[0, 0, :] = current - best_val - theta_rows_ref[0, 0, :]
+    best_ref[0, 0, :] = best_idx
+
+
+def dissatisfaction_from_aggregate_batched_pallas(
+        aggregate: Array, row_assignment: Array, node_weights: Array,
+        loads: Array, speeds: Array, mu: Array, framework: str = "c", *,
+        theta: Array | None = None, total_weight: Array | None = None,
+        tile_n: int = DEFAULT_TILE_N,
+        interpret: bool | None = None) -> tuple[Array, Array]:
+    """Fused Eq.-4 reduction over a (B, rows, K) aggregate stack.
+
+    The batch-grid layout of DESIGN.md §12.3: ``grid=(B, rows/TN)`` with
+    row tiles innermost; every operand gains a leading batch axis whose
+    BlockSpec picks element b's slab, so the one kernel invocation stays
+    a single fused program over the whole fleet.  Batched operands:
+    ``aggregate (B, rows, K)``, ``row_assignment``/``node_weights``/
+    optional ``theta`` ``(B, rows)``, ``loads``/``speeds`` ``(B, K)``,
+    ``mu``/optional ``total_weight`` ``(B,)``.  Returns
+    ``(dissat (B, rows), best_machine (B, rows))``, per element bitwise
+    equal to :func:`dissatisfaction_from_aggregate_pallas` on that
+    element's operands.  Reached automatically by ``jax.vmap`` of the
+    :mod:`repro.kernels.ops` wrapper (``custom_vmap`` routes here), which
+    is how the batched sweep runtime keeps the refinement hot path fused.
+    """
+    interpret = resolve_interpret(interpret)
+    bsz, n_rows, k = aggregate.shape
+    assert loads.shape == (bsz, k), (aggregate.shape, loads.shape)
+    if total_weight is None:
+        total_weight = jnp.sum(node_weights, axis=-1)
+    rows_pad = -(-n_rows // tile_n) * tile_n
+    k_pad = -(-k // 128) * 128
+
+    a = jnp.zeros((bsz, rows_pad, k_pad), jnp.float32)
+    a = a.at[:, :n_rows, :k].set(aggregate.astype(jnp.float32))
+    # padded rows point at a padded machine with zero weight (as in the
+    # unbatched wrapper); their outputs are sliced off below
+    r_rows = jnp.full((bsz, 1, rows_pad), k_pad - 1, jnp.int32)
+    r_rows = r_rows.at[:, 0, :n_rows].set(
+        jnp.asarray(row_assignment, jnp.int32))
+    b = jnp.zeros((bsz, 1, rows_pad), jnp.float32).at[:, 0, :n_rows].set(
+        node_weights.astype(jnp.float32))
+    t = jnp.zeros((bsz, 1, rows_pad), jnp.float32)
+    if theta is not None:
+        t = t.at[:, 0, :n_rows].set(
+            jnp.broadcast_to(jnp.asarray(theta, jnp.float32),
+                             (bsz, n_rows)))
+    l_pad = jnp.zeros((bsz, 1, k_pad), jnp.float32).at[:, 0, :k].set(
+        loads.astype(jnp.float32))
+    w_pad = jnp.ones((bsz, 1, k_pad), jnp.float32).at[:, 0, :k].set(
+        speeds.astype(jnp.float32))
+    scalars = jnp.stack(
+        [jnp.broadcast_to(jnp.asarray(mu, jnp.float32), (bsz,)),
+         jnp.broadcast_to(jnp.asarray(total_weight, jnp.float32), (bsz,))],
+        axis=-1)[:, None, :]                                   # (B, 1, 2)
+
+    num_i = rows_pad // tile_n
+    dissat, best = pl.pallas_call(
+        functools.partial(_dissat_kernel_batched, framework=framework,
+                          k_real=k),
+        grid=(bsz, num_i),
+        in_specs=[
+            pl.BlockSpec((1, tile_n, k_pad), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, 1, k_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, k_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 2), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, tile_n), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, i: (b, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, 1, rows_pad), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 1, rows_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, r_rows, b, t, l_pad, w_pad, scalars)
+    return dissat[:, 0, :n_rows], best[:, 0, :n_rows]

@@ -6,7 +6,7 @@ REPRO_PALLAS_COMPILE=1, to override.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import decode_attention_pallas
 from .dissatisfaction import (cost_matrix_pallas,
+                              dissatisfaction_from_aggregate_batched_pallas,
                               dissatisfaction_from_aggregate_pallas,
                               resolve_interpret)
 
@@ -54,6 +55,38 @@ def make_core_cost_matrix_fn(interpret: bool | None = None):
     return fn
 
 
+@lru_cache(maxsize=None)
+def _vmappable_aggregate_dissat(framework: str, interpret: bool):
+    """The fused aggregate→(dissat, best) reduction as a ``custom_vmap``
+    callable: called plain it runs the unbatched Pallas kernel; under
+    ``jax.vmap`` it runs the batch-grid kernel
+    (:func:`~repro.kernels.dissatisfaction.dissatisfaction_from_aggregate_batched_pallas`,
+    DESIGN.md §12.3) instead of an unrolled per-element fallback.  All
+    operands are arrays (``theta`` rides as explicit zeros when absent —
+    bitwise identical, the kernel always subtracts its theta operand)."""
+
+    @jax.custom_batching.custom_vmap
+    def fn(aggregate, row_assignment, node_weights, loads, speeds, mu,
+           total_weight, theta):
+        return dissatisfaction_from_aggregate_pallas(
+            aggregate, row_assignment, node_weights, loads, speeds, mu,
+            framework, theta=theta, total_weight=total_weight,
+            interpret=interpret)
+
+    @fn.def_vmap
+    def _batch_rule(axis_size, in_batched, *args):
+        stacked = [x if hit else
+                   jnp.broadcast_to(x, (axis_size,) + jnp.shape(x))
+                   for x, hit in zip(args, in_batched)]
+        agg, r_rows, b, loads, speeds, mu, total_w, theta = stacked
+        out = dissatisfaction_from_aggregate_batched_pallas(
+            agg, r_rows, b, loads, speeds, mu, framework, theta=theta,
+            total_weight=total_w, interpret=interpret)
+        return out, (True, True)
+
+    return fn
+
+
 @partial(jax.jit, static_argnames=("framework", "interpret"))
 def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
                                    node_weights: Array, loads: Array,
@@ -64,21 +97,31 @@ def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
     """(dissat, best_machine) from a carried aggregate via the fused kernel
     — the incremental refinement hot path (no (N, K) cost matrix in HBM).
     ``theta`` (rows,) subtracts the per-node migration price inside the
-    fused reduction (DESIGN.md §11); the result is net dissatisfaction."""
+    fused reduction (DESIGN.md §11); the result is net dissatisfaction.
+    Under ``jax.vmap`` (the batched sweep runtime, DESIGN.md §12) this
+    dispatches to the batch-grid kernel, staying one fused program."""
     if interpret is None:
         interpret = _default_interpret()
-    return dissatisfaction_from_aggregate_pallas(
-        aggregate, row_assignment, node_weights, loads, speeds, mu,
-        framework, theta=theta, total_weight=total_weight,
-        interpret=interpret)
+    rows = jnp.shape(row_assignment)[-1]
+    if theta is None:
+        theta = jnp.zeros((rows,), jnp.float32)
+    else:
+        theta = jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (rows,))
+    return _vmappable_aggregate_dissat(framework, interpret)(
+        jnp.asarray(aggregate), jnp.asarray(row_assignment, jnp.int32),
+        jnp.asarray(node_weights), jnp.asarray(loads), jnp.asarray(speeds),
+        jnp.asarray(mu, jnp.float32), jnp.asarray(total_weight, jnp.float32),
+        theta)
 
 
 def make_aggregate_dissat_fn(interpret: bool | None = None):
-    """Adapter with the (aggregate, assignment, node_weights, loads, speeds,
-    mu, framework, total_weight, theta) signature expected by
-    repro.core.refine(..., dissat_fn=...), so the incremental loop's
-    per-turn reduction runs as the fused Pallas kernel (theta=None means
-    no hysteresis threshold)."""
+    """Adapter implementing THE ``dissat_fn`` calling convention — see the
+    canonical 9-argument spec in :mod:`repro.core.refine` ("The
+    ``dissat_fn`` convention") — on the fused Pallas kernel, so the
+    incremental loop's per-turn reduction never materializes the (N, K)
+    cost matrix.  Plugs into ``repro.core.refine(..., dissat_fn=...)``
+    and the distributed shards alike, batched or not (DESIGN.md §12.3).
+    """
     def fn(aggregate, assignment, node_weights, loads, speeds, mu,
            framework, total_weight, theta=None):
         return dissatisfaction_from_aggregate(

@@ -1,0 +1,240 @@
+"""SweepSpec → SweepResult: scenario fleets as compiled batches (DESIGN.md §12).
+
+A *sweep* is a flat list of :class:`SweepCase` cells — (problem, initial
+assignment, framework, theta) plus a free-form label — executed by
+:func:`run_sweep` as a handful of ``jax.vmap``-compiled programs instead
+of a Python loop.  Cases are grouped by their compile-time key (mode,
+framework, N, K, theta present or not); each group stacks into one
+batched pytree and runs through the corresponding
+:mod:`repro.core.batch` entry point, so B same-shaped cells cost one
+compile + one device program however many there are.  Per-element
+results are the looped results bitwise (moves/assignments/loads/gains;
+carried potentials to the usual ≤1e-3 relative budget — DESIGN.md
+§12.2), which is what lets ``benchmarks/`` adopt the batched path
+without renegotiating any of their gates.
+
+Batched DES scenario fleets are the same idea one level up — see
+:func:`repro.des.engine.run_simulation_batch` and
+:func:`repro.des.scenarios.stack_schedules` (DESIGN.md §12.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import costs
+from ..core.batch import (refine_batched, refine_simultaneous_batched,
+                          refine_traced_batched, stack_problems,
+                          unstack_pytree)
+from ..core.problem import PartitionProblem
+from ..core.refine import DEFAULT_TOL, RefineResult
+from . import metrics
+
+Array = jax.Array
+
+MODES = ("refine", "traced", "simultaneous")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One scenario cell: a problem instance and how to refine it.
+
+    ``theta`` is the per-node hysteresis threshold (DESIGN.md §11):
+    ``None``, a scalar, or an (N,) array.  ``label`` is free-form
+    metadata carried through to :meth:`SweepResult.summary`."""
+    problem: PartitionProblem
+    assignment: Any                   # (N,) int
+    framework: str = costs.C_FRAMEWORK
+    theta: Any = None
+    label: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A sweep: cases plus the (static) execution knobs shared by all.
+
+    ``mode`` selects the refinement entry point: ``"refine"``
+    (while-loop to convergence), ``"traced"`` (fixed-length scan with
+    per-turn move/potential traces) or ``"simultaneous"`` (§4.5 sweep
+    mode).  ``use_kernel`` routes the per-turn reduction through the
+    fused Pallas batch-grid kernel (DESIGN.md §12.3; ``"refine"`` mode
+    only — the traced loop has no ``dissat_fn`` seam)."""
+    cases: tuple[SweepCase, ...]
+    mode: str = "traced"
+    max_turns: int = 512
+    tol: float = DEFAULT_TOL
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown sweep mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        if self.use_kernel and self.mode != "refine":
+            raise ValueError("use_kernel applies to mode='refine' only "
+                             "(the traced/simultaneous loops have no "
+                             "dissat_fn seam)")
+
+
+def make_spec(cases: Sequence[SweepCase], **kwargs) -> SweepSpec:
+    """Convenience constructor accepting any iterable of cases."""
+    return SweepSpec(cases=tuple(cases), **kwargs)
+
+
+@lru_cache(maxsize=None)
+def _kernel_dissat_fn():
+    """One shared fused-kernel adapter so every sweep reuses the same jit
+    cache entry (``dissat_fn`` is a static argument of ``refine``)."""
+    from ..kernels.ops import make_aggregate_dissat_fn
+    return make_aggregate_dissat_fn()
+
+
+def _group_key(case: SweepCase):
+    return (case.framework, case.problem.num_nodes,
+            case.problem.num_machines, case.theta is None)
+
+
+def _stack_group(cases: list[SweepCase]):
+    problems = stack_problems([c.problem for c in cases])
+    n = cases[0].problem.num_nodes
+    r0 = jnp.stack([jnp.broadcast_to(jnp.asarray(c.assignment, jnp.int32),
+                                     (n,)) for c in cases])
+    if cases[0].theta is None:
+        theta = None
+    else:
+        theta = jnp.stack([
+            jnp.broadcast_to(jnp.asarray(c.theta, jnp.float32), (n,))
+            for c in cases])
+    return problems, r0, theta
+
+
+def run_sweep(spec: SweepSpec) -> "SweepResult":
+    """Execute a sweep: one compiled batched program per case group.
+
+    Groups are keyed on (framework, N, K, theta-present); everything
+    else — adjacency, weights, speeds, mu, theta values, initial
+    assignments — varies freely inside a group's single ``vmap``.
+    Returns a :class:`SweepResult` with per-case results and traces in
+    the order of ``spec.cases``.
+    """
+    ncases = len(spec.cases)
+    groups: dict[tuple, list[int]] = {}
+    for i, case in enumerate(spec.cases):
+        groups.setdefault(_group_key(case), []).append(i)
+
+    results: list = [None] * ncases
+    traces: list = [None] * ncases
+    for key, idxs in groups.items():
+        cases = [spec.cases[i] for i in idxs]
+        problems, r0, theta = _stack_group(cases)
+        framework = key[0]
+        if spec.mode == "refine":
+            dissat_fn = _kernel_dissat_fn() if spec.use_kernel else None
+            out = refine_batched(problems, r0, framework,
+                                 max_turns=spec.max_turns, tol=spec.tol,
+                                 dissat_fn=dissat_fn, theta=theta)
+            tr = None
+        elif spec.mode == "traced":
+            out, tr = refine_traced_batched(problems, r0, framework,
+                                            max_turns=spec.max_turns,
+                                            tol=spec.tol, theta=theta)
+        else:
+            out, tr = refine_simultaneous_batched(problems, r0, framework,
+                                                  max_sweeps=spec.max_turns,
+                                                  tol=spec.tol, theta=theta)
+        for j, i in enumerate(idxs):
+            results[i] = unstack_pytree(out, j)
+            traces[i] = None if tr is None else unstack_pytree(tr, j)
+    return SweepResult(spec=spec, results=results, traces=traces)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-case outcomes of a sweep, ordered like ``spec.cases``.
+
+    ``results[i]`` is case i's :class:`~repro.core.refine.RefineResult`;
+    ``traces[i]`` is its ``Trace`` (traced mode), its
+    ``(c0s, ct0s, active)`` per-sweep potentials (simultaneous mode) or
+    ``None`` (refine mode).  The methods below reduce across the fleet
+    (DESIGN.md §12.5)."""
+    spec: SweepSpec
+    results: list[RefineResult]
+    traces: list
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    @property
+    def moves(self) -> np.ndarray:
+        return np.asarray([int(r.num_moves) for r in self.results])
+
+    @property
+    def turns(self) -> np.ndarray:
+        return np.asarray([int(r.num_turns) for r in self.results])
+
+    @property
+    def converged(self) -> np.ndarray:
+        return np.asarray([bool(r.converged) for r in self.results])
+
+    @property
+    def assignments(self) -> np.ndarray:
+        """(B, N) final assignments (cases must share N to stack)."""
+        return np.stack([np.asarray(r.assignment) for r in self.results])
+
+    def load_cv(self) -> np.ndarray:
+        """(B,) final cross-machine CV of L_k/w_k per case."""
+        return np.asarray([
+            float(metrics.load_cv(np.asarray(r.loads),
+                                  np.asarray(c.problem.speeds)))
+            for r, c in zip(self.results, self.spec.cases)])
+
+    def load_cv_traces(self) -> list[np.ndarray]:
+        """Per-case (T,) CV-descent traces (traced mode only)."""
+        if self.spec.mode != "traced":
+            raise ValueError("CV traces need mode='traced'")
+        return [
+            metrics.load_cv_trace(c.problem.node_weights, c.problem.speeds,
+                                  c.assignment, tr)
+            for c, tr in zip(self.spec.cases, self.traces)]
+
+    def final_potentials(self) -> tuple[np.ndarray, np.ndarray]:
+        """(B,) final (C_0, Ct_0) per case.
+
+        Traced/simultaneous modes read the carried per-turn potentials'
+        last entry; refine mode evaluates the closed forms from the
+        final assignments (one vectorized pass)."""
+        if self.spec.mode == "traced":
+            return (np.asarray([float(np.asarray(t.c0)[-1])
+                                for t in self.traces]),
+                    np.asarray([float(np.asarray(t.ct0)[-1])
+                                for t in self.traces]))
+        if self.spec.mode == "simultaneous":
+            return (np.asarray([float(np.asarray(t[0])[-1])
+                                for t in self.traces]),
+                    np.asarray([float(np.asarray(t[1])[-1])
+                                for t in self.traces]))
+        c0 = [float(costs.global_cost_c0(c.problem, r.assignment))
+              for c, r in zip(self.spec.cases, self.results)]
+        ct0 = [float(costs.global_cost_ct0(c.problem, r.assignment))
+               for c, r in zip(self.spec.cases, self.results)]
+        return np.asarray(c0), np.asarray(ct0)
+
+    def summary(self) -> list[dict]:
+        """One dict per case: label/framework plus the headline stats."""
+        cv = self.load_cv()
+        c0, ct0 = self.final_potentials()
+        return [{
+            "label": c.label,
+            "framework": c.framework,
+            "moves": int(m),
+            "converged": bool(cvg),
+            "load_cv": float(v),
+            "c0": float(a),
+            "ct0": float(b),
+        } for c, m, cvg, v, a, b in zip(
+            self.spec.cases, self.moves, self.converged, cv, c0, ct0)]

@@ -205,6 +205,112 @@ def test_refine_with_aggregate_dissat_kernel():
     assert int(res_jnp.num_moves) == int(res_pal.num_moves)
 
 
+# ---------------------------------------------------------------------------
+# batch-grid dissatisfaction kernel (DESIGN.md §12.3)
+# ---------------------------------------------------------------------------
+
+def _batched_problem_arrays(bsz, n, k, seed):
+    rng = np.random.default_rng(seed)
+    agg = rng.uniform(0, 50, (bsz, n, k)) * (rng.random((bsz, n, k)) < 0.7)
+    r = rng.integers(0, k, (bsz, n)).astype(np.int32)
+    b = rng.uniform(0.1, 10, (bsz, n)).astype(np.float32)
+    loads = rng.uniform(1, 100, (bsz, k)).astype(np.float32)
+    speeds = rng.uniform(0.2, 2.0, (bsz, k)).astype(np.float32)
+    mu = rng.uniform(1, 10, bsz).astype(np.float32)
+    return (jnp.asarray(agg, jnp.float32), jnp.asarray(r), jnp.asarray(b),
+            jnp.asarray(loads), jnp.asarray(speeds), jnp.asarray(mu))
+
+
+# ``interpret`` modes: True forces interpret; None resolves per backend
+# (interpret on CPU, compiled on a real TPU) — the two modes the wrappers
+# actually dispatch between (resolve_interpret).
+@pytest.mark.parametrize("interpret", [True, None])
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_dissat_batched_kernel_vs_unbatched_and_reference(framework,
+                                                          interpret):
+    """Batch-grid kernel == per-element unbatched kernel BITWISE, and ==
+    the jnp reference reduction (tolerance + exact arg-best) per element,
+    theta on and off."""
+    from repro.core import costs as core_costs
+    from repro.kernels.dissatisfaction import (
+        dissatisfaction_from_aggregate_batched_pallas)
+    bsz, n, k = 4, 70, 5
+    agg, r, b, loads, speeds, mu = _batched_problem_arrays(
+        bsz, n, k, seed=ord(framework[0]))
+    total_b = jnp.sum(b, axis=-1)
+    theta = jnp.asarray(
+        np.random.default_rng(3).uniform(0, 10, (bsz, n)), jnp.float32)
+    for th in (None, theta):
+        got_d, got_b = dissatisfaction_from_aggregate_batched_pallas(
+            agg, r, b, loads, speeds, mu, framework, theta=th,
+            total_weight=total_b, interpret=interpret)
+        assert got_d.shape == (bsz, n) and got_b.shape == (bsz, n)
+        for i in range(bsz):
+            one_d, one_b = dissatisfaction_from_aggregate_pallas(
+                agg[i], r[i], b[i], loads[i], speeds[i], mu[i], framework,
+                theta=None if th is None else th[i],
+                total_weight=total_b[i], interpret=interpret)
+            np.testing.assert_array_equal(np.asarray(got_d)[i],
+                                          np.asarray(one_d))
+            np.testing.assert_array_equal(np.asarray(got_b)[i],
+                                          np.asarray(one_b))
+            cost = core_costs.cost_matrix_from_aggregate(
+                agg[i], r[i], b[i], loads[i], speeds[i], mu[i], framework,
+                total_weight=total_b[i])
+            want_d, want_b = core_costs.dissatisfaction_from_cost(
+                cost, r[i], None if th is None else th[i])
+            np.testing.assert_allclose(np.asarray(got_d)[i],
+                                       np.asarray(want_d),
+                                       rtol=2e-4, atol=2e-2)
+            np.testing.assert_array_equal(np.asarray(got_b)[i],
+                                          np.asarray(want_b))
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_vmap_of_ops_wrapper_hits_batch_grid_kernel(interpret):
+    """jax.vmap of ops.dissatisfaction_from_aggregate must match the
+    batch-grid kernel exactly (the custom_vmap dispatch of DESIGN.md
+    §12.3) — fused, not an unrolled fallback."""
+    from repro.kernels.dissatisfaction import (
+        dissatisfaction_from_aggregate_batched_pallas)
+    bsz, n, k = 3, 40, 4
+    agg, r, b, loads, speeds, mu = _batched_problem_arrays(bsz, n, k, 11)
+    total_b = jnp.sum(b, axis=-1)
+    got_d, got_b = jax.vmap(
+        lambda a, rr, w, l, s, m, t: ops.dissatisfaction_from_aggregate(
+            a, rr, w, l, s, m, t, "c", interpret=interpret)
+    )(agg, r, b, loads, speeds, mu, total_b)
+    want_d, want_b = dissatisfaction_from_aggregate_batched_pallas(
+        agg, r, b, loads, speeds, mu, "c", total_weight=total_b,
+        interpret=interpret)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+
+
+def test_vmapped_refine_with_kernel_matches_jnp_path():
+    """The end-to-end §12.3 claim: vmapped incremental refinement with
+    the fused kernel reduction reproduces the vmapped jnp path's moves
+    and assignments."""
+    from repro.core.batch import refine_batched, stack_problems
+    from repro.core.problem import make_problem
+    problems, r0s = [], []
+    for s in range(3):
+        adj, r, b, loads, speeds = _problem_arrays(48, 4, seed=60 + s)
+        problems.append(make_problem(adj, b, speeds, mu=8.0,
+                                     normalize_speeds=False))
+        r0s.append(r)
+    stacked = stack_problems(problems)
+    r0 = jnp.stack(r0s)
+    res_jnp = refine_batched(stacked, r0, "c", max_turns=300)
+    res_pal = refine_batched(
+        stacked, r0, "c", max_turns=300,
+        dissat_fn=ops.make_aggregate_dissat_fn(interpret=True))
+    np.testing.assert_array_equal(np.asarray(res_jnp.assignment),
+                                  np.asarray(res_pal.assignment))
+    np.testing.assert_array_equal(np.asarray(res_jnp.num_moves),
+                                  np.asarray(res_pal.num_moves))
+
+
 def test_interpret_auto_detection():
     """interpret=None auto-detects from the backend (satellite: no more
     hard-coded interpret=True default); explicit values win."""
