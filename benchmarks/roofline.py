@@ -2,7 +2,7 @@
 
 Reads benchmarks/results/dryrun_*.json (produced by repro.launch.dryrun),
 prints the per-(arch x shape x mesh) three-term roofline with the dominant
-bottleneck, and emits the markdown table consumed by EXPERIMENTS.md.
+bottleneck, and emits the markdown table (results to BENCH_roofline.json).
 """
 from __future__ import annotations
 

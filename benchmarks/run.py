@@ -19,7 +19,8 @@ import traceback
 from . import (baselines_compare, batch_study, distributed_bench,
                dynamics_bench, fig7_8_simtime, fig9_10_load_traces,
                kernel_bench, planner_bench, refine_bench, roofline,
-               sweep_bench, table1_cost_frameworks, train_bench)
+               sparse_bench, sweep_bench, table1_cost_frameworks,
+               train_bench)
 from .common import write_bench_json
 
 SUITES = {
@@ -36,11 +37,12 @@ SUITES = {
     "refine": refine_bench.run,
     "dynamics": dynamics_bench.run,
     "sweeps": sweep_bench.run,
+    "sparse": sparse_bench.run,
 }
 
 # these write their BENCH_<name>.json themselves (they must also do so
 # when invoked standalone by the CI smoke jobs)
-_SELF_WRITING = {"refine", "dynamics", "sweeps"}
+_SELF_WRITING = {"refine", "dynamics", "sweeps", "sparse"}
 
 
 def main() -> None:

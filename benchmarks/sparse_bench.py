@@ -1,0 +1,228 @@
+"""Sparse edge-list runtime vs dense: agreement + lifting the O(N^2) ceiling.
+
+Two claims measured (ISSUE 5 acceptance criteria, DESIGN.md §13):
+
+  1. **Agreement** — sparse refinement (``SparseProblem`` through
+     ``refine_traced``) must reproduce the dense path's ACCEPTED-MOVE
+     sequence exactly (same turns, nodes, destinations — matched §7
+     tie-breaking) on the bench grid (N = 256..4096, K = 8, both
+     frameworks, theta on and off), with both carried potentials within
+     the repo's standing ≤ 1e-3 relative budget.  The fused edge-block
+     kernel (``make_edge_dissat_fn``) is additionally gated against the
+     jnp sparse path at the smallest size.  Asserted on every run (CI
+     runs ``--quick``); any residual divergence policy is documented in
+     DESIGN.md §13.3.
+
+  2. **Scaling** — per-turn sparse refinement cost from N=4096 to
+     N=262144 (quick: to 16384).  The dense path is measured where its
+     (N, N) adjacency is cheap, and recorded as infeasible where the
+     adjacency alone exceeds host memory: at N=262144 it needs ~275 GB —
+     no amount of patience recovers that on this class of host, which is
+     the ceiling this runtime removes.  The full run asserts the top
+     size is dense-infeasible, or — on a >256 GiB host where it would
+     fit — that sparse is ≥5x faster end to end (incl. setup) at the
+     largest size where the dense path is actually measured.
+
+Results land in BENCH_sparse.json (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import make_problem
+from repro.core.refine import refine, refine_traced
+from repro.core.sparse import make_sparse_problem, sparse_from_dense
+from repro.graphs.generators import (random_degree_graph,
+                                     random_degree_graph_edges,
+                                     random_weights, random_weights_edges)
+from repro.kernels.ops import make_edge_dissat_fn
+
+from .common import section, table, timed, write_bench_json
+
+AGREE_TOL = 1e-3          # max relative potential deviation (repo budget)
+SPEEDUP_FLOOR = 5.0       # dense must be infeasible or 5x slower on top size
+THETAS = (None, 0.5)
+
+
+def _host_memory_bytes() -> int:
+    try:
+        return os.sysconf("SC_PHYS_PAGES") * os.sysconf("SC_PAGE_SIZE")
+    except (ValueError, OSError):  # pragma: no cover - exotic hosts
+        return 1 << 34
+
+
+def _dense_instance(n: int, k: int, seed: int = 0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    prob = make_problem(c, b, np.ones(k) / k, mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def _sparse_instance(n: int, k: int, seed: int = 0):
+    s, r = random_degree_graph_edges(n, seed=seed)
+    b, w = random_weights_edges(n, s, seed=seed + 1, mean=5.0)
+    prob = make_sparse_problem(s, r, w, b, np.ones(k) / k, mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def check_agreement(sizes=(256, 1024), k: int = 8, max_turns: int = 256):
+    """Gate 1: sparse == dense accepted-move sequences on the grid."""
+    out = []
+    for n in sizes:
+        prob, r0 = _dense_instance(n, k)
+        sp = sparse_from_dense(prob)
+        for fw in ("c", "ct"):
+            for theta in THETAS:
+                res_d, tr_d = refine_traced(prob, r0, fw,
+                                            max_turns=max_turns, theta=theta)
+                res_s, tr_s = refine_traced(sp, r0, fw,
+                                            max_turns=max_turns, theta=theta)
+                tag = f"n={n} fw={fw} theta={theta}"
+                for field in ("moved", "node", "source", "dest"):
+                    a = np.asarray(getattr(tr_s, field))
+                    b = np.asarray(getattr(tr_d, field))
+                    assert np.array_equal(a, b), \
+                        f"{tag}: sparse {field} sequence diverged at " \
+                        f"turns {np.flatnonzero(a != b)[:5]}"
+                assert np.array_equal(np.asarray(res_s.assignment),
+                                      np.asarray(res_d.assignment)), tag
+                rel = {}
+                for pot in ("c0", "ct0"):
+                    a = np.asarray(getattr(tr_s, pot), np.float64)
+                    b = np.asarray(getattr(tr_d, pot), np.float64)
+                    rel[pot] = float(np.max(np.abs(a - b)
+                                            / np.maximum(np.abs(b), 1.0)))
+                    assert rel[pot] <= AGREE_TOL, \
+                        f"{tag}: {pot} drifted {rel[pot]:.2e} > {AGREE_TOL}"
+                out.append({"n": n, "k": k, "framework": fw,
+                            "theta": theta, "moves": int(res_s.num_moves),
+                            "moves_equal": True,
+                            "rel_potential_diff": rel})
+    # the fused edge-block kernel must reproduce the jnp sparse path
+    prob, r0 = _dense_instance(sizes[0], k, seed=7)
+    sp = sparse_from_dense(prob)
+    res_j = refine(sp, r0, "c")
+    res_k = refine(sp, r0, "c", dissat_fn=make_edge_dissat_fn(sp))
+    assert int(res_j.num_moves) == int(res_k.num_moves), \
+        (int(res_j.num_moves), int(res_k.num_moves))
+    assert np.array_equal(np.asarray(res_j.assignment),
+                          np.asarray(res_k.assignment)), \
+        "edge-block kernel diverged from the jnp sparse path"
+    return {"grid": out, "edge_kernel_moves": int(res_k.num_moves),
+            "edge_kernel_equal": True}
+
+
+def scaling(sizes, k: int = 8, timing_turns: int = 16,
+            dense_limit: int = 16384):
+    """Gate 2: sparse per-turn cost vs N; dense measured where cheap,
+    recorded infeasible where the adjacency exceeds host memory."""
+    mem = _host_memory_bytes()
+    rows, results = [], []
+    for n in sizes:
+        sp, r0 = _sparse_instance(n, k)
+        t_sparse = timed(lambda: refine_traced(sp, r0, "c",
+                                               max_turns=timing_turns),
+                         iters=2)
+        per_sparse = t_sparse / timing_turns * 1e3
+        sparse_bytes = sum(int(np.asarray(x).nbytes) for x in
+                           (sp.senders, sp.receivers, sp.edge_weights,
+                            sp.row_start, sp.node_weights))
+        dense_bytes = 4 * n * n
+        entry = {"n": n, "k": k,
+                 "edges_padded": sp.num_edges,
+                 "max_degree": sp.max_degree,
+                 "per_turn_sparse_ms": per_sparse,
+                 "sparse_problem_bytes": sparse_bytes,
+                 "dense_adjacency_bytes": dense_bytes,
+                 "host_memory_bytes": mem,
+                 "dense_feasible": dense_bytes < mem}
+        if n <= dense_limit and entry["dense_feasible"]:
+            prob, r0d = _dense_instance(n, k)
+            t_dense = timed(lambda: refine_traced(prob, r0d, "c",
+                                                  max_turns=timing_turns),
+                            iters=2)
+            entry["per_turn_dense_ms"] = t_dense / timing_turns * 1e3
+            dense_cell = f"{entry['per_turn_dense_ms']:.2f}"
+        else:
+            entry["per_turn_dense_ms"] = None
+            dense_cell = (f"OOM ({dense_bytes / 2**30:.0f} GiB adj "
+                          f"> {mem / 2**30:.0f} GiB RAM)"
+                          if not entry["dense_feasible"] else "skipped")
+        rows.append([n, sp.num_edges, f"{per_sparse:.2f}", dense_cell,
+                     f"{sparse_bytes / 2**20:.1f}",
+                     f"{dense_bytes / 2**20:.0f}"])
+        results.append(entry)
+    table(["N", "E(pad)", "sparse ms/turn", "dense ms/turn",
+           "sparse MiB", "dense adj MiB"], rows)
+    print(f"ms/turn = wall / {timing_turns} turns, so the one-time "
+          "aggregate init is amortized in — that O(N^2 K) matmul (vs the "
+          "sparse path's O(E K) segment sum) is most of the dense gap "
+          "here; steady-state per-turn work is O(N K) either way "
+          "(DESIGN.md §13.3).")
+    return results
+
+
+def run(quick: bool = False):
+    k = 8
+    agree_sizes = (256, 1024) if quick else (256, 1024, 4096)
+    scale_sizes = [4096, 16384] if quick else [4096, 16384, 65536, 262144]
+
+    section("Sparse vs dense: accepted-move agreement (grid)")
+    agreement = check_agreement(sizes=agree_sizes, k=k)
+    for st in agreement["grid"]:
+        print(f"  [n={st['n']} {st['framework']} theta={st['theta']}] "
+              f"moves {st['moves']} identical; rel potential diff "
+              f"c0={st['rel_potential_diff']['c0']:.2e} "
+              f"ct0={st['rel_potential_diff']['ct0']:.2e}")
+    print(f"  edge-block kernel: {agreement['edge_kernel_moves']} moves, "
+          "identical to jnp sparse path")
+
+    section("Scaling: per-turn refinement cost, sparse vs dense ceiling")
+    results = scaling(scale_sizes, k=k)
+
+    if not quick:
+        top = results[-1]
+        assert top["n"] >= 65536, top["n"]
+        if not top["dense_feasible"]:
+            print(f"\nN={top['n']}: dense adjacency alone needs "
+                  f"{top['dense_adjacency_bytes'] / 2**30:.0f} GiB "
+                  f"(> {top['host_memory_bytes'] / 2**30:.0f} GiB host "
+                  f"RAM); sparse ran at "
+                  f"{top['per_turn_sparse_ms']:.2f} ms/turn in "
+                  f"{top['sparse_problem_bytes'] / 2**20:.1f} MiB")
+        else:
+            # a host with > 256 GiB RAM CAN hold the top-size adjacency;
+            # the dense run is still not measured there (generation alone
+            # materializes several (N, N) temporaries), so gate on the
+            # largest size where dense WAS measured instead
+            measured = [e for e in results
+                        if e["per_turn_dense_ms"] is not None]
+            assert measured, "dense feasible at top size but measured " \
+                             "nowhere — raise dense_limit"
+            ref = measured[-1]
+            ratio = ref["per_turn_dense_ms"] / ref["per_turn_sparse_ms"]
+            assert ratio >= SPEEDUP_FLOOR, \
+                f"dense only {ratio:.1f}x slower (< {SPEEDUP_FLOOR}x) " \
+                f"at N={ref['n']} and feasible at N={top['n']}"
+            print(f"\nhuge host: dense fits at N={top['n']} but is "
+                  f"{ratio:.1f}x slower at the largest measured size "
+                  f"(N={ref['n']})")
+
+    payload = {"agreement": agreement, "scaling": results,
+               "backend_devices": jax.device_count()}
+    write_bench_json("sparse", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -9,6 +9,9 @@ Public API:
   * batched variants (stack_problems + refine*_batched, DESIGN.md §12) —
     scenario fleets under one jax.vmap-compiled program
   * AggregateState / init_aggregate_state — the carried aggregate
+  * SparseProblem / make_sparse_problem / sparse_from_dense /
+    dense_from_sparse — padded edge-list problems (DESIGN.md §13); every
+    refine/costs/aggregate entry point accepts either representation
   * initial_partition (focal nodes + hop expansion), er_cluster_growth
   * simulated_annealing, cluster_move_pass — §4.4/§7 meta-heuristics
 """
@@ -35,6 +38,7 @@ from .costs import (  # noqa: F401
     CT_FRAMEWORK,
     FRAMEWORKS,
     adjacency_aggregate,
+    adjacency_aggregate_sparse,
     cost_matrix,
     cost_matrix_from_aggregate,
     dissatisfaction,
@@ -44,7 +48,9 @@ from .costs import (  # noqa: F401
     global_cost_ct0,
     load_imbalance,
     node_costs,
+    problem_aggregate,
     total_cut,
+    total_cut_sparse,
 )
 from .initial import (  # noqa: F401
     bfs_distances,
@@ -59,6 +65,13 @@ from .problem import (  # noqa: F401
     machine_loads,
     make_problem,
     make_state,
+)
+from .sparse import (  # noqa: F401
+    SparseProblem,
+    dense_from_sparse,
+    make_sparse_problem,
+    node_incident_edges,
+    sparse_from_dense,
 )
 from .refine import (  # noqa: F401
     RefineResult,

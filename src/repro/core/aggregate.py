@@ -17,9 +17,16 @@ all of it in the ``lax.while_loop`` / ``lax.scan`` carry instead:
     ΔCt_l are read off the moved node's O(K) cost rows — no O(N^2) pass.
 
 Invariants carried by :class:`AggregateState` (asserted by
-``tests/test_incremental.py`` and the ``verify_every`` cross-check):
+``tests/test_incremental.py`` and the ``verify_every`` cross-check),
+stated over either graph representation — for a dense problem
+``c[i, l]`` is an adjacency entry, for a sparse one
+(:class:`~repro.core.sparse.SparseProblem`, DESIGN.md §13) it is the
+weight of edge (i, l) in the edge list (0 when absent):
 
-  I1.  aggregate == adjacency @ one_hot(assignment)      (up to f32 drift)
+  I1.  aggregate[i, k] == sum over incident edges (i, j) of
+       w_ij * 1[r_j = k]  — dense: ``adjacency @ one_hot(assignment)``;
+       sparse: ``segment_sum`` of edge one-hots over sender slabs
+       (up to f32 drift either way)
   I2.  loads[k]  == sum_{i: r_i = k} b_i
   I3.  c0  == C_0(assignment)   and   ct0 == Ct_0(assignment)
   I4.  cut(assignment) == 0.5 * (sum_i degree_i - sum_i A[i, r_i]) — the
@@ -27,7 +34,12 @@ Invariants carried by :class:`AggregateState` (asserted by
        rank-K update (simultaneous moves are not unilateral, so the
        exact-potential identities do not apply; instead both potentials
        are O(K) closed forms of (loads, sq_loads, cut), see
-       :func:`potentials_closed_form`).
+       :func:`repro.core.costs.potentials_closed_form`).
+
+The carried (N, K) aggregate is the same object for both — only how
+moves update it differs: a dense move applies column l of the adjacency
+(O(N)); a sparse move scatters the moved node's ``max_degree`` incident
+edge window (O(deg), :func:`repro.core.sparse.node_incident_edges`).
 
 Drift: every quantity is updated by exact +/- of input values, so f32
 error grows only with the number of moves that touch an entry.  The
@@ -44,8 +56,11 @@ import jax.numpy as jnp
 
 from . import costs
 from .problem import PartitionProblem, machine_loads
+from .sparse import SparseProblem, node_incident_edges
 
 Array = jax.Array
+
+AnyProblem = costs.AnyProblem
 
 
 class AggregateState(NamedTuple):
@@ -57,13 +72,15 @@ class AggregateState(NamedTuple):
     ct0: Array          # ()  float — Ct_0(assignment)  (Eq. 8 potential)
 
 
-def init_aggregate_state(problem: PartitionProblem,
+def init_aggregate_state(problem: AnyProblem,
                          assignment: Array) -> AggregateState:
     """Build the carry from scratch: one O(N^2 K) aggregate matmul and one
-    O(N^2) pass per potential — paid once, then never again."""
+    O(N^2) pass per potential — paid once, then never again.  Sparse
+    problems pay O(E K) + O(E) instead (segment sums over the edge list,
+    closed-form potentials — DESIGN.md §13.2)."""
     assignment = jnp.asarray(assignment, jnp.int32)
     k = problem.num_machines
-    aggregate = costs.adjacency_aggregate(problem.adjacency, assignment, k)
+    aggregate = costs.problem_aggregate(problem, assignment, k)
     loads = machine_loads(problem.node_weights, assignment, k)
     c0 = costs.global_cost_c0(problem, assignment)
     ct0 = costs.global_cost_ct0(problem, assignment)
@@ -109,29 +126,40 @@ def potential_deltas(agg_row: Array, b_node: Array, source: Array,
     return dc0, dct0
 
 
-def apply_move(problem: PartitionProblem, agg: AggregateState, node: Array,
+def apply_move(problem: AnyProblem, agg: AggregateState, node: Array,
                source: Array, dest: Array, do_move: Array,
                total_weight: Array) -> AggregateState:
-    """Apply one (gated) unilateral move: O(N) rank-1 aggregate update,
+    """Apply one (gated) unilateral move: rank-1 aggregate update,
     O(1) load delta, O(K) potential deltas via the exact identities.
 
-    The rank-1 update is expressed as a dense outer product against the
-    ``±1`` one-hot column delta rather than a two-column scatter: the
-    values are bitwise identical (the untouched columns add an exact
-    ``+0.0``, and an accepted move always has ``source != dest`` — an
-    own-column argmin yields non-positive net dissatisfaction, and
+    Dense path — the rank-1 update is expressed as a dense outer product
+    against the ``±1`` one-hot column delta rather than a two-column
+    scatter: the values are bitwise identical (the untouched columns add
+    an exact ``+0.0``, and an accepted move always has ``source != dest``
+    — an own-column argmin yields non-positive net dissatisfaction, and
     rejected turns are discarded by the ``do_move`` select), while the
     dense form vectorizes under ``jax.vmap`` where a batched two-column
-    scatter serializes (DESIGN.md §12.2)."""
-    col = problem.adjacency[node]           # symmetric: row l == column l
+    scatter serializes (DESIGN.md §12.2).
+
+    Sparse path (DESIGN.md §13.2) — only the moved node's ``max_degree``
+    incident-edge window is scattered into the two affected columns:
+    O(deg) work and the O(N^2) adjacency never exists.  Masked window
+    slots carry weight 0 and add an exact ``±0.0``.
+    """
     b_node = problem.node_weights[node]
     dc0, dct0 = potential_deltas(agg.aggregate[node], b_node, source, dest,
                                  agg.loads, problem.speeds, problem.mu,
                                  total_weight)
     kidx = jnp.arange(agg.loads.shape[0])
-    col_delta = (kidx == dest).astype(col.dtype) \
-        - (kidx == source).astype(col.dtype)
-    new_aggregate = agg.aggregate + col[:, None] * col_delta[None, :]
+    dt = agg.aggregate.dtype
+    col_delta = (kidx == dest).astype(dt) - (kidx == source).astype(dt)
+    if isinstance(problem, SparseProblem):
+        nbrs, w = node_incident_edges(problem, node)
+        new_aggregate = agg.aggregate.at[nbrs].add(
+            w[:, None] * col_delta[None, :])
+    else:
+        col = problem.adjacency[node]       # symmetric: row l == column l
+        new_aggregate = agg.aggregate + col[:, None] * col_delta[None, :]
     new_assignment = agg.assignment.at[node].set(dest)
     new_loads = agg.loads.at[source].add(-b_node).at[dest].add(b_node)
     return AggregateState(
@@ -160,22 +188,12 @@ def cut_from_aggregate(aggregate: Array, assignment: Array) -> Array:
     return 0.5 * (jnp.sum(degree) - jnp.sum(internal))
 
 
-def potentials_closed_form(loads: Array, sq_loads: Array, cut: Array,
-                           speeds: Array, mu: Array,
-                           total_weight: Array) -> tuple[Array, Array]:
-    """(C_0, Ct_0) as O(K) closed forms of machine-level sums.
-
-    C_0 = sum_k (L_k^2 - S_k)/w_k + mu * cut, with S_k = sum_{i on k} b_i^2
-    (from summing Eq. 1 over i); Ct_0 = sum_k (L_k/w_k - B)^2 + mu/2 * cut
-    (Eq. 8).  Used where the exact-potential identities do not apply —
-    §4.5 simultaneous sweeps are not unilateral moves.
-    """
-    c0 = jnp.sum((loads * loads - sq_loads) / speeds) + mu * cut
-    ct0 = jnp.sum((loads / speeds - total_weight) ** 2) + 0.5 * mu * cut
-    return c0, ct0
+# canonical home moved to costs.py so the sparse global potentials can
+# share it without an import cycle; re-exported here for the §10 API
+potentials_closed_form = costs.potentials_closed_form
 
 
-def apply_sweep(problem: PartitionProblem, agg: AggregateState, picks: Array,
+def apply_sweep(problem: AnyProblem, agg: AggregateState, picks: Array,
                 dests: Array, will_move: Array,
                 total_weight: Array) -> AggregateState:
     """Apply a §4.5 sweep: machine m moves node picks[m] (owned by m) to
@@ -184,14 +202,26 @@ def apply_sweep(problem: PartitionProblem, agg: AggregateState, picks: Array,
 
     ``picks`` entries of idle machines may be garbage (argmax fallback);
     their columns are zeroed by the mask so they contribute exactly 0.
+    Sparse problems scatter the K moved nodes' incident-edge windows
+    (O(K·max_degree)) instead of the K dense adjacency columns.
     """
     k = problem.num_machines
     b = problem.node_weights
-    mask = will_move.astype(problem.adjacency.dtype)          # (K,)
-    cols = problem.adjacency[:, picks] * mask[None, :]        # (N, K)
+    mask = will_move.astype(agg.aggregate.dtype)              # (K,)
     # sources are exactly 0..K-1 (machine m moves an m-owned node)
-    new_aggregate = agg.aggregate - cols
-    new_aggregate = new_aggregate.at[:, dests].add(cols)      # dups summed
+    if isinstance(problem, SparseProblem):
+        nbrs, ws = jax.vmap(lambda nd: node_incident_edges(problem, nd)
+                            )(picks)                          # (K, Dmax)
+        ws = ws * mask[:, None]
+        kidx = jnp.arange(k)
+        col_delta = (dests[:, None] == kidx[None, :]).astype(ws.dtype) \
+            - (kidx[None, :] == kidx[:, None]).astype(ws.dtype)   # (K, K)
+        new_aggregate = agg.aggregate.at[nbrs].add(
+            ws[:, :, None] * col_delta[:, None, :])           # dups summed
+    else:
+        cols = problem.adjacency[:, picks] * mask[None, :]    # (N, K)
+        new_aggregate = agg.aggregate - cols
+        new_aggregate = new_aggregate.at[:, dests].add(cols)  # dups summed
     safe_picks = jnp.where(will_move, picks, jnp.int32(problem.num_nodes))
     new_assignment = agg.assignment.at[safe_picks].set(dests, mode="drop")
     new_loads = machine_loads(b, new_assignment, k)
@@ -208,7 +238,7 @@ def apply_sweep(problem: PartitionProblem, agg: AggregateState, picks: Array,
 # verify_every cross-check
 # ---------------------------------------------------------------------------
 
-def resync(problem: PartitionProblem, agg: AggregateState
+def resync(problem: AnyProblem, agg: AggregateState
            ) -> tuple[AggregateState, Array]:
     """Rebuild the carry from scratch, returning (fresh state, observed
     drift) — drift being the max absolute deviation of any carried
@@ -223,6 +253,6 @@ def resync(problem: PartitionProblem, agg: AggregateState
     return fresh, observed
 
 
-def drift(problem: PartitionProblem, agg: AggregateState) -> Array:
+def drift(problem: AnyProblem, agg: AggregateState) -> Array:
     """Max absolute deviation of the carried state from a rebuild."""
     return resync(problem, agg)[1]

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from . import costs
 from .problem import PartitionProblem
 from .refine import DEFAULT_TOL, refine, refine_simultaneous, refine_traced
+from .sparse import SparseProblem
 
 Array = jax.Array
 
@@ -71,19 +72,35 @@ def batch_size(tree) -> int:
     return jax.tree.leaves(tree)[0].shape[0]
 
 
+def problem_shape_key(problem) -> tuple:
+    """The static shape signature a problem must share to stack/vmap.
+
+    Dense problems stack by (N, K); sparse ones additionally by their
+    padded edge count and static ``max_degree`` (DESIGN.md §13.4) — the
+    edge arrays are leaves, so one compiled program needs one padded E,
+    and ``max_degree`` is jit-static aux data."""
+    key: tuple = (type(problem).__name__, problem.num_nodes,
+                  problem.num_machines)
+    if isinstance(problem, SparseProblem):
+        key += (problem.num_edges, problem.max_degree)
+    return key
+
+
 def stack_problems(problems: Sequence[PartitionProblem]) -> PartitionProblem:
     """Stack ``B`` problems (same N, same K) into one batched problem.
 
-    Adjacency, node weights, speeds and mu may all differ per element;
-    the *shapes* must agree because one compiled program serves the whole
-    stack (mixed sizes belong in separate stacks — ``repro.sweeps``
-    groups by shape automatically)."""
+    Adjacency (or edge list), node weights, speeds and mu may all differ
+    per element; the *shapes* (and for :class:`SparseProblem`, padded
+    edge count + ``max_degree``) must agree because one compiled program
+    serves the whole stack (mixed sizes belong in separate stacks —
+    ``repro.sweeps`` groups by shape automatically)."""
     problems = list(problems)
-    shapes = {(p.num_nodes, p.num_machines) for p in problems}
+    shapes = {problem_shape_key(p) for p in problems}
     if len(shapes) != 1:
         raise ValueError(
-            f"stack_problems needs one (N, K) shape, got {sorted(shapes)}; "
-            "group differently-shaped problems into separate stacks")
+            f"stack_problems needs one shape signature, got "
+            f"{sorted(shapes)}; group differently-shaped problems into "
+            "separate stacks")
     return stack_pytrees(problems)
 
 

@@ -26,6 +26,15 @@ The refinement engines avoid even that matmul after the first turn:
 ``repro.core.aggregate`` carries A through the loop and applies a rank-1
 column update per move (DESIGN.md §10); :func:`cost_matrix_from_aggregate`
 is the shared O(N*K) assembly both paths delegate to.
+
+Sparse problems (DESIGN.md §13): every public entry point taking a
+``problem`` also accepts a :class:`~repro.core.sparse.SparseProblem` —
+the aggregate becomes an O(E*K) ``segment_sum`` over the edge list
+(:func:`adjacency_aggregate_sparse`), the cut an O(E) edge sum
+(:func:`total_cut_sparse`), and both global potentials the O(K) closed
+forms of :func:`potentials_closed_form`, so nothing on the sparse path
+ever touches an O(N^2) array.  Dispatch happens at trace time via
+``isinstance`` — the dense op sequence is untouched.
 """
 from __future__ import annotations
 
@@ -35,8 +44,11 @@ import jax
 import jax.numpy as jnp
 
 from .problem import PartitionProblem, PartitionState, machine_loads
+from .sparse import SparseProblem
 
 Array = jax.Array
+
+AnyProblem = PartitionProblem | SparseProblem
 
 C_FRAMEWORK = "c"     # Eq. 1
 CT_FRAMEWORK = "ct"   # Eq. 6
@@ -47,6 +59,28 @@ def adjacency_aggregate(adjacency: Array, assignment: Array, num_machines: int) 
     """A[i, k] = sum_j c_ij * 1[r_j = k]; computed as C @ one_hot(r)."""
     onehot = jax.nn.one_hot(assignment, num_machines, dtype=adjacency.dtype)
     return adjacency @ onehot
+
+
+def adjacency_aggregate_sparse(sp: SparseProblem, assignment: Array) -> Array:
+    """The same (N, K) aggregate from the edge list: an O(E*K)
+    ``segment_sum`` of per-edge one-hots over the sender-sorted slabs
+    (DESIGN.md §13.2).  Padded edges carry weight 0 and contribute an
+    exact +0.0; per-row summation order is receiver-ascending, matching
+    the dense matmul's j-ascending accumulation up to reassociation.
+    """
+    onehot = jax.nn.one_hot(assignment[sp.receivers], sp.num_machines,
+                            dtype=sp.edge_weights.dtype)
+    return jax.ops.segment_sum(sp.edge_weights[:, None] * onehot,
+                               sp.senders, num_segments=sp.num_nodes,
+                               indices_are_sorted=True)
+
+
+def problem_aggregate(problem: AnyProblem, assignment: Array,
+                      num_machines: int) -> Array:
+    """Build the (N, K) aggregate for either problem representation."""
+    if isinstance(problem, SparseProblem):
+        return adjacency_aggregate_sparse(problem, assignment)
+    return adjacency_aggregate(problem.adjacency, assignment, num_machines)
 
 
 def cut_matrix(adjacency: Array, assignment: Array, num_machines: int,
@@ -99,7 +133,7 @@ def cost_matrix_from_aggregate(aggregate: Array, row_assignment: Array,
     raise ValueError(f"unknown framework {framework!r}")
 
 
-def cost_matrix(problem: PartitionProblem, state: PartitionState,
+def cost_matrix(problem: AnyProblem, state: PartitionState,
                 framework: str = C_FRAMEWORK,
                 aggregate: Array | None = None) -> Array:
     """(N, K) matrix of node costs: entry [i, k] = cost of node i if on machine k.
@@ -110,14 +144,14 @@ def cost_matrix(problem: PartitionProblem, state: PartitionState,
     """
     K = problem.num_machines
     if aggregate is None:
-        aggregate = adjacency_aggregate(problem.adjacency, state.assignment, K)
+        aggregate = problem_aggregate(problem, state.assignment, K)
     return cost_matrix_from_aggregate(
         aggregate, state.assignment, problem.node_weights, state.loads,
         problem.speeds, problem.mu, framework,
         total_weight=jnp.sum(problem.node_weights))
 
 
-def node_costs(problem: PartitionProblem, state: PartitionState,
+def node_costs(problem: AnyProblem, state: PartitionState,
                framework: str = C_FRAMEWORK) -> Array:
     """(N,) current cost of every node under its current assignment."""
     cm = cost_matrix(problem, state, framework)
@@ -147,7 +181,7 @@ def dissatisfaction_from_cost(cost: Array, row_assignment: Array,
     return dissat, best_machine
 
 
-def dissatisfaction(problem: PartitionProblem, state: PartitionState,
+def dissatisfaction(problem: AnyProblem, state: PartitionState,
                     framework: str = C_FRAMEWORK,
                     cost: Array | None = None,
                     theta: Array | None = None):
@@ -172,24 +206,73 @@ def total_cut(adjacency: Array, assignment: Array) -> Array:
     return 0.5 * jnp.sum(adjacency * diff)
 
 
-def global_cost_c0(problem: PartitionProblem, assignment: Array) -> Array:
-    """C_0(r) = sum_i C_i(r)  (Thm. 3.1 potential, social welfare)."""
+def total_cut_sparse(sp: SparseProblem, assignment: Array) -> Array:
+    """Unordered cut from the edge list — O(E), no O(N^2) mask matrix.
+
+    Each undirected edge appears in both directions, so summing the
+    directed crossings and halving reproduces the unordered convention;
+    padded edges (weight 0) contribute exactly 0.
+    """
+    crossing = assignment[sp.senders] != assignment[sp.receivers]
+    return 0.5 * jnp.sum(jnp.where(crossing, sp.edge_weights,
+                                   jnp.zeros((), sp.edge_weights.dtype)))
+
+
+def problem_cut(problem: AnyProblem, assignment: Array) -> Array:
+    """Unordered cut for either problem representation."""
+    if isinstance(problem, SparseProblem):
+        return total_cut_sparse(problem, assignment)
+    return total_cut(problem.adjacency, assignment)
+
+
+def potentials_closed_form(loads: Array, sq_loads: Array, cut: Array,
+                           speeds: Array, mu: Array,
+                           total_weight: Array) -> tuple[Array, Array]:
+    """(C_0, Ct_0) as O(K) closed forms of machine-level sums.
+
+    C_0 = sum_k (L_k^2 - S_k)/w_k + mu * cut, with S_k = sum_{i on k}
+    b_i^2 (from summing Eq. 1 over i); Ct_0 = sum_k (L_k/w_k - B)^2 +
+    mu/2 * cut (Eq. 8).  Used by the §4.5 sweep mode (simultaneous moves
+    are not unilateral, so the exact-potential identities do not apply —
+    DESIGN.md §10) and by the sparse path's global potentials, where the
+    per-node Eq.-1 sum would need the O(N, K) cost matrix for a scalar.
+    """
+    c0 = jnp.sum((loads * loads - sq_loads) / speeds) + mu * cut
+    ct0 = jnp.sum((loads / speeds - total_weight) ** 2) + 0.5 * mu * cut
+    return c0, ct0
+
+
+def global_cost_c0(problem: AnyProblem, assignment: Array) -> Array:
+    """C_0(r) = sum_i C_i(r)  (Thm. 3.1 potential, social welfare).
+
+    Sparse problems evaluate the O(K) closed form over (loads, sq_loads,
+    cut) instead of summing N node costs — same value up to f32
+    reassociation (within the ≤1e-3 budget of DESIGN.md §13.3).
+    """
+    b = problem.node_weights
+    if isinstance(problem, SparseProblem):
+        k = problem.num_machines
+        loads = machine_loads(b, assignment, k)
+        sq_loads = machine_loads(b * b, assignment, k)
+        cut = total_cut_sparse(problem, assignment)
+        return potentials_closed_form(loads, sq_loads, cut, problem.speeds,
+                                      problem.mu, jnp.sum(b))[0]
     state = PartitionState(assignment,
-                           machine_loads(problem.node_weights, assignment,
+                           machine_loads(b, assignment,
                                          problem.num_machines))
     return jnp.sum(node_costs(problem, state, C_FRAMEWORK))
 
 
-def global_cost_ct0(problem: PartitionProblem, assignment: Array) -> Array:
+def global_cost_ct0(problem: AnyProblem, assignment: Array) -> Array:
     """Ct_0(r) = sum_k (L_k / w_k - B)^2 + (mu/2) cut(r)  (Eq. 8, see note)."""
     b = problem.node_weights
     loads = machine_loads(b, assignment, problem.num_machines)
     total = jnp.sum(b)
     variance = jnp.sum((loads / problem.speeds - total) ** 2)
-    return variance + 0.5 * problem.mu * total_cut(problem.adjacency, assignment)
+    return variance + 0.5 * problem.mu * problem_cut(problem, assignment)
 
 
-def global_cost(problem: PartitionProblem, assignment: Array, framework: str) -> Array:
+def global_cost(problem: AnyProblem, assignment: Array, framework: str) -> Array:
     if framework == C_FRAMEWORK:
         return global_cost_c0(problem, assignment)
     if framework == CT_FRAMEWORK:
@@ -197,7 +280,7 @@ def global_cost(problem: PartitionProblem, assignment: Array, framework: str) ->
     raise ValueError(f"unknown framework {framework!r}")
 
 
-def load_imbalance(problem: PartitionProblem, assignment: Array) -> Array:
+def load_imbalance(problem: AnyProblem, assignment: Array) -> Array:
     """max_k L_k/w_k divided by B — 1.0 means perfectly balanced."""
     loads = machine_loads(problem.node_weights, assignment, problem.num_machines)
     total = jnp.sum(problem.node_weights)

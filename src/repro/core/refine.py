@@ -34,6 +34,16 @@ machine per sweep, descent not guaranteed — measured in benchmarks), which
 applies a rank-K aggregate update per sweep and re-derives both potentials
 via the O(K) closed forms of :mod:`repro.core.aggregate`.
 
+Sparse problems (DESIGN.md §13): all three entry points accept a
+:class:`~repro.core.sparse.SparseProblem` in place of the dense
+``PartitionProblem`` — the per-turn math is unchanged (costs still
+assemble from the carried (N, K) aggregate via the one shared formula),
+but the aggregate is initialized by a ``segment_sum`` over the edge
+list, a move scatters only the moved node's O(deg) incident-edge
+window, and the traced potentials use the O(K) closed forms — so
+nothing in the loop touches an O(N^2) array and N=10^5-10^6 graphs
+refine on hardware where the dense adjacency cannot exist.
+
 Migration-aware hysteresis (DESIGN.md §11): every entry point takes a
 per-node threshold ``theta`` (scalar or (N,), the node's migration price).
 A node is movable only when its Eq.-4 dissatisfaction EXCEEDS ``theta_i``;

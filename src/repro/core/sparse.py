@@ -1,0 +1,219 @@
+"""Sparse edge-list problem representation (DESIGN.md §13).
+
+The dense ``PartitionProblem`` carries an (N, N) adjacency — an O(N^2)
+memory/compute floor that caps the benchmarks at N=4096 even though the
+paper's §5.1 topologies have 3–6 edges per node.  ``SparseProblem`` is
+the first-class sparse sibling: a **padded, sender-sorted COO/CSR edge
+list** (every undirected edge stored in both directions) that the whole
+refinement stack — costs, aggregates, the three refinement entry points,
+the Pallas edge-block kernel and the batched sweep runtime — consumes
+directly, so an N=10^5–10^6 topology never materializes an O(N^2) array.
+
+Layout (DESIGN.md §13.1):
+
+  * ``senders`` / ``receivers`` / ``edge_weights`` — (E,) arrays of the
+    DIRECTED edge list: each undirected edge {i, j} appears as (i, j)
+    and (j, i) with the same weight, rows sorted by sender (receivers
+    ascending within a sender), so node i's incident edges occupy the
+    contiguous slab ``[row_start[i], row_start[i] + degree_i)``.
+  * **Padding** — E is rounded up (default: multiple of 128) with slots
+    ``sender = N-1, receiver = 0, weight = 0.0``: sortedness is kept,
+    every index stays in-bounds, and a zero-weight edge contributes an
+    exact ``+0.0`` to every sum it touches, so padded and unpadded
+    problems produce identical numbers.
+  * ``row_start`` — (N,) first edge index per node (CSR offsets).
+  * ``max_degree`` — static upper bound on any node's degree (rounded
+    up, default multiple of 8).  A move touches only the moved node's
+    incident edges, fetched as one ``max_degree``-sized dynamic slice —
+    O(deg) instead of the dense path's O(N) adjacency row.
+
+Everything downstream keys off ``isinstance(problem, SparseProblem)``
+at trace time: aggregates become ``segment_sum`` over edges, the cut
+and both global potentials become O(E)/O(K) edge/closed-form sums, and
+``repro.core.aggregate.apply_move`` scatters into the carried (N, K)
+aggregate along the incident-edge slab.  The (N, K) aggregate itself is
+kept dense — it is the paper's own O(NK) machine-facing state, not part
+of the O(N^2) problem.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .problem import PartitionProblem, make_problem
+
+Array = jax.Array
+
+EDGE_PAD_MULTIPLE = 128     # padded E is a multiple of this (lane width)
+DEGREE_PAD_MULTIPLE = 8     # static max_degree rounds up to this
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseProblem:
+    """Sparse partition-game problem: padded sender-sorted edge list.
+
+    Same game as :class:`~repro.core.problem.PartitionProblem` (node
+    weights ``b_i``, machine speeds ``w_k``, cut weight ``mu``), with the
+    graph as edges instead of an (N, N) matrix.  ``max_degree`` is
+    static metadata (part of the jit trace signature — problems sharing
+    it stack and vmap together, see :mod:`repro.sweeps`).
+    """
+    senders: Array        # (E,) int32, sorted ascending; padding = N-1
+    receivers: Array      # (E,) int32; padding = 0
+    edge_weights: Array   # (E,) float; padding = 0.0
+    row_start: Array      # (N,) int32 CSR offsets into the edge arrays
+    node_weights: Array   # (N,) float
+    speeds: Array         # (K,) float, sums to 1
+    mu: Array             # scalar float
+    max_degree: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_nodes(self) -> int:
+        return self.node_weights.shape[0]
+
+    @property
+    def num_machines(self) -> int:
+        return self.speeds.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        """PADDED directed edge count (2x undirected + padding)."""
+        return self.senders.shape[0]
+
+    def validate(self) -> None:
+        n, e = self.num_nodes, self.num_edges
+        assert self.senders.shape == (e,), self.senders.shape
+        assert self.receivers.shape == (e,), self.receivers.shape
+        assert self.edge_weights.shape == (e,), self.edge_weights.shape
+        assert self.row_start.shape == (n,), self.row_start.shape
+        assert self.speeds.ndim == 1
+        assert self.max_degree >= 1
+        assert e >= self.max_degree, (e, self.max_degree)
+
+
+def _round_up(x: int, multiple: int) -> int:
+    return -(-max(x, 1) // multiple) * multiple
+
+
+def make_sparse_problem(senders, receivers, edge_weights, node_weights,
+                        speeds, mu: float = 8.0, *,
+                        normalize_speeds: bool = True, dtype=jnp.float32,
+                        pad_edges_multiple: int = EDGE_PAD_MULTIPLE,
+                        pad_degree_multiple: int = DEGREE_PAD_MULTIPLE,
+                        ) -> SparseProblem:
+    """Build a :class:`SparseProblem` from an UNDIRECTED edge list.
+
+    ``senders``/``receivers``/``edge_weights`` list each undirected edge
+    once (either orientation); self-loops are dropped and duplicate
+    {i, j} entries have their weights summed (host-side numpy — graphs
+    are data, mirroring :mod:`repro.graphs.generators`).  Both directed
+    orientations are emitted, sorted by (sender, receiver), padded per
+    the DESIGN.md §13.1 rules above.
+    """
+    s = np.asarray(senders, np.int64).ravel()
+    r = np.asarray(receivers, np.int64).ravel()
+    w = np.asarray(edge_weights, np.float64).ravel()
+    if not (s.shape == r.shape == w.shape):
+        raise ValueError(f"edge arrays disagree: {s.shape}, {r.shape}, "
+                         f"{w.shape}")
+    node_weights = np.asarray(node_weights, np.float64).ravel()
+    n = node_weights.shape[0]
+    if s.size and (s.min() < 0 or r.min() < 0 or max(s.max(), r.max()) >= n):
+        raise ValueError("edge endpoints out of range")
+
+    keep = s != r                                    # no self loops
+    a = np.minimum(s[keep], r[keep])
+    b = np.maximum(s[keep], r[keep])
+    w = w[keep]
+    # canonicalize + sum duplicate undirected edges
+    code = a * n + b
+    order = np.argsort(code, kind="stable")
+    code, w = code[order], w[order]
+    uniq, first = np.unique(code, return_index=True)
+    w = np.add.reduceat(w, first) if w.size else w
+    a, b = uniq // n, uniq % n
+
+    # both directions, sorted by (sender, receiver)
+    ds = np.concatenate([a, b])
+    dr = np.concatenate([b, a])
+    dw = np.concatenate([w, w])
+    order = np.lexsort((dr, ds))
+    ds, dr, dw = ds[order], dr[order], dw[order]
+
+    degree = np.bincount(ds, minlength=n)
+    max_degree = _round_up(int(degree.max(initial=1)), pad_degree_multiple)
+    e_pad = _round_up(max(ds.size, max_degree), pad_edges_multiple)
+    row_start = np.zeros(n, np.int64)
+    row_start[1:] = np.cumsum(degree)[:-1]
+
+    pad = e_pad - ds.size
+    ds = np.concatenate([ds, np.full(pad, n - 1)])
+    dr = np.concatenate([dr, np.zeros(pad, np.int64)])
+    dw = np.concatenate([dw, np.zeros(pad)])
+
+    speeds = jnp.asarray(np.asarray(speeds, np.float64), dtype)
+    if normalize_speeds:
+        speeds = speeds / jnp.sum(speeds)
+    prob = SparseProblem(
+        senders=jnp.asarray(ds, jnp.int32),
+        receivers=jnp.asarray(dr, jnp.int32),
+        edge_weights=jnp.asarray(dw, dtype),
+        row_start=jnp.asarray(row_start, jnp.int32),
+        node_weights=jnp.asarray(node_weights, dtype),
+        speeds=speeds,
+        mu=jnp.asarray(mu, dtype),
+        max_degree=max_degree,
+    )
+    prob.validate()
+    return prob
+
+
+def sparse_from_dense(problem: PartitionProblem, **kwargs) -> SparseProblem:
+    """Convert a dense problem to its sparse edge-list twin.
+
+    The dense adjacency is already symmetric with zero diagonal
+    (``make_problem`` enforces it), so the upper triangle enumerates
+    each undirected edge exactly once with its final weight.
+    """
+    adj = np.asarray(problem.adjacency)
+    iu, ju = np.nonzero(np.triu(adj, k=1))
+    return make_sparse_problem(
+        iu, ju, adj[iu, ju], np.asarray(problem.node_weights),
+        np.asarray(problem.speeds), np.asarray(problem.mu),
+        normalize_speeds=False, dtype=problem.adjacency.dtype, **kwargs)
+
+
+def dense_from_sparse(sp: SparseProblem) -> PartitionProblem:
+    """Materialize the (N, N) adjacency — small-N tests/oracles only."""
+    n = sp.num_nodes
+    adj = np.zeros((n, n), np.asarray(sp.edge_weights).dtype)
+    s = np.asarray(sp.senders)
+    r = np.asarray(sp.receivers)
+    w = np.asarray(sp.edge_weights)
+    np.add.at(adj, (s, r), w)          # padding adds 0.0 at (N-1, 0)
+    return make_problem(adj, np.asarray(sp.node_weights),
+                        np.asarray(sp.speeds), np.asarray(sp.mu),
+                        normalize_speeds=False)
+
+
+def node_incident_edges(sp: SparseProblem, node: Array
+                        ) -> tuple[Array, Array]:
+    """(neighbors, weights) of one node as a ``max_degree`` window — the
+    O(deg) replacement for the dense path's O(N) adjacency row.
+
+    One dynamic slice at ``row_start[node]``; slots whose sender is not
+    ``node`` (tail padding, or spill-over when the slice clamps at the
+    array end) are masked to weight 0, which contributes an exact
+    ``+0.0`` wherever the window is scattered (DESIGN.md §13.2).
+    """
+    start = sp.row_start[node]
+    d = sp.max_degree
+    s = jax.lax.dynamic_slice_in_dim(sp.senders, start, d)
+    r = jax.lax.dynamic_slice_in_dim(sp.receivers, start, d)
+    w = jax.lax.dynamic_slice_in_dim(sp.edge_weights, start, d)
+    return r, jnp.where(s == node, w, jnp.zeros((), w.dtype))

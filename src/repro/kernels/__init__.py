@@ -2,6 +2,8 @@
 
   * dissatisfaction.py  — fused adjacency-aggregation + cost-matrix kernel
     for the partition game's refinement loop (the paper's §4.5 hot spot).
+  * edge_block.py       — fused edge-list → dissatisfaction kernel for the
+    sparse runtime (DESIGN.md §13.3): O(E) traffic, no dense adjacency.
   * flash_attention.py  — blocked causal GQA attention forward (online
     softmax, causal block-skip) for train/prefill.
   * decode_attention.py — flash-decoding GQA attention for serve_step.
@@ -17,6 +19,8 @@ from .ops import (  # noqa: F401
     cost_matrix,
     decode_attention,
     flash_attention,
+    make_aggregate_dissat_fn,
     make_core_cost_matrix_fn,
+    make_edge_dissat_fn,
     ssd_scan,
 )

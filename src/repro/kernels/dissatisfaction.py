@@ -192,20 +192,23 @@ def cost_matrix_pallas(adjacency: Array, assignment: Array, node_weights: Array,
 # incremental path: (dissat, best) straight from the carried aggregate
 # ---------------------------------------------------------------------------
 
-def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
-                   loads_ref, speeds_ref, scalars_ref, dissat_ref, best_ref,
-                   *, framework: str, k_real: int):
-    kpad = loads_ref.shape[-1]
-    tn = agg_ref.shape[0]
-    aggregate = agg_ref[...].astype(jnp.float32)               # (TN, K)
-    mu = scalars_ref[0, 0]
-    total_b = scalars_ref[0, 1]
-    b = b_rows_ref[0, :].astype(jnp.float32)[:, None]          # (TN, 1)
-    r_rows = r_rows_ref[0, :]                                  # (TN,)
+def reduce_dissat_tile(aggregate, r_rows, b_rows, theta_rows, loads_row,
+                       speeds_row, mu, total_b, *, framework: str,
+                       k_real: int):
+    """THE fused cost-assembly + Eq.-4 reduction over one (TN, K) tile,
+    shared (same ops, same order — the bitwise contract) by every kernel
+    that ends in a dissatisfaction reduction: the aggregate kernels here
+    and the edge-block kernel of :mod:`repro.kernels.edge_block`.
+
+    Returns ``(dissat (TN,), best (TN,))``: net-of-theta dissatisfaction
+    (DESIGN.md §11) and the lowest-index arg-best machine (§7).
+    """
+    tn, kpad = aggregate.shape
+    b = b_rows.astype(jnp.float32)[:, None]                    # (TN, 1)
     kidx = jax.lax.broadcasted_iota(jnp.int32, (tn, kpad), 1)
     own = (r_rows[:, None] == kidx).astype(jnp.float32)
-    loads = loads_ref[0, :][None, :]                           # (1, K)
-    inv_w = 1.0 / speeds_ref[0, :][None, :]
+    loads = loads_row[None, :]                                 # (1, K)
+    inv_w = 1.0 / speeds_row[None, :]
     degree = jnp.sum(aggregate, axis=-1, keepdims=True)
     others = loads - b * own
     cut_term = 0.5 * mu * (degree - aggregate)
@@ -223,8 +226,46 @@ def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
                        axis=1).astype(jnp.int32)
     current = jnp.sum(jnp.where(own > 0, cost, 0.0), axis=1)
     # net-of-migration-price Eq. 4 (DESIGN.md §11); theta rows default to 0
-    dissat_ref[0, :] = current - best_val - theta_rows_ref[0, :]
-    best_ref[0, :] = best_idx
+    return current - best_val - theta_rows, best_idx
+
+
+def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
+                   loads_ref, speeds_ref, scalars_ref, dissat_ref, best_ref,
+                   *, framework: str, k_real: int):
+    dissat, best = reduce_dissat_tile(
+        agg_ref[...].astype(jnp.float32), r_rows_ref[0, :],
+        b_rows_ref[0, :], theta_rows_ref[0, :], loads_ref[0, :],
+        speeds_ref[0, :], scalars_ref[0, 0], scalars_ref[0, 1],
+        framework=framework, k_real=k_real)
+    dissat_ref[0, :] = dissat
+    best_ref[0, :] = best
+
+
+def pad_dissat_operands(row_assignment, node_weights, theta, loads, speeds,
+                        mu, total_weight, n_rows: int, rows_pad: int,
+                        k: int, k_pad: int):
+    """Shared operand padding for every dissatisfaction wrapper (the
+    aggregate kernels here and :mod:`repro.kernels.edge_block`) — the
+    conventions are load-bearing and must never desync: padded rows
+    point at padded machine ``k_pad - 1`` with zero weight/theta (their
+    outputs are sliced off), padded speeds are 1.0 (no div-by-zero),
+    ``theta=None`` rides an exact zero operand.  Returns
+    ``(r_rows, b, theta, loads, speeds, scalars)`` in kernel layout."""
+    r_rows = jnp.full((1, rows_pad), k_pad - 1, jnp.int32).at[0, :n_rows].set(
+        jnp.asarray(row_assignment, jnp.int32))
+    b = jnp.zeros((1, rows_pad), jnp.float32).at[0, :n_rows].set(
+        node_weights.astype(jnp.float32))
+    t = jnp.zeros((1, rows_pad), jnp.float32)
+    if theta is not None:
+        t = t.at[0, :n_rows].set(
+            jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (n_rows,)))
+    l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
+        loads.astype(jnp.float32))
+    w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
+        speeds.astype(jnp.float32))
+    scalars = jnp.stack([jnp.asarray(mu, jnp.float32),
+                         jnp.asarray(total_weight, jnp.float32)])[None, :]
+    return r_rows, b, t, l_pad, w_pad, scalars
 
 
 def dissatisfaction_from_aggregate_pallas(
@@ -261,22 +302,9 @@ def dissatisfaction_from_aggregate_pallas(
 
     a = jnp.zeros((rows_pad, k_pad), jnp.float32)
     a = a.at[:n_rows, :k].set(aggregate.astype(jnp.float32))
-    # padded rows point at a padded machine with zero weight; their outputs
-    # are sliced off below
-    r_rows = jnp.full((1, rows_pad), k_pad - 1, jnp.int32).at[0, :n_rows].set(
-        jnp.asarray(row_assignment, jnp.int32))
-    b = jnp.zeros((1, rows_pad), jnp.float32).at[0, :n_rows].set(
-        node_weights.astype(jnp.float32))
-    t = jnp.zeros((1, rows_pad), jnp.float32)
-    if theta is not None:
-        t = t.at[0, :n_rows].set(
-            jnp.broadcast_to(jnp.asarray(theta, jnp.float32), (n_rows,)))
-    l_pad = jnp.zeros((1, k_pad), jnp.float32).at[0, :k].set(
-        loads.astype(jnp.float32))
-    w_pad = jnp.ones((1, k_pad), jnp.float32).at[0, :k].set(
-        speeds.astype(jnp.float32))
-    scalars = jnp.stack([jnp.asarray(mu, jnp.float32),
-                         jnp.asarray(total_weight, jnp.float32)])[None, :]
+    r_rows, b, t, l_pad, w_pad, scalars = pad_dissat_operands(
+        row_assignment, node_weights, theta, loads, speeds, mu,
+        total_weight, n_rows, rows_pad, k, k_pad)
 
     num_i = rows_pad // tile_n
     dissat, best = pl.pallas_call(

@@ -114,6 +114,32 @@ def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
         theta)
 
 
+def make_edge_dissat_fn(problem, interpret: bool | None = None):
+    """The ``dissat_fn`` convention (see :mod:`repro.core.refine`) on the
+    fused Pallas EDGE-BLOCK kernel (DESIGN.md §13.3): the per-turn
+    reduction is recomputed straight from ``problem``'s edge list — the
+    carried ``aggregate`` argument is ignored, making this the
+    drift-free sparse oracle (nothing accumulates across turns), at
+    O(E·K) kernel work per turn instead of the aggregate kernel's
+    O(N·K) read.  ``problem`` is a concrete
+    :class:`~repro.core.sparse.SparseProblem`; its edge-tile layout is
+    built host-side once here and closed over.  Plugs into
+    ``repro.core.refine(..., dissat_fn=...)`` like any other; unbatched
+    only (the batched sweep runtime keeps the aggregate kernel).
+    """
+    from .edge_block import (build_edge_tile_layout,
+                             dissatisfaction_from_edges_pallas)
+    layout = build_edge_tile_layout(problem)
+
+    def fn(aggregate, assignment, node_weights, loads, speeds, mu,
+           framework, total_weight, theta=None):
+        del aggregate   # recomputed from edges — see docstring
+        return dissatisfaction_from_edges_pallas(
+            layout, assignment, node_weights, loads, speeds, mu, framework,
+            theta=theta, total_weight=total_weight, interpret=interpret)
+    return fn
+
+
 def make_aggregate_dissat_fn(interpret: bool | None = None):
     """Adapter implementing THE ``dissat_fn`` calling convention — see the
     canonical 9-argument spec in :mod:`repro.core.refine` ("The

@@ -11,7 +11,7 @@ For each cell this proves, without hardware:
   * the sharding rules are coherent (SPMD partitioning succeeds),
   * the per-device memory fits (memory_analysis),
   * and it extracts the roofline terms (cost_analysis + HLO collective
-    parsing) consumed by EXPERIMENTS.md §Roofline.
+    parsing) consumed by ``benchmarks.roofline``.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k

@@ -64,7 +64,7 @@ def _causal_core(q: Array, k: Array, v: Array, cfg: ModelConfig,
                  q_chunks: int | None = None) -> Array:
     """Causal softmax attention.  q: (B,S,H,D), k/v: (B,S,Hkv,D) -> (B,S,H,D).
 
-    SEQUENCE-PARALLEL layout (EXPERIMENTS.md §Perf, hillclimb #1): q is
+    SEQUENCE-PARALLEL layout (rationale in ``repro/sharding/hints.py``): q is
     sharded over 'model' on its SEQUENCE dim — always divisible, unlike
     head counts (yi-34b: 56 heads vs a 16-wide axis) — and k/v replicate
     over 'model'.  Both einsum contractions are then over unsharded dims,

@@ -5,7 +5,7 @@ divisibility guards, and silently no-ops when no mesh is active — so model
 code stays runnable in plain CPU tests while the SPMD paths get explicit
 activation layouts.
 
-Why this exists (EXPERIMENTS.md §Perf, hillclimb #1): without constraints
+Why this exists: without constraints
 GSPMD must GUESS how to shard the (heads, head_dim) split of fused QKV
 projections.  When the head count does not divide the model axis (yi-34b:
 56 heads on a 16-wide axis) it shards head_dim — the attention CONTRACTION
@@ -55,7 +55,8 @@ def hint(x, *dims):
     Trailing unspecified dims replicate.
 
     Set REPRO_NO_HINTS=1 to disable all hints — used to reproduce the
-    paper-faithful/unannotated BASELINE measurements in EXPERIMENTS.md.
+    paper-faithful/unannotated BASELINE measurements
+    (``benchmarks/roofline.py``).
     """
     import os
     if os.environ.get("REPRO_NO_HINTS", "0") == "1":

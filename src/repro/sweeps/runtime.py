@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core import costs
-from ..core.batch import (refine_batched, refine_simultaneous_batched,
+from ..core.batch import (problem_shape_key, refine_batched,
+                          refine_simultaneous_batched,
                           refine_traced_batched, stack_problems,
                           unstack_pytree)
 from ..core.problem import PartitionProblem
@@ -95,8 +96,14 @@ def _kernel_dissat_fn():
 
 
 def _group_key(case: SweepCase):
-    return (case.framework, case.problem.num_nodes,
-            case.problem.num_machines, case.theta is None)
+    """Compile-time key: cases sharing it stack into one vmap program.
+
+    ``problem_shape_key`` covers representation + static dims — for
+    sparse problems that adds the padded edge count and ``max_degree``
+    (DESIGN.md §13.4), so sparse fleets stack and vmap exactly like
+    dense ones as long as their padded edge shapes line up."""
+    return (case.framework, case.theta is None,
+            problem_shape_key(case.problem))
 
 
 def _stack_group(cases: list[SweepCase]):
@@ -116,9 +123,11 @@ def _stack_group(cases: list[SweepCase]):
 def run_sweep(spec: SweepSpec) -> "SweepResult":
     """Execute a sweep: one compiled batched program per case group.
 
-    Groups are keyed on (framework, N, K, theta-present); everything
-    else — adjacency, weights, speeds, mu, theta values, initial
-    assignments — varies freely inside a group's single ``vmap``.
+    Groups are keyed on (framework, theta-present, problem shape key) —
+    the shape key being (representation, N, K) plus, for sparse
+    problems, (padded E, max_degree); everything else — adjacency or
+    edge list, weights, speeds, mu, theta values, initial assignments —
+    varies freely inside a group's single ``vmap``.
     Returns a :class:`SweepResult` with per-case results and traces in
     the order of ``spec.cases``.
     """

@@ -13,7 +13,7 @@ path: wrap the per-shard grad computation in ``shard_map`` over the data
 axes and call ``compressed_psum`` before the optimizer.  On the 2x16x16
 production mesh the 'pod'-axis hop is the slow inter-pod link — the one
 place the 4x payload reduction moves the collective roofline term
-(EXPERIMENTS.md §Perf).
+(see ``benchmarks/roofline.py`` / BENCH_roofline.json).
 """
 from __future__ import annotations
 

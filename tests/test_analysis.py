@@ -1,5 +1,5 @@
 """Roofline bookkeeping: the HLO collective parser and the jaxpr FLOP
-counter that feed EXPERIMENTS.md §Roofline."""
+counter that feed ``benchmarks.roofline``."""
 from __future__ import annotations
 
 import numpy as np

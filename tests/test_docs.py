@@ -1,10 +1,16 @@
-"""Docs-consistency gate: DESIGN.md section references must resolve.
+"""Docs-consistency gate: doc references from code must resolve.
 
-Docstrings across ``src/`` cite design sections as ``DESIGN.md §N`` /
-``DESIGN.md §N.M``; stale citations (a renumbered or removed section)
-rot silently.  This test extracts every such reference and checks it
-against the actual DESIGN.md headers, so CI fails the moment a docstring
-points at a section that no longer exists.
+Two failure modes are caught:
+
+  * Docstrings across ``src/`` cite design sections as ``DESIGN.md §N``
+    / ``DESIGN.md §N.M``; stale citations (a renumbered or removed
+    section) rot silently.  Every such reference is checked against the
+    actual DESIGN.md headers.
+  * Docstrings citing a repo doc FILE that does not exist — e.g. the
+    ``random_weights`` docstring long pointed at a nonexistent
+    ``EXPERIMENTS.md`` (ISSUE 5).  Every ``SOMETHING.md`` mention in
+    ``src``/``tests``/``benchmarks``/``examples`` must name a file that
+    is actually in the repo root.
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ import re
 REPO = pathlib.Path(__file__).resolve().parent.parent
 REF_RE = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
 HEADER_RE = re.compile(r"^#{1,6}\s.*?§(\d+(?:\.\d+)?)", re.MULTILINE)
+DOCFILE_RE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
+DOCFILE_SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
 
 
 def _design_sections() -> set[str]:
@@ -45,6 +53,23 @@ def test_src_design_references_resolve():
     assert not dangling, (
         f"docstrings cite DESIGN.md sections that have no header: "
         f"{dangling}; valid sections: {sorted(sections)}")
+
+
+def test_doc_file_references_exist():
+    """Every UPPERCASE.md mentioned anywhere in code must exist in the
+    repo root (catches citations of removed/never-written docs)."""
+    this_file = pathlib.Path(__file__).resolve()
+    dangling: dict[str, set[str]] = {}
+    for d in DOCFILE_SCAN_DIRS:
+        for path in sorted((REPO / d).rglob("*.py")):
+            if path.resolve() == this_file:
+                continue   # this file names nonexistent docs as examples
+            missing = {name for name in DOCFILE_RE.findall(path.read_text())
+                       if not (REPO / name).is_file()}
+            if missing:
+                dangling[str(path.relative_to(REPO))] = missing
+    assert not dangling, (
+        f"code references repo doc files that do not exist: {dangling}")
 
 
 def test_src_actually_cites_design():
