@@ -1,8 +1,11 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import platform
+import subprocess
 import time
 
 import numpy as np
@@ -14,13 +17,70 @@ import jax
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance() -> dict:
+    """What produced a BENCH file: code version + toolchain + hardware.
+
+    Stamped into every ``write_bench_json`` document so a perf number is
+    never compared against one from a different commit, jax version, or
+    device kind without noticing — the overwrite diff below prints
+    exactly which of these changed.
+    """
+    import jaxlib
+    dev = jax.devices()[0]
+    return {
+        "git_sha": _git_sha(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
+def _provenance_diff(old: dict, new: dict) -> list[str]:
+    """Changed provenance keys (timestamp excluded — it always differs)."""
+    keys = (set(old) | set(new)) - {"timestamp_utc"}
+    return [f"{k}: {old.get(k)} -> {new.get(k)}"
+            for k in sorted(keys) if old.get(k) != new.get(k)]
+
+
 def write_bench_json(name: str, payload) -> str:
-    """Persist a suite's machine-readable results as BENCH_<name>.json."""
+    """Persist a suite's machine-readable results as BENCH_<name>.json.
+
+    Overwriting an existing file prints the provenance diff (commit,
+    toolchain, device) so a regressed-looking number that merely came
+    from different hardware or jax version is visible at a glance.
+    """
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    prov = provenance()
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f).get("provenance", {})
+        except (OSError, json.JSONDecodeError):
+            old = {}
+        diff = _provenance_diff(old, prov)
+        if diff:
+            print(f"[bench overwrite {path}: provenance changed — "
+                  + "; ".join(diff) + "]")
     doc = {
         "bench": name,
         "unix_time": time.time(),
         "backend": jax.default_backend(),
+        "provenance": prov,
         "results": payload,
     }
     with open(path, "w") as f:
@@ -28,6 +88,30 @@ def write_bench_json(name: str, payload) -> str:
         f.write("\n")
     print(f"[bench results -> {path}]")
     return path
+
+
+def telemetry_recorder(out_dir, name: str):
+    """A Recorder writing <out_dir>/<name>.jsonl, or None when no dir.
+
+    The shared ``--telemetry DIR`` plumbing for the bench suites: each
+    suite opens one recorder, threads it through its instrumented entry
+    points, and closes it on exit; the CI bench-smoke job then replays
+    the logs with ``python -m repro.obs.report --check`` (DESIGN.md §14.4).
+    """
+    if out_dir is None:
+        return None
+    from repro.obs import JsonlSink, Recorder
+    return Recorder([JsonlSink(os.path.join(out_dir, f"{name}.jsonl"))])
+
+
+def cli_telemetry(argv) -> str | None:
+    """Extract the standalone suites' ``--telemetry DIR`` argument."""
+    if "--telemetry" not in argv:
+        return None
+    try:
+        return argv[argv.index("--telemetry") + 1]
+    except IndexError:
+        raise SystemExit("--telemetry needs a directory argument")
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):

@@ -22,14 +22,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.refine import refine
-from repro.distributed import (boundary_stats, ledger_for_run,
+from repro.distributed import (boundary_stats, ledger_for_run, reconcile,
                                refine_distributed,
                                refine_distributed_shard_map)
 from repro.distributed.accounting import naive_broadcast_bytes
 from repro.graphs.generators import random_degree_graph, random_weights
 from repro.core.problem import make_problem
 
-from .common import section, table, timed
+from .common import cli_telemetry, section, table, telemetry_recorder, timed
 
 
 def _instance(n: int, k: int, seed: int = 0):
@@ -41,10 +41,11 @@ def _instance(n: int, k: int, seed: int = 0):
     return prob, r0
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, telemetry=None):
     k = 8
     sizes = [256, 1024] if quick else [256, 1024, 4096]
     max_turns = 2048
+    recorder = telemetry_recorder(telemetry, "distributed")
     payload = {"wall_clock": [], "exchange": []}
 
     # ---- wall-clock: controller vs sharded ---------------------------------
@@ -81,34 +82,49 @@ def run(quick: bool = False):
               f"run with XLA_FLAGS=--xla_force_host_platform_device_count={k}]")
 
     # ---- exchange scaling: O(K) vs the O(N) strawman -----------------------
+    # bytes/round here are MEASURED from the staged exchange buffers
+    # (measure_wire=True) and reconciled against the analytic ledger —
+    # a mismatch at any size fails the suite (DESIGN.md §14.5).
     section("Exchange scaling at fixed K: bytes/round vs N (the O(K) claim)")
     rows = []
     per_round = []
     for n in sizes:
         prob, r0 = _instance(n, k)
-        res = refine_distributed(prob, r0, "c", num_shards=k,
-                                 max_turns=max_turns)
+        res, wire = refine_distributed(prob, r0, "c", num_shards=k,
+                                       max_turns=max_turns,
+                                       measure_wire=True, recorder=recorder)
         stats = boundary_stats(prob, k)
         led = ledger_for_run(stats, k, rounds=int(res.num_turns))
-        per_round.append(led.per_round_bytes)
-        rows.append([n, int(res.num_turns), f"{led.per_round_bytes:.0f}",
+        check = reconcile(led, wire)
+        assert check.ok, f"n={n}: {check.summary()}"
+        measured_per_round = (int(wire.payload_bytes)
+                              / max(int(wire.rounds), 1))
+        per_round.append(measured_per_round)
+        rows.append([n, int(res.num_turns), f"{measured_per_round:.0f}",
                      led.ghost_sync_bytes,
                      naive_broadcast_bytes(n, k),
-                     f"{naive_broadcast_bytes(n, k) / led.per_round_bytes:.0f}x"])
+                     f"{naive_broadcast_bytes(n, k) / measured_per_round:.0f}x"])
         payload["exchange"].append(
             {"n": n, "rounds": int(res.num_turns),
-             "bytes_per_round": led.per_round_bytes,
+             "bytes_per_round": measured_per_round,
+             "predicted_bytes_per_round": led.per_round_bytes,
+             "measured_matches_ledger": check.ok,
              "ghost_sync_bytes": led.ghost_sync_bytes,
              "naive_bytes_per_round": naive_broadcast_bytes(n, k)})
-    table(["N", "rounds", "B/round (ours)", "ghost sync B (one-time)",
+    table(["N", "rounds", "B/round (measured)", "ghost sync B (one-time)",
            "B/round (naive O(N))", "naive/ours"], rows)
+    print("measured bytes/round == analytic ledger at every size "
+          f"(reconciled, N={sizes})")
     spread = max(per_round) / min(per_round)
     print(f"bytes/round spread over {sizes[0]}->{sizes[-1]}: "
           f"{spread:.2f}x (claim: <= 2x, N-independent)")
     assert spread <= 2.0, f"per-round payload not flat: {per_round}"
     payload["bytes_per_round_spread"] = spread
+    if recorder is not None:
+        recorder.close()
     return payload
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    import sys
+    run(quick=True, telemetry=cli_telemetry(sys.argv))

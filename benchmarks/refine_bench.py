@@ -35,7 +35,8 @@ from repro.core.refine import refine_traced
 from repro.graphs.generators import random_degree_graph, random_weights
 from repro.core.problem import make_problem
 
-from .common import section, table, timed, write_bench_json
+from .common import (cli_telemetry, section, table, telemetry_recorder,
+                     timed, write_bench_json)
 
 AGREE_TOL = 1e-3          # max relative potential deviation, ISSUE 2
 SPEEDUP_FLOOR = 5.0       # at the largest size, full (non-quick) runs
@@ -69,12 +70,14 @@ def _assert_trace_agreement(fw: str, tr_i, tr_r, res_i, res_r, tag: str = ""):
     return rel
 
 
-def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
+def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512,
+                    recorder=None):
     """Assert the ISSUE-2 acceptance contract at one size; return stats."""
     prob, r0 = _instance(n, k)
     out = {"n": n, "k": k, "turns": max_turns, "frameworks": {}}
     for fw in ("c", "ct"):
-        res_i, tr_i = refine_traced(prob, r0, fw, max_turns=max_turns)
+        res_i, tr_i = refine_traced(prob, r0, fw, max_turns=max_turns,
+                                    recorder=recorder)
         res_r, tr_r = refine_traced(prob, r0, fw, max_turns=max_turns,
                                     incremental=False)
         rel = _assert_trace_agreement(fw, tr_i, tr_r, res_i, res_r)
@@ -87,7 +90,7 @@ def check_agreement(n: int = 256, k: int = 8, max_turns: int = 512):
 
 
 def check_agreement_batched(seeds=(0, 1, 2), n: int = 256, k: int = 8,
-                            max_turns: int = 512):
+                            max_turns: int = 512, recorder=None):
     """The same contract, incremental side batched: every (seed, framework)
     cell of a sweep-runtime fleet vs its own looped recompute oracle —
     gating the §10 incremental contract AND the §12.2 vmap-vs-loop
@@ -98,7 +101,8 @@ def check_agreement_batched(seeds=(0, 1, 2), n: int = 256, k: int = 8,
              for seed, (p, r0) in zip(seeds, instances)
              for fw in ("c", "ct")]
     res = sweeps.run_sweep(sweeps.make_spec(cases, mode="traced",
-                                            max_turns=max_turns))
+                                            max_turns=max_turns),
+                           recorder=recorder)
     out = {"n": n, "k": k, "turns": max_turns, "seeds": list(seeds),
            "frameworks": {}}
     for i, case in enumerate(cases):
@@ -119,19 +123,21 @@ def check_agreement_batched(seeds=(0, 1, 2), n: int = 256, k: int = 8,
     return out
 
 
-def run(quick: bool = False, batched: bool = True):
+def run(quick: bool = False, batched: bool = True, telemetry=None):
     k = 8
     sizes = [256, 1024] if quick else [256, 1024, 4096]
     timing_turns = 48 if quick else 64
+    recorder = telemetry_recorder(telemetry, "refine")
 
     # ---- acceptance: exact moves + <=1e-3 potentials, both frameworks ----
     if batched:
         section("Incremental (batched sweep) vs recompute oracle (512 turns)")
         agreement = check_agreement_batched(seeds=(0, 1) if quick
-                                            else (0, 1, 2), k=k)
+                                            else (0, 1, 2), k=k,
+                                            recorder=recorder)
     else:
         section("Incremental refinement: move/potential agreement (512 turns)")
-        agreement = check_agreement(n=256, k=k)
+        agreement = check_agreement(n=256, k=k, recorder=recorder)
     for fw, st in agreement["frameworks"].items():
         print(f"  [{fw}] moves {st['moves']} identical; "
               f"max rel potential diff "
@@ -183,6 +189,8 @@ def run(quick: bool = False, batched: bool = True):
             f"speedup {top['speedup']:.1f}x < {SPEEDUP_FLOOR}x " \
             f"at N={top['n']}, K={k}"
 
+    if recorder is not None:
+        recorder.close()
     payload = {"agreement": agreement, "scaling": results,
                "timing_turns": timing_turns, "batched": batched}
     write_bench_json("refine", payload)
@@ -192,4 +200,5 @@ def run(quick: bool = False, batched: bool = True):
 if __name__ == "__main__":
     import sys
     run(quick="--quick" in sys.argv,
-        batched="--no-batched" not in sys.argv)
+        batched="--no-batched" not in sys.argv,
+        telemetry=cli_telemetry(sys.argv))

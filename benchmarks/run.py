@@ -44,12 +44,18 @@ SUITES = {
 # when invoked standalone by the CI smoke jobs)
 _SELF_WRITING = {"refine", "dynamics", "sweeps", "sparse"}
 
+# these accept a telemetry dir and emit JSONL run logs (DESIGN.md §14)
+_TELEMETRY = {"refine", "sweeps", "sparse", "distributed"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write per-suite telemetry JSONL run logs to DIR "
+                         "(suites: " + ", ".join(sorted(_TELEMETRY)) + ")")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
     t0 = time.time()
@@ -57,7 +63,10 @@ def main() -> None:
     for name in names:
         t = time.time()
         try:
-            payload = SUITES[name](quick=args.quick)
+            kwargs = {"quick": args.quick}
+            if args.telemetry and name in _TELEMETRY:
+                kwargs["telemetry"] = args.telemetry
+            payload = SUITES[name](**kwargs)
             if payload is not None and name not in _SELF_WRITING:
                 write_bench_json(name, payload)
         except Exception:

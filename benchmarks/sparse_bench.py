@@ -42,7 +42,8 @@ from repro.graphs.generators import (random_degree_graph,
                                      random_weights, random_weights_edges)
 from repro.kernels.ops import make_edge_dissat_fn
 
-from .common import section, table, timed, write_bench_json
+from .common import (cli_telemetry, section, table, telemetry_recorder,
+                     timed, write_bench_json)
 
 AGREE_TOL = 1e-3          # max relative potential deviation (repo budget)
 SPEEDUP_FLOOR = 5.0       # dense must be infeasible or 5x slower on top size
@@ -74,18 +75,27 @@ def _sparse_instance(n: int, k: int, seed: int = 0):
     return prob, r0
 
 
-def check_agreement(sizes=(256, 1024), k: int = 8, max_turns: int = 256):
-    """Gate 1: sparse == dense accepted-move sequences on the grid."""
+def check_agreement(sizes=(256, 1024), k: int = 8, max_turns: int = 256,
+                    recorder=None):
+    """Gate 1: sparse == dense accepted-move sequences on the grid.
+
+    ``recorder`` instruments the sparse side of the smallest
+    (theta=None, framework=c) cell — enough to replay the sparse
+    convergence trace from the log without multiplying the grid's event
+    volume."""
     out = []
     for n in sizes:
         prob, r0 = _dense_instance(n, k)
         sp = sparse_from_dense(prob)
         for fw in ("c", "ct"):
             for theta in THETAS:
+                rec = (recorder if n == sizes[0] and fw == "c"
+                       and theta is None else None)
                 res_d, tr_d = refine_traced(prob, r0, fw,
                                             max_turns=max_turns, theta=theta)
                 res_s, tr_s = refine_traced(sp, r0, fw,
-                                            max_turns=max_turns, theta=theta)
+                                            max_turns=max_turns, theta=theta,
+                                            recorder=rec)
                 tag = f"n={n} fw={fw} theta={theta}"
                 for field in ("moved", "node", "source", "dest"):
                     a = np.asarray(getattr(tr_s, field))
@@ -171,13 +181,14 @@ def scaling(sizes, k: int = 8, timing_turns: int = 16,
     return results
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, telemetry=None):
     k = 8
     agree_sizes = (256, 1024) if quick else (256, 1024, 4096)
     scale_sizes = [4096, 16384] if quick else [4096, 16384, 65536, 262144]
+    recorder = telemetry_recorder(telemetry, "sparse")
 
     section("Sparse vs dense: accepted-move agreement (grid)")
-    agreement = check_agreement(sizes=agree_sizes, k=k)
+    agreement = check_agreement(sizes=agree_sizes, k=k, recorder=recorder)
     for st in agreement["grid"]:
         print(f"  [n={st['n']} {st['framework']} theta={st['theta']}] "
               f"moves {st['moves']} identical; rel potential diff "
@@ -217,6 +228,8 @@ def run(quick: bool = False):
                   f"{ratio:.1f}x slower at the largest measured size "
                   f"(N={ref['n']})")
 
+    if recorder is not None:
+        recorder.close()
     payload = {"agreement": agreement, "scaling": results,
                "backend_devices": jax.device_count()}
     write_bench_json("sparse", payload)
@@ -225,4 +238,4 @@ def run(quick: bool = False):
 
 if __name__ == "__main__":
     import sys
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv, telemetry=cli_telemetry(sys.argv))

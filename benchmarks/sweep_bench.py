@@ -46,7 +46,8 @@ from repro.des.workload import flooded_packet_workload
 from repro.graphs.generators import (preferential_attachment,
                                      random_degree_graph, random_weights)
 
-from .common import section, table, timed, write_bench_json
+from .common import (cli_telemetry, section, table, telemetry_recorder,
+                     timed, write_bench_json)
 
 POTENTIAL_TOL = 1e-3      # §10.3 / §12.2 carried-potential budget
 SPEEDUP_FLOOR = 3.0       # at B=32, full (non-quick) runs — ISSUE 4
@@ -74,11 +75,12 @@ def _mixed_cases(num: int, n: int, k: int, seed0: int = 0):
 
 
 def check_game_agreement(num: int = 8, n: int = 96, k: int = 4,
-                         max_turns: int = 192):
+                         max_turns: int = 192, recorder=None):
     """Gate 1: run_sweep vs per-case looped refine_traced."""
     cases = _mixed_cases(num, n, k)
     res = sweeps.run_sweep(sweeps.make_spec(cases, mode="traced",
-                                            max_turns=max_turns))
+                                            max_turns=max_turns),
+                           recorder=recorder)
     max_rel = 0.0
     for i, case in enumerate(cases):
         r_l, t_l = refine_traced(case.problem,
@@ -140,9 +142,13 @@ def _des_schedules(k: int, num: int):
 
 
 def check_des_agreement(num: int = 3, n: int = 20, k: int = 3,
-                        threads: int = 8):
+                        threads: int = 8, recorder=None):
     """Gate 2: run_simulation_batch vs per-schedule looped runs, full
-    final-state pytrees compared bitwise."""
+    final-state pytrees compared bitwise.
+
+    ``recorder`` instruments both sides — the batched fleet and the
+    first looped scenario — so the bitwise comparison below doubles as
+    the telemetry no-perturbation check on real bench workloads."""
     adjj, cfg, state0 = _des_setup(n, k, threads)
     scheds = _des_schedules(k, num)
     stacked = scenarios.stack_schedules(scheds)
@@ -150,10 +156,12 @@ def check_des_agreement(num: int = 3, n: int = 20, k: int = 3,
               for s in scheds]
     states = sweeps.stack_pytrees([state0] * num)
     adjs = jnp.stack([adjj] * num)
-    outb = run_simulation_batch(cfg, adjs, states, stacked)
+    outb = run_simulation_batch(cfg, adjs, states, stacked,
+                                recorder=recorder)
     ticks = []
     for i, sched in enumerate(padded):
-        out_l = run_simulation(cfg, adjj, state0, sched)
+        out_l = run_simulation(cfg, adjj, state0, sched,
+                               recorder=recorder if i == 0 else None)
         assert bool(out_l.done), f"scenario {i} did not drain"
         ticks.append(int(out_l.tick))
         flat_l = jax.tree_util.tree_leaves_with_path(out_l)
@@ -254,15 +262,16 @@ def time_des_fleet(num: int = 4, n: int = 20, k: int = 3, threads: int = 8):
             "batched_ms": t_batch * 1e3, "speedup": t_loop / t_batch}
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, telemetry=None):
+    recorder = telemetry_recorder(telemetry, "sweeps")
     section("Gate: batched sweep vs looped refine_traced (bitwise moves)")
     game = check_game_agreement(num=6 if quick else 8,
-                                n=64 if quick else 96)
+                                n=64 if quick else 96, recorder=recorder)
     print(f"  {game['cases']} mixed cases agree bitwise; max rel "
           f"potential diff {game['max_rel_potential_diff']:.2e}")
 
     section("Gate: batched DES fleet vs looped run_simulation (bitwise)")
-    des = check_des_agreement(num=2 if quick else 3)
+    des = check_des_agreement(num=2 if quick else 3, recorder=recorder)
     print(f"  {des['scenarios']} scenarios agree bitwise "
           f"(ticks {des['ticks']})")
 
@@ -292,6 +301,8 @@ def run(quick: bool = False):
               f"{des_timing['batched_ms']:.0f} ms "
               f"({des_timing['speedup']:.1f}x)")
 
+    if recorder is not None:
+        recorder.close()
     payload = {"game_agreement": game, "des_agreement": des,
                "game_timing": game_timing, "des_timing": des_timing,
                "quick": quick}
@@ -301,4 +312,4 @@ def run(quick: bool = False):
 
 if __name__ == "__main__":
     import sys
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv, telemetry=cli_telemetry(sys.argv))

@@ -89,8 +89,11 @@ kernel rather than falling back.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import NamedTuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -124,8 +127,20 @@ def _resolve_theta(theta, num_nodes: int) -> Array | None:
     return jnp.broadcast_to(theta, (num_nodes,))
 
 
+def _raw_best_gain(dissat: Array, owned: Array, theta) -> Array:
+    """Telemetry side quantity: the machine's best gain BEFORE the θ
+    hysteresis netting (DESIGN.md §14.1).  ``dissat`` is net of theta
+    (the one subtraction site, :func:`costs.dissatisfaction_from_cost`),
+    so the raw value is recovered exactly as ``net + theta``.  Lets the
+    recorder label a rejected turn "hysteresis" (raw gain cleared tol,
+    net did not) vs "satisfied".  Only evaluated on telemetry paths."""
+    raw = dissat if theta is None else dissat + theta
+    return jnp.max(jnp.where(owned, raw, -jnp.inf))
+
+
 def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
-          framework: str, tol: float, cost_matrix_fn=None, theta=None):
+          framework: str, tol: float, cost_matrix_fn=None, theta=None,
+          want_raw: bool = False):
     """One machine turn, recompute path: rebuild costs from scratch."""
     if cost_matrix_fn is None:
         cost = costs.cost_matrix(problem, state, framework)
@@ -149,18 +164,22 @@ def _turn(problem: PartitionProblem, state: PartitionState, machine: Array,
         state.loads,
     )
     new_state = PartitionState(new_assignment, new_loads)
-    return new_state, TurnResult(
+    res = TurnResult(
         moved=do_move,
         node=jnp.where(do_move, node, -1),
         source=jnp.where(do_move, machine, -1),
         dest=jnp.where(do_move, dest, -1),
         gain=jnp.where(do_move, gain, 0.0),
     c0=jnp.zeros(()), ct0=jnp.zeros(()))  # potentials filled by callers that want them
+    if want_raw:
+        return new_state, res, _raw_best_gain(dissat, owned, theta)
+    return new_state, res
 
 
 def _turn_incremental(problem: PartitionProblem, agg: agg_mod.AggregateState,
                       machine: Array, framework: str, tol: float,
-                      total_b: Array, dissat_fn=None, theta=None):
+                      total_b: Array, dissat_fn=None, theta=None,
+                      want_raw: bool = False):
     """One machine turn, incremental path: O(NK) costs from the carried
     aggregate, O(N) rank-1 move (DESIGN.md §10).
 
@@ -188,13 +207,16 @@ def _turn_incremental(problem: PartitionProblem, agg: agg_mod.AggregateState,
     dest = best[node]
     new_agg = agg_mod.apply_move(problem, agg, node, machine, dest, do_move,
                                  total_b)
-    return new_agg, TurnResult(
+    res = TurnResult(
         moved=do_move,
         node=jnp.where(do_move, node, -1),
         source=jnp.where(do_move, machine, -1),
         dest=jnp.where(do_move, dest, -1),
         gain=jnp.where(do_move, gain, 0.0),
         c0=new_agg.c0, ct0=new_agg.ct0)
+    if want_raw:
+        return new_agg, res, _raw_best_gain(dissat, owned, theta)
+    return new_agg, res
 
 
 class RefineResult(NamedTuple):
@@ -210,22 +232,22 @@ class RefineResult(NamedTuple):
 
 @partial(jax.jit, static_argnames=("framework", "max_turns", "cost_matrix_fn",
                                    "incremental", "verify_every",
-                                   "dissat_fn"))
-def refine(problem: PartitionProblem, assignment: Array,
-           framework: str = costs.C_FRAMEWORK,
-           max_turns: int = 10_000, tol: float = DEFAULT_TOL,
-           cost_matrix_fn=None, incremental: bool = True,
-           verify_every: int = 0, dissat_fn=None,
-           theta=None) -> RefineResult:
-    """Run round-robin refinement to convergence (K consecutive idle turns).
+                                   "dissat_fn", "on_turn"))
+def _refine(problem: PartitionProblem, assignment: Array,
+            framework: str = costs.C_FRAMEWORK,
+            max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+            cost_matrix_fn=None, incremental: bool = True,
+            verify_every: int = 0, dissat_fn=None,
+            theta=None, on_turn=None) -> RefineResult:
+    """Jitted while-loop body of :func:`refine`.
 
-    ``incremental=True`` (default) carries the aggregate state; passing
-    ``cost_matrix_fn`` forces the recompute path (a custom cost function
-    rebuilds from the full adjacency).  ``verify_every=M > 0`` rebuilds the
-    carry from scratch every M turns and records the drift (incremental
-    path only).  ``theta`` (scalar or (N,)) is the per-node migration-price
-    hysteresis threshold (DESIGN.md §11); ``None``/``0`` reproduces the
-    threshold-free move sequence bitwise.
+    ``on_turn`` (static; telemetry only) is a host callback fired once
+    per turn via ``jax.debug.callback`` with the raw turn row — see
+    ``repro.obs.recorder.Recorder._on_turn_row``.  ``on_turn=None``
+    (the default) stages the exact pre-telemetry computation: no
+    callback primitive and no raw-gain side quantity appear in the
+    jaxpr, so the disabled path is bitwise-identical and callback-free
+    (DESIGN.md §14.3).
     """
     K = problem.num_machines
     theta = _resolve_theta(theta, problem.num_nodes)
@@ -241,8 +263,16 @@ def refine(problem: PartitionProblem, assignment: Array,
 
         def body(carry):
             state, machine, idle, turns, moves = carry
-            state, res = _turn(problem, state, machine, framework, tol,
-                               cost_matrix_fn, theta)
+            if on_turn is None:
+                state, res = _turn(problem, state, machine, framework, tol,
+                                   cost_matrix_fn, theta)
+            else:
+                state, res, raw_gain = _turn(problem, state, machine,
+                                             framework, tol, cost_matrix_fn,
+                                             theta, want_raw=True)
+                jax.debug.callback(on_turn, turns, machine, res.moved,
+                                   res.node, res.source, res.dest, res.gain,
+                                   res.c0, res.ct0, raw_gain)
             idle = jnp.where(res.moved, 0, idle + 1)
             return (state, (machine + 1) % K, idle, turns + 1,
                     moves + res.moved.astype(jnp.int32))
@@ -264,8 +294,16 @@ def refine(problem: PartitionProblem, assignment: Array,
 
     def body(carry):
         agg, machine, idle, turns, moves, max_drift = carry
-        agg, res = _turn_incremental(problem, agg, machine, framework, tol,
-                                     total_b, dissat_fn, theta)
+        if on_turn is None:
+            agg, res = _turn_incremental(problem, agg, machine, framework,
+                                         tol, total_b, dissat_fn, theta)
+        else:
+            agg, res, raw_gain = _turn_incremental(
+                problem, agg, machine, framework, tol, total_b, dissat_fn,
+                theta, want_raw=True)
+            jax.debug.callback(on_turn, turns, machine, res.moved, res.node,
+                               res.source, res.dest, res.gain, res.c0,
+                               res.ct0, raw_gain)
         idle = jnp.where(res.moved, 0, idle + 1)
         turns = turns + 1
         if verify_every:
@@ -286,6 +324,74 @@ def refine(problem: PartitionProblem, assignment: Array,
                         converged=idle >= K, aggregate_drift=max_drift)
 
 
+def _open_run(recorder, runtime: str, problem, assignment, framework: str,
+              theta, **extra) -> str:
+    """Emit a ``run_start`` with the replay seed: initial (K,) machine
+    loads (host-side scatter, O(N)) and the machine speeds."""
+    b = np.asarray(problem.node_weights)
+    r0 = np.asarray(assignment)
+    k = problem.num_machines
+    loads0 = np.zeros(k)
+    np.add.at(loads0, r0, b)
+    return recorder.new_run(
+        runtime, framework=framework, n=problem.num_nodes, k=k,
+        theta=theta is not None, loads=loads0,
+        speeds=np.asarray(problem.speeds), **extra)
+
+
+def refine(problem: PartitionProblem, assignment: Array,
+           framework: str = costs.C_FRAMEWORK,
+           max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+           cost_matrix_fn=None, incremental: bool = True,
+           verify_every: int = 0, dissat_fn=None,
+           theta=None, recorder=None) -> RefineResult:
+    """Run round-robin refinement to convergence (K consecutive idle turns).
+
+    ``incremental=True`` (default) carries the aggregate state; passing
+    ``cost_matrix_fn`` forces the recompute path (a custom cost function
+    rebuilds from the full adjacency).  ``verify_every=M > 0`` rebuilds the
+    carry from scratch every M turns and records the drift (incremental
+    path only).  ``theta`` (scalar or (N,)) is the per-node migration-price
+    hysteresis threshold (DESIGN.md §11); ``None``/``0`` reproduces the
+    threshold-free move sequence bitwise.
+
+    ``recorder`` (an :class:`repro.obs.Recorder`, DESIGN.md §14) opts
+    into telemetry: per-turn events stream host-side through a buffered
+    ``jax.debug.callback`` and the run closes with drift + ``run_end``
+    events.  ``recorder=None`` (default) calls the identical jitted
+    program as before — same cache entry, zero callbacks.
+    """
+    if recorder is None:
+        return _refine(problem, assignment, framework, max_turns=max_turns,
+                       tol=tol, cost_matrix_fn=cost_matrix_fn,
+                       incremental=incremental, verify_every=verify_every,
+                       dissat_fn=dissat_fn, theta=theta)
+    run = _open_run(recorder, "refine", problem, assignment, framework,
+                    theta, incremental=incremental and cost_matrix_fn is None)
+    recorder.begin_rows()
+    t0 = time.perf_counter()
+    with recorder.phase("core.refine", run):
+        result = _refine(problem, assignment, framework,
+                         max_turns=max_turns, tol=tol,
+                         cost_matrix_fn=cost_matrix_fn,
+                         incremental=incremental, verify_every=verify_every,
+                         dissat_fn=dissat_fn, theta=theta,
+                         on_turn=recorder._on_turn_row)
+        jax.block_until_ready(result)
+        jax.effects_barrier()
+    wall = time.perf_counter() - t0
+    carried = incremental and cost_matrix_fn is None
+    rows = recorder.take_rows()
+    recorder.record_turn_rows(run, rows, problem.node_weights,
+                              carried=carried)
+    last = max(rows, key=lambda r: int(r[0])) if rows else None
+    recorder.record_result(
+        run, result, wall=wall,
+        c0=float(last[7]) if carried and last is not None else None,
+        ct0=float(last[8]) if carried and last is not None else None)
+    return result
+
+
 def _resync_max(problem, agg, max_drift):
     fresh, observed = agg_mod.resync(problem, agg)
     return fresh, jnp.maximum(max_drift, observed)
@@ -304,24 +410,18 @@ class Trace(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("framework", "max_turns", "incremental",
-                                   "verify_every"))
-def refine_traced(problem: PartitionProblem, assignment: Array,
-                  framework: str = costs.C_FRAMEWORK,
-                  max_turns: int = 512, tol: float = DEFAULT_TOL,
-                  incremental: bool = True, verify_every: int = 0,
-                  theta=None):
-    """Fixed-length scan variant recording both potentials after every turn.
+                                   "verify_every", "telemetry"))
+def _refine_traced(problem: PartitionProblem, assignment: Array,
+                   framework: str = costs.C_FRAMEWORK,
+                   max_turns: int = 512, tol: float = DEFAULT_TOL,
+                   incremental: bool = True, verify_every: int = 0,
+                   theta=None, telemetry: bool = False):
+    """Jitted scan body of :func:`refine_traced`.
 
-    Returns (RefineResult, Trace).  Turns after convergence are no-ops with
-    ``active=False`` so downstream statistics can mask them out.
-
-    On the incremental path (default) the recorded potentials are the
-    carried values, updated per move by the exact-potential identities —
-    no O(N^2) pass per turn.  On the recompute path they are evaluated
-    from scratch each turn (the oracle ``tests/test_incremental.py``
-    compares against).  ``theta`` as in :func:`refine`; recorded gains are
-    net of it, while the traced potentials remain the actual C_0/Ct_0
-    values (which descend by at least 2*theta/theta per accepted move).
+    Returns ``(RefineResult, Trace, raw_gains)`` where ``raw_gains`` is
+    the (T,) telemetry side output (θ-free best gain per turn, for
+    rejection labeling) when ``telemetry=True`` and ``None`` otherwise —
+    the ``telemetry=False`` jaxpr is the exact pre-telemetry program.
     """
     K = problem.num_machines
     theta = _resolve_theta(theta, problem.num_nodes)
@@ -332,8 +432,13 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
         def step(carry, _):
             state, machine, idle = carry
             active = idle < K
-            new_state, res = _turn(problem, state, framework=framework,
-                                   tol=tol, machine=machine, theta=theta)
+            if telemetry:
+                new_state, res, raw_gain = _turn(
+                    problem, state, framework=framework, tol=tol,
+                    machine=machine, theta=theta, want_raw=True)
+            else:
+                new_state, res = _turn(problem, state, framework=framework,
+                                       tol=tol, machine=machine, theta=theta)
             new_state = jax.tree.map(
                 lambda new, old: jnp.where(active, new, old), new_state, state)
             moved = res.moved & active
@@ -343,18 +448,23 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
             out = Trace(moved=moved, node=res.node, source=res.source,
                         dest=res.dest, gain=res.gain, c0=c0, ct0=ct0,
                         active=active)
+            if telemetry:
+                out = (out, raw_gain)
             return (new_state, (machine + 1) % K, idle), out
 
         (state, _, idle), trace = jax.lax.scan(
             step, (state0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
             None, length=max_turns)
+        raw_gains = None
+        if telemetry:
+            trace, raw_gains = trace
         moves = jnp.sum(trace.moved.astype(jnp.int32))
         turns = jnp.sum(trace.active.astype(jnp.int32))
         result = RefineResult(assignment=state.assignment, loads=state.loads,
                               num_moves=moves, num_turns=turns,
                               converged=idle >= K,
                               aggregate_drift=jnp.zeros(()))
-        return result, trace
+        return result, trace, raw_gains
 
     agg0 = agg_mod.init_aggregate_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
@@ -362,8 +472,13 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
     def step(carry, turn_idx):
         agg, machine, idle, max_drift = carry
         active = idle < K
-        new_agg, res = _turn_incremental(problem, agg, machine, framework,
-                                         tol, total_b, theta=theta)
+        if telemetry:
+            new_agg, res, raw_gain = _turn_incremental(
+                problem, agg, machine, framework, tol, total_b, theta=theta,
+                want_raw=True)
+        else:
+            new_agg, res = _turn_incremental(problem, agg, machine, framework,
+                                             tol, total_b, theta=theta)
         new_agg = jax.tree.map(
             lambda new, old: jnp.where(active, new, old), new_agg, agg)
         moved = res.moved & active
@@ -376,41 +491,85 @@ def refine_traced(problem: PartitionProblem, assignment: Array,
         out = Trace(moved=moved, node=res.node, source=res.source,
                     dest=res.dest, gain=res.gain, c0=new_agg.c0,
                     ct0=new_agg.ct0, active=active)
+        if telemetry:
+            out = (out, raw_gain)
         return (new_agg, (machine + 1) % K, idle, max_drift), out
 
     init = (agg0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
             jnp.zeros(()))
     (agg, _, idle, max_drift), trace = jax.lax.scan(
         init=init, f=step, xs=jnp.arange(max_turns, dtype=jnp.int32))
+    raw_gains = None
+    if telemetry:
+        trace, raw_gains = trace
     moves = jnp.sum(trace.moved.astype(jnp.int32))
     turns = jnp.sum(trace.active.astype(jnp.int32))
     result = RefineResult(assignment=agg.assignment, loads=agg.loads,
                           num_moves=moves, num_turns=turns,
                           converged=idle >= K, aggregate_drift=max_drift)
+    return result, trace, raw_gains
+
+
+def refine_traced(problem: PartitionProblem, assignment: Array,
+                  framework: str = costs.C_FRAMEWORK,
+                  max_turns: int = 512, tol: float = DEFAULT_TOL,
+                  incremental: bool = True, verify_every: int = 0,
+                  theta=None, recorder=None):
+    """Fixed-length scan variant recording both potentials after every turn.
+
+    Returns (RefineResult, Trace).  Turns after convergence are no-ops with
+    ``active=False`` so downstream statistics can mask them out.
+
+    On the incremental path (default) the recorded potentials are the
+    carried values, updated per move by the exact-potential identities —
+    no O(N^2) pass per turn.  On the recompute path they are evaluated
+    from scratch each turn (the oracle ``tests/test_incremental.py``
+    compares against).  ``theta`` as in :func:`refine`; recorded gains are
+    net of it, while the traced potentials remain the actual C_0/Ct_0
+    values (which descend by at least 2*theta/theta per accepted move).
+
+    ``recorder`` opts into telemetry (DESIGN.md §14): the returned trace
+    is ingested host-side into per-turn events — plus a θ-free raw-gain
+    side output for hysteresis-vs-satisfied rejection labels — and the
+    run closes with drift + ``run_end`` events.  ``recorder=None``
+    (default) runs the identical pre-telemetry program.
+    """
+    if recorder is None:
+        result, trace, _ = _refine_traced(
+            problem, assignment, framework, max_turns=max_turns, tol=tol,
+            incremental=incremental, verify_every=verify_every, theta=theta)
+        return result, trace
+    run = _open_run(recorder, "refine_traced", problem, assignment,
+                    framework, theta, incremental=incremental)
+    t0 = time.perf_counter()
+    with recorder.phase("core.refine_traced", run):
+        result, trace, raw_gains = _refine_traced(
+            problem, assignment, framework, max_turns=max_turns, tol=tol,
+            incremental=incremental, verify_every=verify_every, theta=theta,
+            telemetry=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    recorder.record_trace(run, trace, problem.node_weights,
+                          problem.num_machines, raw_gain=raw_gains)
+    turns = int(result.num_turns)
+    last = max(turns - 1, 0)
+    recorder.record_result(run, result, wall=wall,
+                           c0=float(trace.c0[last]),
+                           ct0=float(trace.ct0[last]))
     return result, trace
 
 
-@partial(jax.jit, static_argnames=("framework", "max_sweeps"))
-def refine_simultaneous(problem: PartitionProblem, assignment: Array,
-                        framework: str = costs.C_FRAMEWORK,
-                        max_sweeps: int = 256, tol: float = DEFAULT_TOL,
-                        theta=None):
-    """§4.5 asynchronous mode: every machine moves its most dissatisfied node
-    in the same sweep.  Faster wall-clock (one cost evaluation per sweep
-    serves all K machines) but descent is NOT guaranteed; ``refine_traced``
-    style potentials are returned per sweep so benchmarks can count ascents.
+@partial(jax.jit, static_argnames=("framework", "max_sweeps", "telemetry"))
+def _refine_simultaneous(problem: PartitionProblem, assignment: Array,
+                         framework: str = costs.C_FRAMEWORK,
+                         max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                         theta=None, telemetry: bool = False):
+    """Jitted scan body of :func:`refine_simultaneous`.
 
-    Incremental throughout: costs come from the carried aggregate (O(NK)
-    per sweep), the K disjoint moves apply as one rank-K column update,
-    and both potentials are re-derived via the O(K) closed forms of
-    :func:`repro.core.aggregate.potentials_closed_form` (simultaneous
-    moves are not unilateral, so the exact-potential identities do not
-    apply — DESIGN.md §10).
-
-    ``num_moves`` counts ACTUAL transfers (``sum(will_move)`` per sweep),
-    not the ``K * sweeps`` upper bound.  ``theta`` as in :func:`refine`
-    (each machine's pick maximizes — and its move gate tests — the
-    dissatisfaction net of the node's migration price).
+    Returns ``(RefineResult, (c0s, ct0s, active), movers)`` where
+    ``movers`` is the (T,) per-sweep transfer count — a telemetry-only
+    side output (``None`` unless ``telemetry=True``; the default jaxpr
+    is the exact pre-telemetry program).
     """
     K = problem.num_machines
     theta = _resolve_theta(theta, problem.num_nodes)
@@ -441,20 +600,77 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
                                       will_move, total_b)
         new_agg = jax.tree.map(
             lambda new, old: jnp.where(any_move, new, old), new_agg, agg)
-        moves = moves + jnp.where(any_move,
-                                  jnp.sum(will_move.astype(jnp.int32)), 0)
-        return ((new_agg, done | ~any_move, moves),
-                (new_agg.c0, new_agg.ct0, any_move))
+        sweep_movers = jnp.where(any_move,
+                                 jnp.sum(will_move.astype(jnp.int32)), 0)
+        moves = moves + sweep_movers
+        out = (new_agg.c0, new_agg.ct0, any_move)
+        if telemetry:
+            out = out + (sweep_movers,)
+        return (new_agg, done | ~any_move, moves), out
 
-    (agg, done, moves), (c0s, ct0s, active) = jax.lax.scan(
+    (agg, done, moves), outs = jax.lax.scan(
         sweep, (agg0, jnp.zeros((), bool), jnp.zeros((), jnp.int32)),
         None, length=max_sweeps)
+    movers = None
+    if telemetry:
+        c0s, ct0s, active, movers = outs
+    else:
+        c0s, ct0s, active = outs
     result = RefineResult(
         assignment=agg.assignment, loads=agg.loads,
         num_moves=moves,
         num_turns=jnp.sum(active.astype(jnp.int32)),
         converged=done, aggregate_drift=jnp.zeros(()))
-    return result, (c0s, ct0s, active)
+    return result, (c0s, ct0s, active), movers
+
+
+def refine_simultaneous(problem: PartitionProblem, assignment: Array,
+                        framework: str = costs.C_FRAMEWORK,
+                        max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                        theta=None, recorder=None):
+    """§4.5 asynchronous mode: every machine moves its most dissatisfied node
+    in the same sweep.  Faster wall-clock (one cost evaluation per sweep
+    serves all K machines) but descent is NOT guaranteed; ``refine_traced``
+    style potentials are returned per sweep so benchmarks can count ascents.
+
+    Incremental throughout: costs come from the carried aggregate (O(NK)
+    per sweep), the K disjoint moves apply as one rank-K column update,
+    and both potentials are re-derived via the O(K) closed forms of
+    :func:`repro.core.aggregate.potentials_closed_form` (simultaneous
+    moves are not unilateral, so the exact-potential identities do not
+    apply — DESIGN.md §10).
+
+    ``num_moves`` counts ACTUAL transfers (``sum(will_move)`` per sweep),
+    not the ``K * sweeps`` upper bound.  ``theta`` as in :func:`refine`
+    (each machine's pick maximizes — and its move gate tests — the
+    dissatisfaction net of the node's migration price).
+
+    ``recorder`` opts into telemetry (DESIGN.md §14): per-sweep events
+    (with a movers-per-sweep side output) plus drift + ``run_end``;
+    ``recorder=None`` (default) runs the identical pre-telemetry
+    program.
+    """
+    if recorder is None:
+        result, outs, _ = _refine_simultaneous(
+            problem, assignment, framework, max_sweeps=max_sweeps, tol=tol,
+            theta=theta)
+        return result, outs
+    run = _open_run(recorder, "refine_simultaneous", problem, assignment,
+                    framework, theta)
+    t0 = time.perf_counter()
+    with recorder.phase("core.refine_simultaneous", run):
+        result, outs, movers = _refine_simultaneous(
+            problem, assignment, framework, max_sweeps=max_sweeps, tol=tol,
+            theta=theta, telemetry=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    c0s, ct0s, active = outs
+    recorder.record_sweeps(run, c0s, ct0s, active, movers=movers)
+    turns = int(result.num_turns)
+    last = max(turns - 1, 0)
+    recorder.record_result(run, result, wall=wall, c0=float(c0s[last]),
+                           ct0=float(ct0s[last]))
+    return result, outs
 
 
 def count_discrepancies(trace: Trace, framework: str, initial_other: Array,

@@ -54,13 +54,15 @@ import dataclasses
 from functools import partial
 from typing import NamedTuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from ..core import costs as game_costs
 from ..core.problem import PartitionProblem
 from ..core.refine import refine
-from .scenarios import SpeedSchedule, speeds_at
+from .scenarios import SpeedSchedule, segment_at, speeds_at
 
 Array = jax.Array
 
@@ -296,12 +298,20 @@ def _select_events(ev: EventLists, idle: Array):
 
 
 def des_tick(cfg: DESConfig, adj: Array, state: DESState,
-             speed_schedule: SpeedSchedule | None = None) -> DESState:
+             speed_schedule: SpeedSchedule | None = None,
+             emit_tick=None, emit_refine=None) -> DESState:
     """Advance the simulator by one wall-clock tick.
 
     ``speed_schedule`` (optional) supplies the per-machine speeds in
     effect this tick (speed-churn scenarios, :mod:`repro.des.scenarios`);
     otherwise ``cfg.machine_speeds`` applies throughout.
+
+    ``emit_tick`` / ``emit_refine`` (DESIGN.md §14.3) are host callback
+    targets for telemetry: at ``trace_stride`` cadence a cond-gated
+    ``jax.debug.callback`` streams one tick row (GVT, counters, backlog
+    CV, schedule segment, frozen-LP count), and each executed refinement
+    round streams one refine row.  ``None`` (default) traces the exact
+    pre-telemetry program — no callbacks in the jaxpr.
     """
     N, E, H = cfg.num_lps, cfg.event_capacity, cfg.history_capacity
     K = cfg.num_machines
@@ -651,13 +661,29 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState,
     if cfg.refine_freq > 0:
         new_state = jax.lax.cond(
             (tick % cfg.refine_freq == 0) & ~done,
-            lambda s: _refine_partition(cfg, adj, s, speeds),
+            lambda s: _refine_partition(cfg, adj, s, speeds,
+                                        emit_refine=emit_refine),
             lambda s: s, new_state)
+
+    # ---- P7: telemetry (DESIGN.md §14.3) -----------------------------------
+    if emit_tick is not None:
+        segment = (jnp.zeros((), jnp.int32) if speed_schedule is None
+                   else segment_at(speed_schedule, state.tick))
+        frozen = jnp.sum((new_state.busy
+                          & (new_state.cur_thread == -1)).astype(jnp.int32))
+        wmean = jnp.mean(wload)
+        wload_cv = jnp.std(wload) / jnp.maximum(wmean, 1e-12)
+        row = (tick, gvt, new_state.processed, new_state.rollbacks,
+               new_state.refines, new_state.moves, jnp.mean(mean_len),
+               wload_cv, segment, frozen)
+        jax.lax.cond(tick % cfg.trace_stride == 0,
+                     lambda: jax.debug.callback(emit_tick, *row),
+                     lambda: None)
     return new_state
 
 
 def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
-                      speeds: Array) -> DESState:
+                      speeds: Array, emit_refine=None) -> DESState:
     """Measure node/edge weights from live event lists and refine (§6.1).
 
     ``speeds`` is the (K,) vector of LIVE relative machine speeds this
@@ -701,6 +727,7 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
         machine=res.assignment,
         refines=state.refines + 1,
         moves=state.moves + jnp.sum(moved_mask.astype(jnp.int32)))
+    frozen_count = jnp.zeros((), jnp.int32)
     if cfg.migration_freeze > 0:
         # the state transfer freezes the migrated LP for ticks proportional
         # to (records shipped) x (inter-machine delay); an LP mid-event
@@ -721,25 +748,65 @@ def _refine_partition(cfg: DESConfig, adj: Array, state: DESState,
             cur_count=jnp.where(newly_busy, 0, state.cur_count),
             cur_sender=jnp.where(newly_busy, -1, state.cur_sender),
         )
+        frozen_count = jnp.sum(frozen.astype(jnp.int32))
+    if emit_refine is not None:
+        # fires only when the refinement cond branch actually executes
+        jax.debug.callback(emit_refine, state.tick,
+                           jnp.sum(moved_mask.astype(jnp.int32)),
+                           frozen_count)
     return new_state
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "emit_tick", "emit_refine"))
+def _run_simulation(cfg: DESConfig, adj: Array, state: DESState,
+                    speed_schedule: SpeedSchedule | None = None,
+                    emit_tick=None, emit_refine=None) -> DESState:
+    def cond(s):
+        return (~s.done) & (s.tick < cfg.max_ticks)
+
+    def body(s):
+        return des_tick(cfg, adj, s, speed_schedule,
+                        emit_tick=emit_tick, emit_refine=emit_refine)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 def run_simulation(cfg: DESConfig, adj: Array, state: DESState,
-                   speed_schedule: SpeedSchedule | None = None) -> DESState:
+                   speed_schedule: SpeedSchedule | None = None,
+                   recorder=None) -> DESState:
     """Run ticks until all event lists drain (or max_ticks).
 
     ``speed_schedule`` drives per-tick machine-speed churn (slowdown /
     failure / recovery scenarios, :mod:`repro.des.scenarios`); ``None``
     keeps ``cfg.machine_speeds`` (or uniform) throughout.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`, DESIGN.md §14) opts
+    into telemetry: one ``tick`` event per ``trace_stride`` ticks
+    (GVT, cumulative counters, backlog CV, schedule segment, frozen
+    LPs), one ``des_refine`` event per executed refinement round, and a
+    closing ``run_end``.  ``recorder=None`` (default) dispatches to the
+    identical jitted program — same cache entry, zero callbacks.
     """
-    def cond(s):
-        return (~s.done) & (s.tick < cfg.max_ticks)
-
-    def body(s):
-        return des_tick(cfg, adj, s, speed_schedule)
-
-    return jax.lax.while_loop(cond, body, state)
+    if recorder is None:
+        return _run_simulation(cfg, adj, state, speed_schedule)
+    run = recorder.new_run(
+        "des", n=cfg.num_lps, k=cfg.num_machines,
+        refine_freq=cfg.refine_freq, backend=cfg.refine_backend,
+        trace_stride=cfg.trace_stride, theta=cfg.refine_theta_scale > 0)
+    recorder.begin_rows()
+    with recorder.phase("des.run_simulation", run):
+        final = _run_simulation(cfg, adj, state, speed_schedule,
+                                emit_tick=recorder._on_tick_row,
+                                emit_refine=recorder._on_refine_row)
+        jax.block_until_ready(final)
+        jax.effects_barrier()
+    recorder.record_des_rows(run)
+    recorder.emit(
+        "run_end", run, num_moves=int(final.moves),
+        num_turns=int(final.tick), converged=bool(final.done),
+        processed=int(final.processed), rollbacks=int(final.rollbacks),
+        refines=int(final.refines), gvt=float(final.gvt))
+    return final
 
 
 # ---------------------------------------------------------------------------
@@ -750,9 +817,9 @@ DEFAULT_BATCH_CHUNK = 256
 
 
 @partial(jax.jit, static_argnames=("cfg", "chunk"))
-def run_simulation_batch(cfg: DESConfig, adjs: Array, states: DESState,
-                         speed_schedules: SpeedSchedule | None = None,
-                         chunk: int = DEFAULT_BATCH_CHUNK) -> DESState:
+def _run_simulation_batch(cfg: DESConfig, adjs: Array, states: DESState,
+                          speed_schedules: SpeedSchedule | None = None,
+                          chunk: int = DEFAULT_BATCH_CHUNK) -> DESState:
     """:func:`run_simulation` over a stack of B scenarios in one program.
 
     ``adjs`` is ``(B, N, N)``, ``states`` a :class:`DESState` whose
@@ -818,3 +885,49 @@ def run_simulation_batch(cfg: DESConfig, adjs: Array, states: DESState,
         return jnp.any((~ss.done) & (ss.tick < cfg.max_ticks))
 
     return jax.lax.while_loop(cond, chunk_body, states)
+
+
+def run_simulation_batch(cfg: DESConfig, adjs: Array, states: DESState,
+                         speed_schedules: SpeedSchedule | None = None,
+                         chunk: int = DEFAULT_BATCH_CHUNK,
+                         recorder=None) -> DESState:
+    """Public batched entry point; see :func:`_run_simulation_batch`.
+
+    ``recorder`` opts into telemetry: per-tick streaming is not
+    available under the batched cond (a batched predicate executes both
+    branches — exactly why refinement is hoisted out of the tick), so
+    the run emits one host-side ``element`` summary per scenario after
+    the fleet drains (ticks, counters, time-averaged weighted-backlog
+    CV over the trace rows) plus a closing ``run_end``.
+    """
+    if recorder is None:
+        return _run_simulation_batch(cfg, adjs, states, speed_schedules,
+                                     chunk)
+    from ..sweeps.metrics import time_averaged_cv
+    batch = int(adjs.shape[0])
+    run = recorder.new_run(
+        "des_batch", n=cfg.num_lps, k=cfg.num_machines, batch=batch,
+        refine_freq=cfg.refine_freq, backend=cfg.refine_backend)
+    with recorder.phase("des.run_simulation_batch", run):
+        final = _run_simulation_batch(cfg, adjs, states, speed_schedules,
+                                      chunk)
+        jax.block_until_ready(final)
+    ticks = np.asarray(final.tick)
+    processed = np.asarray(final.processed)
+    rollbacks = np.asarray(final.rollbacks)
+    refines = np.asarray(final.refines)
+    moves = np.asarray(final.moves)
+    done = np.asarray(final.done)
+    wload = np.asarray(final.trace_wload)
+    ptrs = np.asarray(final.trace_ptr)
+    for i in range(batch):
+        recorder.emit(
+            "element", run, batch=i, ticks=int(ticks[i]),
+            processed=int(processed[i]), rollbacks=int(rollbacks[i]),
+            refines=int(refines[i]), moves=int(moves[i]),
+            converged=bool(done[i]),
+            wload_cv=time_averaged_cv(wload[i][:int(ptrs[i])]))
+    recorder.emit("run_end", run, num_moves=int(moves.sum()),
+                  num_turns=int(ticks.max()) if batch else 0,
+                  converged=bool(done.all()))
+    return final

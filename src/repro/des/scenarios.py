@@ -64,11 +64,17 @@ def make_schedule(times, speeds) -> SpeedSchedule:
                          speeds=jnp.asarray(speeds))
 
 
+def segment_at(schedule: SpeedSchedule, tick: Array) -> Array:
+    """() i32 — index of the segment in effect at wall-clock ``tick``
+    (traceable; the telemetry ``tick`` events carry it so churn phases
+    are attributable in a run log, DESIGN.md §14)."""
+    idx = jnp.sum((schedule.times <= tick).astype(jnp.int32)) - 1
+    return jnp.clip(idx, 0, schedule.times.shape[0] - 1)
+
+
 def speeds_at(schedule: SpeedSchedule, tick: Array) -> Array:
     """(K,) speeds in effect at wall-clock ``tick`` (traceable)."""
-    idx = jnp.sum((schedule.times <= tick).astype(jnp.int32)) - 1
-    idx = jnp.clip(idx, 0, schedule.times.shape[0] - 1)
-    return schedule.speeds[idx]
+    return schedule.speeds[segment_at(schedule, tick)]
 
 
 # ---------------------------------------------------------------------------

@@ -19,8 +19,9 @@ Modules:
   * :mod:`~repro.distributed.accounting` — bytes-exchanged ledgers proving
     the O(K + boundary) bound empirically.
 """
-from .accounting import ExchangeLedger, ledger_for_run
-from .runtime import (refine_distributed, refine_distributed_shard_map,
+from .accounting import ExchangeLedger, WireCheck, ledger_for_run, reconcile
+from .runtime import (WireMeasurement, refine_distributed,
+                      refine_distributed_shard_map,
                       refine_distributed_simultaneous,
                       refine_distributed_traced, shard_problem)
 from .views import ShardViews, boundary_stats, build_views
@@ -28,9 +29,12 @@ from .views import ShardViews, boundary_stats, build_views
 __all__ = [
     "ExchangeLedger",
     "ShardViews",
+    "WireCheck",
+    "WireMeasurement",
     "boundary_stats",
     "build_views",
     "ledger_for_run",
+    "reconcile",
     "refine_distributed",
     "refine_distributed_shard_map",
     "refine_distributed_simultaneous",

@@ -18,8 +18,11 @@ Incremental protocol (the default, DESIGN.md §10):
                                                     sq-load partials + cut
                                                     partial per shard)
     one-time setup  : 8 * sum_s ghost_s  +  4K + 4 (ghost sync, loads, B)
-    traced setup    : + S * (8 + 4K)               (initial-potential
-                                                    partial reduction)
+    traced setup    : + S * 8                      (initial-potential
+                                                    C_0/cut partial pair;
+                                                    the loads are already
+                                                    replicated by the 4K+4
+                                                    setup allreduce)
 
 Recompute protocol (``incremental=False`` drivers — pass
 ``incremental=False`` here too, the wire shapes differ):
@@ -122,9 +125,17 @@ def setup_bytes(num_machines: int) -> int:
 
 def init_potential_bytes(num_shards: int, num_machines: int) -> int:
     """One-time traced-run setup: the initial-potential partial reduction
-    (C_0 partial + cut partial + O(K) load partial per shard)."""
-    return num_shards * (protocol.TRACE_PARTIAL_BYTES
-                         + protocol.load_partial_bytes(num_machines))
+    (C_0 partial + cut partial per shard).
+
+    No load partial rides along: the traced driver seeds the reduction
+    with the loads the 4K+4 setup allreduce already replicated
+    (``fresh_loads=state0.loads`` in ``runtime._vmap_potentials``), so
+    charging an O(K) block per shard here would over-count — the
+    measured-wire cross-check of DESIGN.md §14.5 is what caught the
+    discrepancy (``num_machines`` stays in the signature for call-site
+    symmetry with the other formulas)."""
+    del num_machines
+    return num_shards * protocol.TRACE_PARTIAL_BYTES
 
 
 def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
@@ -163,3 +174,60 @@ def naive_broadcast_bytes(num_nodes: int, num_shards: int) -> int:
     """Per-round cost of the O(N) strawman: every shard re-receives the
     full int32 assignment vector each round."""
     return 4 * num_nodes * num_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCheck:
+    """Measured-vs-analytic reconciliation of one run's exchange bytes.
+
+    ``measured_*`` comes from a driver's ``measure_wire=True`` counters
+    (``runtime.WireMeasurement`` — byte sizes of the actual exchanged
+    device buffers times the rounds the run executed); ``predicted_*``
+    from :func:`ledger_for_run`.  The payload comparison covers the
+    per-round candidate + trace traffic; setup covers the one-time
+    loads/total-B allreduce plus, for incremental traced runs, the
+    initial-potential partials.  The ghost sync is excluded on both
+    sides: it is a property of the *sharding's boundary structure*, not
+    of anything the emulated drivers exchange at runtime, so it stays
+    analytic-only (DESIGN.md §14.5).
+    """
+    rounds: int
+    measured_payload: int
+    predicted_payload: int
+    measured_setup: int
+    predicted_setup: int
+
+    @property
+    def ok(self) -> bool:
+        return (self.measured_payload == self.predicted_payload
+                and self.measured_setup == self.predicted_setup)
+
+    def summary(self) -> str:
+        verdict = "OK" if self.ok else "MISMATCH"
+        return (f"wire [{verdict}] rounds={self.rounds}: payload "
+                f"{self.measured_payload} B measured vs "
+                f"{self.predicted_payload} B predicted, setup "
+                f"{self.measured_setup} vs {self.predicted_setup} B")
+
+
+def reconcile(ledger: ExchangeLedger, measurement) -> WireCheck:
+    """Cross-check a ``runtime.WireMeasurement`` against its ledger.
+
+    Build the ledger with ``rounds=int(measurement.rounds)`` (both sides
+    must describe the same executed run) and matching ``traced`` /
+    ``simultaneous`` / ``incremental`` flags — the O(K)-wire claim then
+    becomes the runtime assertion ``reconcile(...).ok``.
+    """
+    rounds = int(measurement.rounds)
+    if rounds != ledger.rounds:
+        raise ValueError(
+            f"measurement covers {rounds} rounds but the ledger was built "
+            f"for {ledger.rounds}; pass rounds=int(measurement.rounds) to "
+            "ledger_for_run")
+    return WireCheck(
+        rounds=rounds,
+        measured_payload=int(measurement.payload_bytes),
+        predicted_payload=ledger.candidate_bytes + ledger.trace_bytes,
+        measured_setup=int(measurement.setup_bytes),
+        predicted_setup=ledger.setup_bytes,
+    )

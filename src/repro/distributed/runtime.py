@@ -47,7 +47,9 @@ Two drivers realize the SPMD program:
 """
 from __future__ import annotations
 
+import time
 from functools import partial
+from typing import NamedTuple
 
 import numpy as np
 
@@ -58,11 +60,40 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core import aggregate as agg_mod
 from ..core import costs
 from ..core.problem import PartitionProblem, make_state
-from ..core.refine import DEFAULT_TOL, RefineResult, Trace
-from . import protocol
-from .views import ShardViews, build_views, shard_node_values
+from ..core.refine import DEFAULT_TOL, RefineResult, Trace, _open_run
+from . import accounting, protocol
+from .views import ShardViews, boundary_stats, build_views, shard_node_values
 
 Array = jax.Array
+
+
+class WireMeasurement(NamedTuple):
+    """Measured exchange bytes of one distributed run (DESIGN.md §14.5).
+
+    Produced by the drivers under ``measure_wire=True``: ``payload_bytes``
+    is the byte size of the pytrees that actually crossed the emulated
+    (or real) exchange each round — measured from the staged buffers via
+    :func:`_nbytes`, not from the analytic formulas — times the rounds
+    the run executed; ``setup_bytes`` covers the one-time replicated
+    state (O(K) loads + total-B scalar, plus the initial-potential
+    partials on the incremental traced path).  ``rounds`` follows the
+    same convention as ``RefineResult.num_turns`` (active turns/sweeps),
+    which is what :func:`repro.distributed.accounting.ledger_for_run`
+    is built from — so ``accounting.reconcile`` compares like with like.
+    """
+    rounds: Array          # int32 — active turns/sweeps (== num_turns)
+    payload_bytes: Array   # int32 — per-round exchange, whole run
+    setup_bytes: Array     # int32 — one-time replicated state
+
+
+def _nbytes(tree) -> int:
+    """Total byte size of a pytree's array leaves, at trace time.
+
+    Shapes and dtypes are static under tracing, so this is a Python int
+    even inside jit — the measured size of the buffers being exchanged.
+    """
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(tree)))
 
 
 def _vmap_shards(fn, theta_blocks: Array | None, *axes):
@@ -199,13 +230,20 @@ def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
     Pass ``fresh_loads`` when the caller already reduced the shard load
     partials for ``assignment`` (the sweep driver does) to skip the
     redundant second reduction.
+
+    Returns ``(c0, ct0, partial_bytes)`` — the third element is the
+    measured byte size of the partial arrays this reduction exchanged
+    (a trace-time Python int, consumed by the ``measure_wire`` counters
+    of DESIGN.md §14.5 and free to ignore otherwise).
     """
+    partial_bytes = 0
     if fresh_loads is None:
         load_partials = jax.vmap(
             lambda b, ids, v: protocol.shard_load_partial(
                 b, ids, v, assignment, num_machines)
         )(views.weights, views.ids, views.valid)
         fresh_loads = jnp.sum(load_partials, axis=0)
+        partial_bytes += _nbytes(load_partials)
     c0_partials = jax.vmap(
         lambda rb, b, ids, v: protocol.shard_c0_partial(
             rb, b, ids, v, assignment, fresh_loads, speeds, mu, total_b)
@@ -213,8 +251,10 @@ def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
     cut_partials = jax.vmap(
         lambda rb, ids, v: protocol.shard_cut_partial(rb, ids, v, assignment)
     )(views.row_block, views.ids, views.valid)
-    return protocol.global_potentials(c0_partials, cut_partials, fresh_loads,
-                                      speeds, mu, total_b)
+    partial_bytes += _nbytes((c0_partials, cut_partials))
+    c0, ct0 = protocol.global_potentials(c0_partials, cut_partials,
+                                         fresh_loads, speeds, mu, total_b)
+    return c0, ct0, partial_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -222,14 +262,14 @@ def _vmap_potentials(views: ShardViews, assignment: Array, speeds: Array,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
-                                   "cost_fn", "incremental"))
-def refine_distributed(problem: PartitionProblem, assignment: Array,
-                       framework: str = costs.C_FRAMEWORK,
-                       num_shards: int | None = None,
-                       max_turns: int = 10_000, tol: float = DEFAULT_TOL,
-                       cost_fn: str = "jnp",
-                       incremental: bool = True,
-                       theta=None) -> RefineResult:
+                                   "cost_fn", "incremental", "measure_wire"))
+def _refine_distributed(problem: PartitionProblem, assignment: Array,
+                        framework: str = costs.C_FRAMEWORK,
+                        num_shards: int | None = None,
+                        max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+                        cost_fn: str = "jnp",
+                        incremental: bool = True,
+                        theta=None, measure_wire: bool = False):
     """Distributed round-robin refinement to convergence (K idle turns).
 
     Protocol per turn: each shard computes one Candidate from local state
@@ -243,6 +283,12 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
     (DESIGN.md §11), evaluated shard-locally — the wire stays O(K) and
     ``theta=None``/``0`` reproduces the threshold-free move sequence
     bitwise (the core↔distributed contract).
+
+    ``measure_wire=True`` (static) additionally returns a
+    :class:`WireMeasurement` counting the bytes of the actual per-turn
+    candidate exchange — ``(result, wire)`` instead of ``result`` — for
+    reconciliation against ``accounting.ledger_for_run`` (DESIGN.md
+    §14.5).  The default jaxpr is unchanged.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
@@ -250,6 +296,7 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
     theta_blocks = _shard_theta(theta, problem, s)
+    measured: dict = {}
 
     if incremental:
         aggs0 = _init_block_aggregates(views, state0.assignment, k)
@@ -263,6 +310,7 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
             cands = _vmap_candidates_incremental(
                 views, aggs, r, loads, problem.speeds, problem.mu, total_b,
                 machine, framework, cost_fn, theta_blocks=theta_blocks)
+            measured["turn"] = _nbytes(cands)
             winner = protocol.elect(cands, tol)
             aggs = _update_block_aggregates(views, aggs, winner, machine)
             r, loads = protocol.apply_move(r, loads, winner, machine)
@@ -275,8 +323,13 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
         r, loads, _, _, idle, turns, moves = jax.lax.while_loop(
             cond, body, init)
-        return RefineResult(assignment=r, loads=loads, num_moves=moves,
-                            num_turns=turns, converged=idle >= k)
+        result = RefineResult(assignment=r, loads=loads, num_moves=moves,
+                              num_turns=turns, converged=idle >= k)
+        if not measure_wire:
+            return result
+        return result, WireMeasurement(
+            rounds=turns, payload_bytes=turns * measured["turn"],
+            setup_bytes=jnp.int32(_nbytes((state0.loads, total_b))))
 
     def cond(carry):
         _, _, _, idle, turns, _ = carry
@@ -287,6 +340,7 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
         cands = _vmap_candidates(views, r, loads, problem.speeds, problem.mu,
                                  total_b, machine, framework, cost_fn,
                                  theta_blocks=theta_blocks)
+        measured["turn"] = _nbytes(cands)
         winner = protocol.elect(cands, tol)
         r, loads = protocol.apply_move(r, loads, winner, machine)
         idle = jnp.where(winner.moved, 0, idle + 1)
@@ -297,20 +351,25 @@ def refine_distributed(problem: PartitionProblem, assignment: Array,
             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32))
     r, loads, _, idle, turns, moves = jax.lax.while_loop(cond, body, init)
-    return RefineResult(assignment=r, loads=loads, num_moves=moves,
-                        num_turns=turns, converged=idle >= k)
+    result = RefineResult(assignment=r, loads=loads, num_moves=moves,
+                          num_turns=turns, converged=idle >= k)
+    if not measure_wire:
+        return result
+    return result, WireMeasurement(
+        rounds=turns, payload_bytes=turns * measured["turn"],
+        setup_bytes=jnp.int32(_nbytes((state0.loads, total_b))))
 
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_turns",
-                                   "cost_fn", "incremental"))
-def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
-                              framework: str = costs.C_FRAMEWORK,
-                              num_shards: int | None = None,
-                              max_turns: int = 512,
-                              tol: float = DEFAULT_TOL,
-                              cost_fn: str = "jnp",
-                              incremental: bool = True,
-                              theta=None):
+                                   "cost_fn", "incremental", "measure_wire"))
+def _refine_distributed_traced(problem: PartitionProblem, assignment: Array,
+                               framework: str = costs.C_FRAMEWORK,
+                               num_shards: int | None = None,
+                               max_turns: int = 512,
+                               tol: float = DEFAULT_TOL,
+                               cost_fn: str = "jnp",
+                               incremental: bool = True,
+                               theta=None, measure_wire: bool = False):
     """Fixed-length traced variant; returns ``(RefineResult, Trace)`` with
     the exact semantics (and, in sequential mode, the exact move sequence)
     of :func:`repro.core.refine.refine_traced`.
@@ -321,6 +380,12 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
     turn, no O(N) pass of any kind.  ``incremental=False`` restores the
     per-turn partial-reduction recompute.  ``theta`` as in
     :func:`refine_distributed`.
+
+    ``measure_wire=True`` (static) returns ``(result, trace, wire)``
+    with a :class:`WireMeasurement` counting the actual per-turn
+    exchange (candidates + potential deltas, or + the recompute
+    partials) and the one-time setup including the initial-potential
+    partials (DESIGN.md §14.5).  The default jaxpr is unchanged.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
@@ -328,13 +393,14 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
     state0 = make_state(problem, assignment)
     total_b = jnp.sum(problem.node_weights)
     theta_blocks = _shard_theta(theta, problem, s)
+    measured: dict = {}
+    setup_base = _nbytes((state0.loads, total_b))
 
     if incremental:
         aggs0 = _init_block_aggregates(views, state0.assignment, k)
-        c0_init, ct0_init = _vmap_potentials(views, state0.assignment,
-                                             problem.speeds, problem.mu,
-                                             total_b, k,
-                                             fresh_loads=state0.loads)
+        c0_init, ct0_init, init_pot_bytes = _vmap_potentials(
+            views, state0.assignment, problem.speeds, problem.mu,
+            total_b, k, fresh_loads=state0.loads)
 
         def step(carry, _):
             r, loads, aggs, c0, ct0, machine, idle = carry
@@ -343,6 +409,7 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
                 views, aggs, r, loads, problem.speeds, problem.mu, total_b,
                 machine, framework, cost_fn, with_deltas=True,
                 theta_blocks=theta_blocks)
+            measured["turn"] = _nbytes((cands, dc0s, dct0s))
             winner = protocol.elect(cands, tol)
             moved = winner.moved & active
             gated = winner._replace(moved=moved)
@@ -369,7 +436,11 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
         turns = jnp.sum(trace.active.astype(jnp.int32))
         result = RefineResult(assignment=r, loads=loads, num_moves=moves,
                               num_turns=turns, converged=idle >= k)
-        return result, trace
+        if not measure_wire:
+            return result, trace
+        return result, trace, WireMeasurement(
+            rounds=turns, payload_bytes=turns * measured["turn"],
+            setup_bytes=jnp.int32(setup_base + init_pot_bytes))
 
     def step(carry, _):
         r, loads, machine, idle = carry
@@ -383,8 +454,9 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
         new_loads = jnp.where(active, new_loads, loads)
         moved = winner.moved & active
         idle = jnp.where(moved, 0, idle + 1)
-        c0, ct0 = _vmap_potentials(views, new_r, problem.speeds, problem.mu,
-                                   total_b, k)
+        c0, ct0, pot_bytes = _vmap_potentials(views, new_r, problem.speeds,
+                                              problem.mu, total_b, k)
+        measured["turn"] = _nbytes(cands) + pot_bytes
         out = Trace(
             moved=moved,
             node=jnp.where(winner.moved, winner.node, -1),
@@ -402,7 +474,11 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
     turns = jnp.sum(trace.active.astype(jnp.int32))
     result = RefineResult(assignment=r, loads=loads, num_moves=moves,
                           num_turns=turns, converged=idle >= k)
-    return result, trace
+    if not measure_wire:
+        return result, trace
+    return result, trace, WireMeasurement(
+        rounds=turns, payload_bytes=turns * measured["turn"],
+        setup_bytes=jnp.int32(setup_base))
 
 
 # ---------------------------------------------------------------------------
@@ -410,16 +486,16 @@ def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("framework", "num_shards", "max_sweeps",
-                                   "cost_fn", "incremental"))
-def refine_distributed_simultaneous(problem: PartitionProblem,
-                                    assignment: Array,
-                                    framework: str = costs.C_FRAMEWORK,
-                                    num_shards: int | None = None,
-                                    max_sweeps: int = 256,
-                                    tol: float = DEFAULT_TOL,
-                                    cost_fn: str = "jnp",
-                                    incremental: bool = True,
-                                    theta=None):
+                                   "cost_fn", "incremental", "measure_wire"))
+def _refine_distributed_simultaneous(problem: PartitionProblem,
+                                     assignment: Array,
+                                     framework: str = costs.C_FRAMEWORK,
+                                     num_shards: int | None = None,
+                                     max_sweeps: int = 256,
+                                     tol: float = DEFAULT_TOL,
+                                     cost_fn: str = "jnp",
+                                     incremental: bool = True,
+                                     theta=None, measure_wire: bool = False):
     """Distributed §4.5 sweeps: each shard ships K candidates per sweep
     (one per machine), elections run per machine, all K disjoint moves
     apply at once as a rank-K block-aggregate update.  Exchange per sweep:
@@ -427,6 +503,12 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
 
     ``num_moves`` counts actual transfers (sum of per-sweep movers), not
     the K*sweeps upper bound.  ``theta`` as in :func:`refine_distributed`.
+
+    ``measure_wire=True`` (static) returns ``(result, traces, wire)``
+    with a :class:`WireMeasurement` of the actual per-sweep exchange
+    (K candidates per shard + the partial reductions); ``rounds`` counts
+    active sweeps, matching ``num_turns`` and the ledger convention
+    (DESIGN.md §14.5).  The default jaxpr is unchanged.
     """
     k = problem.num_machines
     s = _resolve_shards(problem, num_shards)
@@ -435,6 +517,7 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
     total_b = jnp.sum(problem.node_weights)
     sq_weights = views.weights * views.weights
     theta_blocks = _shard_theta(theta, problem, s)
+    measured: dict = {}
 
     def _sweep_cands_incremental(aggs, r, loads, dissat_fn):
         def one(agg, b, ids, v, th):
@@ -481,6 +564,8 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
                 lambda agg, ids, v: protocol.shard_cut_partial_from_aggregate(
                     agg, ids, v, new_r)
             )(new_aggs, views.ids, views.valid)
+            measured["sweep"] = _nbytes(
+                (cands, load_partials, sq_partials, cut_partials))
             cut = 0.5 * jnp.sum(cut_partials)
             c0, ct0 = agg_mod.potentials_closed_form(
                 new_loads, sq_loads, cut, problem.speeds, problem.mu,
@@ -494,11 +579,15 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
             sweep, (state0.assignment, state0.loads, aggs0,
                     jnp.zeros((), bool), jnp.zeros((), jnp.int32)),
             None, length=max_sweeps)
+        sweeps = jnp.sum(active.astype(jnp.int32))
         result = RefineResult(
             assignment=r, loads=loads, num_moves=moves,
-            num_turns=jnp.sum(active.astype(jnp.int32)),
-            converged=done)
-        return result, (c0s, ct0s, active)
+            num_turns=sweeps, converged=done)
+        if not measure_wire:
+            return result, (c0s, ct0s, active)
+        return result, (c0s, ct0s, active), WireMeasurement(
+            rounds=sweeps, payload_bytes=sweeps * measured["sweep"],
+            setup_bytes=jnp.int32(_nbytes((state0.loads, total_b))))
 
     shard_cost = _shard_cost_fn(cost_fn)
 
@@ -524,8 +613,10 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
             lambda b, ids, v: protocol.shard_load_partial(b, ids, v, new_r, k)
         )(views.weights, views.ids, views.valid)
         new_loads = jnp.sum(load_partials, axis=0)
-        c0, ct0 = _vmap_potentials(views, new_r, problem.speeds, problem.mu,
-                                   total_b, k, fresh_loads=new_loads)
+        c0, ct0, pot_bytes = _vmap_potentials(views, new_r, problem.speeds,
+                                              problem.mu, total_b, k,
+                                              fresh_loads=new_loads)
+        measured["sweep"] = _nbytes((cands, load_partials)) + pot_bytes
         moves = moves + jnp.where(
             any_move, jnp.sum(winners.moved.astype(jnp.int32)), 0)
         return ((new_r, new_loads, done | ~any_move, moves),
@@ -535,11 +626,15 @@ def refine_distributed_simultaneous(problem: PartitionProblem,
         sweep, (state0.assignment, state0.loads, jnp.zeros((), bool),
                 jnp.zeros((), jnp.int32)),
         None, length=max_sweeps)
+    sweeps = jnp.sum(active.astype(jnp.int32))
     result = RefineResult(
         assignment=r, loads=loads, num_moves=moves,
-        num_turns=jnp.sum(active.astype(jnp.int32)),
-        converged=done)
-    return result, (c0s, ct0s, active)
+        num_turns=sweeps, converged=done)
+    if not measure_wire:
+        return result, (c0s, ct0s, active)
+    return result, (c0s, ct0s, active), WireMeasurement(
+        rounds=sweeps, payload_bytes=sweeps * measured["sweep"],
+        setup_bytes=jnp.int32(_nbytes((state0.loads, total_b))))
 
 
 # ---------------------------------------------------------------------------
@@ -551,7 +646,9 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
                                  num_shards: int | None = None,
                                  max_turns: int = 10_000,
                                  tol: float = DEFAULT_TOL,
-                                 devices=None, theta=None) -> RefineResult:
+                                 devices=None, theta=None,
+                                 measure_wire: bool = False,
+                                 recorder=None):
     """Sequential-turn refinement with each shard on its own device.
 
     Row blocks are placed along a 1-D ``Mesh`` axis ``"shards"``; the
@@ -565,6 +662,13 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
     ``num_shards`` addressable devices — the bench forces a multi-device
     host platform via ``XLA_FLAGS``; on one device it degenerates to a
     1-shard mesh (still the collective code path).
+
+    ``measure_wire=True`` returns ``(result, wire)`` with a
+    :class:`WireMeasurement` whose payload counts the real
+    ``lax.all_gather`` output buffers per turn (DESIGN.md §14.5).
+    ``recorder`` (a :class:`repro.obs.Recorder`) opts into run telemetry:
+    a phase-timed ``run_start``/``wire``/``run_end`` stream with the
+    measured bytes reconciled against the analytic ledger.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -589,6 +693,8 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
     if theta_blocks is None:
         theta_blocks = jnp.zeros((s, views.shard_size), jnp.float32)
 
+    measured: dict = {}
+
     def spmd(rb, b, ids, valid, th, r0, loads0, speeds, mu, tot):
         rb, b, ids, valid, th = rb[0], b[0], ids[0], valid[0], th[0]
         agg0 = protocol.block_aggregate(rb, r0, k)   # once, O(Ns·N·K)
@@ -607,6 +713,7 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
                 node=jax.lax.all_gather(cand.node, "shards"),
                 dest=jax.lax.all_gather(cand.dest, "shards"),
                 weight=jax.lax.all_gather(cand.weight, "shards"))
+            measured["turn"] = _nbytes(cands)
             winner = protocol.elect(cands, tol)
             agg = protocol.update_block_aggregate(
                 agg, rb, winner.node, machine, winner.dest, winner.moved)
@@ -629,8 +736,170 @@ def refine_distributed_shard_map(problem: PartitionProblem, assignment: Array,
                              rep, rep, rep, rep, rep),
                    out_specs=(rep, rep, rep, rep, rep),
                    check_rep=False)
-    r, loads, moves, turns, converged = jax.jit(fn)(
-        views.row_block, views.weights, views.ids, views.valid, theta_blocks,
-        state0.assignment, state0.loads, problem.speeds, problem.mu, total_b)
-    return RefineResult(assignment=r, loads=loads, num_moves=moves,
-                        num_turns=turns, converged=converged)
+    run = (None if recorder is None else
+           _open_run(recorder, "shard_map", problem, assignment, framework,
+                     theta, num_shards=s))
+    args = (views.row_block, views.weights, views.ids, views.valid,
+            theta_blocks, state0.assignment, state0.loads, problem.speeds,
+            problem.mu, total_b)
+    t0 = time.perf_counter()
+    if recorder is None:
+        r, loads, moves, turns, converged = jax.jit(fn)(*args)
+    else:
+        with recorder.phase("distributed.shard_map", run):
+            out = jax.jit(fn)(*args)
+            jax.block_until_ready(out)
+        r, loads, moves, turns, converged = out
+    wall = time.perf_counter() - t0
+    result = RefineResult(assignment=r, loads=loads, num_moves=moves,
+                          num_turns=turns, converged=converged)
+    if not (measure_wire or recorder is not None):
+        return result
+    # jax.jit(fn) is freshly constructed above, so tracing always ran
+    # this call and populated measured["turn"] with the gathered
+    # candidates' buffer size.
+    rounds = int(np.asarray(turns))
+    wire = WireMeasurement(
+        rounds=jnp.int32(rounds),
+        payload_bytes=jnp.int32(rounds * measured["turn"]),
+        setup_bytes=jnp.int32(_nbytes((state0.loads, total_b))))
+    if recorder is not None:
+        _record_wire(recorder, run, problem, s, wire)
+        recorder.record_result(run, result, wall=wall)
+    return (result, wire) if measure_wire else result
+
+
+# ---------------------------------------------------------------------------
+# Telemetry wrappers (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _record_wire(recorder, run: str, problem: PartitionProblem,
+                 num_shards: int, wire: WireMeasurement, *,
+                 traced: bool = False, simultaneous: bool = False,
+                 incremental: bool = True) -> None:
+    """Reconcile a driver's measured wire counters against the analytic
+    ledger for the same executed run and emit the ``wire`` event."""
+    stats = boundary_stats(problem, num_shards)
+    ledger = accounting.ledger_for_run(
+        stats, problem.num_machines, int(wire.rounds), traced=traced,
+        simultaneous=simultaneous, incremental=incremental)
+    recorder.record_wire(run, accounting.reconcile(ledger, wire))
+
+
+def refine_distributed(problem: PartitionProblem, assignment: Array,
+                       framework: str = costs.C_FRAMEWORK,
+                       num_shards: int | None = None,
+                       max_turns: int = 10_000, tol: float = DEFAULT_TOL,
+                       cost_fn: str = "jnp",
+                       incremental: bool = True,
+                       theta=None, measure_wire: bool = False,
+                       recorder=None):
+    """Distributed round-robin refinement (see :func:`_refine_distributed`
+    for the protocol).  ``recorder`` (a :class:`repro.obs.Recorder`) opts
+    into run telemetry: the run is phase-timed, its measured wire bytes
+    are reconciled against ``accounting.ledger_for_run``, and the stream
+    closes with drift + ``run_end`` events.  ``recorder=None`` dispatches
+    straight to the identical jitted program — same cache entry."""
+    if recorder is None:
+        return _refine_distributed(
+            problem, assignment, framework, num_shards=num_shards,
+            max_turns=max_turns, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=measure_wire)
+    s = _resolve_shards(problem, num_shards)
+    run = _open_run(recorder, "distributed", problem, assignment, framework,
+                    theta, num_shards=s, incremental=incremental)
+    t0 = time.perf_counter()
+    with recorder.phase("distributed.refine", run):
+        result, wire = _refine_distributed(
+            problem, assignment, framework, num_shards=s,
+            max_turns=max_turns, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    _record_wire(recorder, run, problem, s, wire, incremental=incremental)
+    recorder.record_result(run, result, wall=wall)
+    return (result, wire) if measure_wire else result
+
+
+def refine_distributed_traced(problem: PartitionProblem, assignment: Array,
+                              framework: str = costs.C_FRAMEWORK,
+                              num_shards: int | None = None,
+                              max_turns: int = 512,
+                              tol: float = DEFAULT_TOL,
+                              cost_fn: str = "jnp",
+                              incremental: bool = True,
+                              theta=None, measure_wire: bool = False,
+                              recorder=None):
+    """Traced distributed refinement (see :func:`_refine_distributed_traced`).
+    ``recorder`` additionally streams one ``turn`` event per active turn
+    (from the returned trace — the carried exact-potential values ride
+    along) and the measured-vs-ledger ``wire`` reconciliation."""
+    if recorder is None:
+        return _refine_distributed_traced(
+            problem, assignment, framework, num_shards=num_shards,
+            max_turns=max_turns, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=measure_wire)
+    s = _resolve_shards(problem, num_shards)
+    run = _open_run(recorder, "distributed_traced", problem, assignment,
+                    framework, theta, num_shards=s, incremental=incremental)
+    t0 = time.perf_counter()
+    with recorder.phase("distributed.refine_traced", run):
+        result, trace, wire = _refine_distributed_traced(
+            problem, assignment, framework, num_shards=s,
+            max_turns=max_turns, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    recorder.record_trace(run, trace, problem.node_weights,
+                          problem.num_machines)
+    _record_wire(recorder, run, problem, s, wire, traced=True,
+                 incremental=incremental)
+    turns = int(result.num_turns)
+    last = max(turns - 1, 0)
+    recorder.record_result(
+        run, result, wall=wall,
+        c0=float(np.asarray(trace.c0)[last]) if turns else None,
+        ct0=float(np.asarray(trace.ct0)[last]) if turns else None)
+    return (result, trace, wire) if measure_wire else (result, trace)
+
+
+def refine_distributed_simultaneous(problem: PartitionProblem,
+                                    assignment: Array,
+                                    framework: str = costs.C_FRAMEWORK,
+                                    num_shards: int | None = None,
+                                    max_sweeps: int = 256,
+                                    tol: float = DEFAULT_TOL,
+                                    cost_fn: str = "jnp",
+                                    incremental: bool = True,
+                                    theta=None, measure_wire: bool = False,
+                                    recorder=None):
+    """Distributed §4.5 sweeps (see :func:`_refine_distributed_simultaneous`).
+    ``recorder`` streams one ``sweep`` event per active sweep plus the
+    measured-vs-ledger ``wire`` reconciliation."""
+    if recorder is None:
+        return _refine_distributed_simultaneous(
+            problem, assignment, framework, num_shards=num_shards,
+            max_sweeps=max_sweeps, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=measure_wire)
+    s = _resolve_shards(problem, num_shards)
+    run = _open_run(recorder, "distributed_sweep", problem, assignment,
+                    framework, theta, num_shards=s, incremental=incremental)
+    t0 = time.perf_counter()
+    with recorder.phase("distributed.refine_simultaneous", run):
+        result, (c0s, ct0s, active), wire = _refine_distributed_simultaneous(
+            problem, assignment, framework, num_shards=s,
+            max_sweeps=max_sweeps, tol=tol, cost_fn=cost_fn,
+            incremental=incremental, theta=theta, measure_wire=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    recorder.record_sweeps(run, c0s, ct0s, active)
+    _record_wire(recorder, run, problem, s, wire, simultaneous=True,
+                 incremental=incremental)
+    sweeps = int(result.num_turns)
+    last = max(sweeps - 1, 0)
+    recorder.record_result(
+        run, result, wall=wall,
+        c0=float(np.asarray(c0s)[last]) if sweeps else None,
+        ct0=float(np.asarray(ct0s)[last]) if sweeps else None)
+    return ((result, (c0s, ct0s, active), wire) if measure_wire
+            else (result, (c0s, ct0s, active)))

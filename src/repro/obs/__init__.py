@@ -1,0 +1,28 @@
+"""Run telemetry layer (DESIGN.md §14).
+
+Structured, typed event streams from every execution axis of the repo —
+the three ``repro.core.refine`` entry points, the DES engine ticks, the
+four ``repro.distributed`` drivers (with *measured* wire-byte counters
+reconciled against the analytic ledger), and the batched sweep runtime —
+plus sinks (JSONL run logs, Chrome-trace/Perfetto phase timing) and a
+replay/report CLI (``python -m repro.obs.report``).
+
+Telemetry is strictly opt-in: every instrumented entry point takes
+``recorder=None`` and the ``None`` path is the exact pre-telemetry
+computation — same jaxpr, no host callbacks, bitwise-identical results
+(``tests/test_obs.py`` pins both properties).
+"""
+from .events import EVENT_KINDS, make_event, validate_event
+from .recorder import Recorder
+from .sinks import JsonlSink, MemorySink, chrome_trace, read_jsonl
+
+__all__ = [
+    "EVENT_KINDS",
+    "JsonlSink",
+    "MemorySink",
+    "Recorder",
+    "chrome_trace",
+    "make_event",
+    "read_jsonl",
+    "validate_event",
+]

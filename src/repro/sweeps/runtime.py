@@ -120,7 +120,7 @@ def _stack_group(cases: list[SweepCase]):
     return problems, r0, theta
 
 
-def run_sweep(spec: SweepSpec) -> "SweepResult":
+def run_sweep(spec: SweepSpec, recorder=None) -> "SweepResult":
     """Execute a sweep: one compiled batched program per case group.
 
     Groups are keyed on (framework, theta-present, problem shape key) —
@@ -130,11 +130,24 @@ def run_sweep(spec: SweepSpec) -> "SweepResult":
     varies freely inside a group's single ``vmap``.
     Returns a :class:`SweepResult` with per-case results and traces in
     the order of ``spec.cases``.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`, DESIGN.md §14) opts
+    into telemetry: each group's compile+execute is a timed ``phase``
+    span, every case closes with one ``element`` event (its headline
+    summary stats), traced-mode cases additionally stream their
+    per-turn events tagged with the case index, and the run ends with
+    fleet totals.  ``recorder=None`` runs the identical programs.
     """
     ncases = len(spec.cases)
     groups: dict[tuple, list[int]] = {}
     for i, case in enumerate(spec.cases):
         groups.setdefault(_group_key(case), []).append(i)
+
+    run = None
+    if recorder is not None:
+        run = recorder.new_run("sweep", mode=spec.mode, cases=ncases,
+                               groups=len(groups),
+                               use_kernel=spec.use_kernel)
 
     results: list = [None] * ncases
     traces: list = [None] * ncases
@@ -142,24 +155,46 @@ def run_sweep(spec: SweepSpec) -> "SweepResult":
         cases = [spec.cases[i] for i in idxs]
         problems, r0, theta = _stack_group(cases)
         framework = key[0]
-        if spec.mode == "refine":
-            dissat_fn = _kernel_dissat_fn() if spec.use_kernel else None
-            out = refine_batched(problems, r0, framework,
-                                 max_turns=spec.max_turns, tol=spec.tol,
-                                 dissat_fn=dissat_fn, theta=theta)
-            tr = None
-        elif spec.mode == "traced":
-            out, tr = refine_traced_batched(problems, r0, framework,
-                                            max_turns=spec.max_turns,
-                                            tol=spec.tol, theta=theta)
+
+        def _run_group():
+            if spec.mode == "refine":
+                dissat_fn = _kernel_dissat_fn() if spec.use_kernel else None
+                out = refine_batched(problems, r0, framework,
+                                     max_turns=spec.max_turns, tol=spec.tol,
+                                     dissat_fn=dissat_fn, theta=theta)
+                return out, None
+            if spec.mode == "traced":
+                return refine_traced_batched(problems, r0, framework,
+                                             max_turns=spec.max_turns,
+                                             tol=spec.tol, theta=theta)
+            return refine_simultaneous_batched(problems, r0, framework,
+                                               max_sweeps=spec.max_turns,
+                                               tol=spec.tol, theta=theta)
+
+        if recorder is None:
+            out, tr = _run_group()
         else:
-            out, tr = refine_simultaneous_batched(problems, r0, framework,
-                                                  max_sweeps=spec.max_turns,
-                                                  tol=spec.tol, theta=theta)
+            n, k = cases[0].problem.num_nodes, cases[0].problem.num_machines
+            label = f"sweep.{spec.mode}[{framework} n={n} k={k} B={len(idxs)}]"
+            with recorder.phase(label, run):
+                out, tr = _run_group()
+                jax.block_until_ready(out)
         for j, i in enumerate(idxs):
             results[i] = unstack_pytree(out, j)
             traces[i] = None if tr is None else unstack_pytree(tr, j)
-    return SweepResult(spec=spec, results=results, traces=traces)
+    result = SweepResult(spec=spec, results=results, traces=traces)
+    if recorder is not None:
+        if spec.mode == "traced":
+            for i, (case, tr) in enumerate(zip(spec.cases, traces)):
+                recorder.record_trace(run, tr, case.problem.node_weights,
+                                      case.problem.num_machines, batch=i)
+        for i, row in enumerate(result.summary()):
+            recorder.emit("element", run, batch=i, **row)
+        recorder.emit("run_end", run,
+                      num_moves=int(result.moves.sum()),
+                      num_turns=int(result.turns.max()) if ncases else 0,
+                      converged=bool(result.converged.all()))
+    return result
 
 
 @dataclasses.dataclass

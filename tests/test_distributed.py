@@ -319,7 +319,10 @@ def test_ledger_formulas():
         == s * (k * 16 + 2 * 4 * k + 4)
     assert accounting.sweep_payload_bytes(s, k, incremental=False) \
         == s * (k * 16 + 4 * k + 8)
-    assert accounting.init_potential_bytes(s, k) == s * (8 + 4 * k)
+    # traced setup reduces only the C_0/cut partial pair per shard — the
+    # loads are already replicated by the 4K+4 setup allreduce (the
+    # measured-wire cross-check below is what pins this down)
+    assert accounting.init_potential_bytes(s, k) == s * 8
     prob, _ = _problem(n=40, k=5, seed=4)
     stats = boundary_stats(prob, s)
     led = ledger_for_run(stats, k, rounds=10, traced=True)
@@ -336,6 +339,74 @@ def test_ledger_formulas():
                            incremental=False)
     assert led_r.trace_bytes == 10 * s * (8 + 4 * k)
     assert led_r.setup_bytes == accounting.setup_bytes(k)
+
+
+def _reconciled(prob, stats, k, wire, **flags):
+    led = ledger_for_run(stats, k, int(wire.rounds), **flags)
+    return accounting.reconcile(led, wire)
+
+
+def test_measured_wire_matches_ledger_incremental():
+    """measure_wire=True counters equal the analytic ledger exactly for
+    every incremental-protocol driver (payload AND setup)."""
+    prob, r0 = _problem(n=96, k=5, seed=7)
+    s, k = 6, 5
+    stats = boundary_stats(prob, s)
+
+    res, wire = refine_distributed(prob, r0, num_shards=s, measure_wire=True)
+    assert int(wire.rounds) == int(res.num_turns)
+    assert _reconciled(prob, stats, k, wire).ok
+
+    res_t, _, wire_t = refine_distributed_traced(
+        prob, r0, num_shards=s, max_turns=256, measure_wire=True)
+    assert int(wire_t.rounds) == int(res_t.num_turns)
+    assert _reconciled(prob, stats, k, wire_t, traced=True).ok
+
+    res_s, _, wire_s = refine_distributed_simultaneous(
+        prob, r0, num_shards=s, max_sweeps=64, measure_wire=True)
+    assert int(wire_s.rounds) == int(res_s.num_turns)
+    assert _reconciled(prob, stats, k, wire_s, simultaneous=True).ok
+
+    # the measurement does not perturb the run itself
+    res_plain = refine_distributed(prob, r0, num_shards=s)
+    np.testing.assert_array_equal(np.asarray(res.assignment),
+                                  np.asarray(res_plain.assignment))
+
+
+def test_measured_wire_matches_ledger_recompute():
+    """Same equality for the recompute protocol (per-turn partials on the
+    wire instead of candidate-borne deltas)."""
+    prob, r0 = _problem(n=96, k=5, seed=8)
+    s, k = 6, 5
+    stats = boundary_stats(prob, s)
+
+    _, wire = refine_distributed(prob, r0, num_shards=s, incremental=False,
+                                 measure_wire=True)
+    assert _reconciled(prob, stats, k, wire, incremental=False).ok
+
+    _, _, wire_t = refine_distributed_traced(
+        prob, r0, num_shards=s, max_turns=256, incremental=False,
+        measure_wire=True)
+    assert _reconciled(prob, stats, k, wire_t, traced=True,
+                       incremental=False).ok
+
+    _, _, wire_s = refine_distributed_simultaneous(
+        prob, r0, num_shards=s, max_sweeps=64, incremental=False,
+        measure_wire=True)
+    assert _reconciled(prob, stats, k, wire_s, simultaneous=True,
+                       incremental=False).ok
+
+
+def test_measured_wire_shard_map_and_round_mismatch():
+    prob, r0 = _problem(n=60, k=5, seed=9)
+    stats = boundary_stats(prob, 1)
+    _, wire = refine_distributed_shard_map(prob, r0, num_shards=1,
+                                           measure_wire=True)
+    assert _reconciled(prob, stats, 5, wire).ok
+    # a ledger built for the wrong round count is rejected loudly
+    led = ledger_for_run(stats, 5, int(wire.rounds) + 1)
+    with pytest.raises(ValueError, match="rounds"):
+        accounting.reconcile(led, wire)
 
 
 # ---------------------------------------------------------------------------

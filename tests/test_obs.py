@@ -1,0 +1,319 @@
+"""Run telemetry layer contracts (DESIGN.md §14).
+
+Three properties are load-bearing and pinned here:
+
+  1. **Disabled mode is free** — every instrumented entry point called
+     with ``recorder=None`` produces bitwise-identical results to the
+     telemetry-enabled call, and its jaxpr contains ZERO host callbacks
+     (§14.3's overhead contract).
+  2. **The log is sufficient** — a run can be replayed from its event
+     stream alone: the report module's replay reconstructs the final
+     loads, move counts and potential descent that the live run
+     produced, and round-trips through the JSONL sink + report CLI.
+  3. **Measured wire == ledger** — distributed runs under a recorder
+     carry a ``wire`` event whose measured bytes equal the §9.3 analytic
+     prediction exactly (the deep per-driver grid lives in
+     ``tests/test_distributed.py``; here the event-stream side is
+     checked).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import make_problem
+from repro.core.refine import refine, refine_simultaneous, refine_traced
+from repro.distributed import refine_distributed
+from repro.graphs.generators import random_degree_graph, random_weights
+from repro.obs import (EVENT_KINDS, JsonlSink, MemorySink, Recorder,
+                       chrome_trace, make_event, read_jsonl, validate_event)
+from repro.obs.report import check_run, main as report_main, replay_run, \
+    split_runs
+
+N, K = 48, 4
+
+
+@pytest.fixture(scope="module")
+def instance():
+    adj = random_degree_graph(N, seed=3)
+    b, c = random_weights(adj, seed=4, mean=5.0)
+    prob = make_problem(c, b, np.ones(K) / K, mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(5).integers(0, K, N), jnp.int32)
+    return prob, r0
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# event schema
+# ---------------------------------------------------------------------------
+
+def test_event_schema_registry():
+    assert {"run_start", "turn", "sweep", "tick", "des_refine", "wire",
+            "drift", "phase", "element", "run_end"} <= set(EVENT_KINDS)
+    event = make_event("turn", "r0000", t=0, moved=True, c0=1.0, ct0=2.0)
+    validate_event(event)
+    with pytest.raises(ValueError):
+        make_event("turn", "r0000", t=0)          # missing required fields
+    with pytest.raises(ValueError):
+        validate_event({"kind": "nope", "run": "r0000"})
+
+
+def test_events_are_json_serializable(instance):
+    prob, r0 = instance
+    rec = Recorder()
+    refine_traced(prob, r0, "c", max_turns=64, recorder=rec)
+    for event in rec.events:
+        json.loads(json.dumps(event))
+
+
+# ---------------------------------------------------------------------------
+# disabled mode: bitwise identical, zero callbacks
+# ---------------------------------------------------------------------------
+
+def test_disabled_mode_results_bitwise(instance):
+    prob, r0 = instance
+    rec = Recorder()
+    for fn, kwargs in ((refine, {"max_turns": 500}),
+                       (refine_traced, {"max_turns": 64}),
+                       (refine_simultaneous, {"max_sweeps": 16})):
+        base = fn(prob, r0, "c", **kwargs)
+        inst = fn(prob, r0, "c", **kwargs, recorder=rec)
+        assert _tree_equal(base, inst), fn.__name__
+    assert any(e["kind"] == "run_end" for e in rec.events)
+
+
+def test_disabled_refine_jaxpr_has_no_callbacks(instance):
+    prob, r0 = instance
+    jaxpr = str(jax.make_jaxpr(
+        lambda r: refine(prob, r, "c", max_turns=64))(r0))
+    assert "callback" not in jaxpr
+
+
+# ---------------------------------------------------------------------------
+# replay: the log alone reproduces the run
+# ---------------------------------------------------------------------------
+
+def test_refine_replay_matches_result(instance):
+    prob, r0 = instance
+    rec = Recorder()
+    result = refine(prob, r0, "c", max_turns=500, recorder=rec)
+    summary = replay_run(rec.events)
+    assert check_run(summary) == []
+    assert summary["accepted"] == int(result.num_moves)
+    np.testing.assert_allclose(summary["loads"],
+                               np.asarray(result.loads, np.float64),
+                               rtol=1e-5, atol=1e-3)
+    # carried C_0 descends monotonically for the sequential game
+    pots = [c0 for _, c0, _ in summary["potentials"]]
+    assert pots and pots[-1] <= pots[0]
+
+
+def test_traced_replay_and_load_cv_trace(instance):
+    prob, r0 = instance
+    rec = Recorder()
+    refine_traced(prob, r0, "c", max_turns=96, recorder=rec)
+    summary = replay_run(rec.events)
+    assert check_run(summary) == []
+    cv = summary["cv_trace"]
+    assert cv.size and cv[-1] < cv[0]     # §5: refinement balances loads
+
+
+def test_distributed_wire_event_reconciles(instance):
+    prob, r0 = instance
+    rec = Recorder()
+    base = refine_distributed(prob, r0, "c", num_shards=K, max_turns=500)
+    inst = refine_distributed(prob, r0, "c", num_shards=K, max_turns=500,
+                              recorder=rec)
+    assert _tree_equal(base, inst)
+    wires = [e for e in rec.events if e["kind"] == "wire"]
+    assert len(wires) == 1 and wires[0]["ok"]
+    assert wires[0]["measured_payload"] == wires[0]["predicted_payload"]
+    assert wires[0]["measured_setup"] == wires[0]["predicted_setup"]
+    assert check_run(replay_run(rec.events)) == []
+
+
+def test_des_telemetry_bitwise_and_replay():
+    from repro.des.engine import (DESConfig, make_initial_state,
+                                  run_simulation)
+    from repro.des.workload import flooded_packet_workload
+    from repro.graphs.generators import preferential_attachment
+
+    n, k, threads = 20, 3, 8
+    adj = preferential_attachment(n, 5, m=2)
+    spec = flooded_packet_workload(adj, 9, num_threads=threads,
+                                   num_windows=2, scope=2,
+                                   window_sim_time=40.0, max_per_lp=3)
+    cfg = DESConfig(num_lps=n, num_machines=k, num_threads=threads,
+                    event_capacity=48, history_capacity=96,
+                    inter_delay=6, intra_delay=1, trace_stride=10,
+                    max_ticks=20_000, machine_speeds=(1.0, 0.7, 0.5),
+                    refine_freq=80, refine_theta_scale=5.0,
+                    migration_freeze=0.25)
+    m0 = jnp.asarray(np.arange(n) % k, jnp.int32)
+    state0 = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
+    adjj = jnp.asarray(adj, jnp.float32)
+
+    base = run_simulation(cfg, adjj, state0)
+    rec = Recorder()
+    inst = run_simulation(cfg, adjj, state0, recorder=rec)
+    assert _tree_equal(base, inst)
+
+    summary = replay_run(rec.events)
+    assert check_run(summary) == []
+    assert summary["ticks"] > 0 and summary["des_refines"] > 0
+    ticks = [e for e in rec.events if e["kind"] == "tick"]
+    assert all(e["t"] % cfg.trace_stride == 0 for e in ticks)
+    assert summary["end"]["converged"]
+
+
+def test_sweep_telemetry_results_identical(instance):
+    from repro import sweeps
+
+    prob, r0 = instance
+    cases = [sweeps.SweepCase(problem=prob, assignment=r0, framework=fw,
+                              label=fw) for fw in ("c", "ct")]
+    spec = sweeps.make_spec(cases, mode="traced", max_turns=64)
+    base = sweeps.run_sweep(spec)
+    rec = Recorder()
+    inst = sweeps.run_sweep(spec, recorder=rec)
+    for r_base, r_inst in zip(base.results, inst.results):
+        assert _tree_equal(r_base, r_inst)
+
+    elements = [e for e in rec.events if e["kind"] == "element"]
+    assert [e["batch"] for e in elements] == [0, 1]
+    turns = [e for e in rec.events if e["kind"] == "turn"]
+    assert turns and {e["batch"] for e in turns} == {0, 1}
+    assert check_run(replay_run(rec.events)) == []
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip + report CLI
+# ---------------------------------------------------------------------------
+
+def test_jsonl_roundtrip_through_report_cli(instance, tmp_path, capsys):
+    prob, r0 = instance
+    log = tmp_path / "run.jsonl"
+    rec = Recorder([JsonlSink(log)])
+    refine(prob, r0, "c", max_turns=500, recorder=rec)
+    refine_distributed(prob, r0, "ct", num_shards=K, max_turns=500,
+                       recorder=rec)
+    rec.close()
+    events = read_jsonl(log)
+    assert events == rec.events
+    assert len(split_runs(events)) == 2
+
+    assert report_main([str(log), "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "[refine]" in out and "[distributed]" in out
+    assert "wire [OK]" in out
+
+    assert report_main([str(log), "--json"]) == 0
+    for line in capsys.readouterr().out.strip().splitlines():
+        json.loads(line)
+
+
+def test_report_cli_namespaces_multiple_logs(instance, tmp_path, capsys):
+    """Distinct logs reuse run ids (r0000, ...); reporting several at once
+    must not merge unrelated runs."""
+    prob, r0 = instance
+    paths = []
+    for name in ("a", "b"):
+        path = tmp_path / f"{name}.jsonl"
+        rec = Recorder([JsonlSink(path)])
+        refine(prob, r0, "c", max_turns=500, recorder=rec)
+        rec.close()
+        paths.append(str(path))
+    assert report_main([*paths, "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "run a:r0000" in out and "run b:r0000" in out
+
+
+def test_report_cli_check_fails_on_bad_log(tmp_path, capsys):
+    log = tmp_path / "bad.jsonl"
+    events = [
+        make_event("run_start", "r0000", runtime="distributed",
+                   n=8, k=2, framework="c"),
+        make_event("wire", "r0000", rounds=3, measured_payload=100,
+                   predicted_payload=96, measured_setup=12,
+                   predicted_setup=12, ok=False),
+        make_event("run_end", "r0000"),
+    ]
+    with JsonlSink(log) as sink:
+        for event in events:
+            sink.write(event)
+    assert report_main([str(log), "--check"]) == 1
+    assert "wire" in capsys.readouterr().err
+
+
+def test_chrome_trace_export(instance, tmp_path):
+    prob, r0 = instance
+    log = tmp_path / "run.jsonl"
+    rec = Recorder([JsonlSink(log)])
+    refine(prob, r0, "c", max_turns=500, recorder=rec)
+    rec.close()
+    trace_path = tmp_path / "trace.json"
+    assert report_main([str(log), "--trace", str(trace_path)]) == 0
+    trace = json.loads(trace_path.read_text())
+    slices = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert slices and all(e["dur"] >= 0 for e in slices)
+    assert chrome_trace(rec.events)["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# sinks + recorder mechanics
+# ---------------------------------------------------------------------------
+
+def test_memory_sink_fanout_and_phase():
+    rec = Recorder([MemorySink(), MemorySink()])
+    run = rec.new_run("refine", n=8, k=2, framework="c")
+    with rec.phase("unit.test", run):
+        pass
+    rec.emit("run_end", run)
+    for sink in rec.sinks:
+        assert [e["kind"] for e in sink.events] == \
+            ["run_start", "phase", "run_end"]
+    assert rec.events == rec.sinks[0].events
+
+
+def test_timed_dissat_fn_eager_vs_traced(instance):
+    from repro.kernels.ops import make_timed_dissat_fn
+
+    prob, r0 = instance
+    rec = Recorder()
+    agg = jnp.zeros((N, K), jnp.float32)
+    loads = jnp.zeros(K, jnp.float32).at[r0].add(prob.node_weights)
+
+    def plain_fn(aggregate, assignment, node_weights, loads, speeds, mu,
+                 framework, total_weight, theta=None):
+        del aggregate, framework, theta
+        dissat = loads[assignment] / speeds[assignment]
+        return dissat, jnp.broadcast_to(jnp.argmin(loads), dissat.shape)
+
+    timed_fn = make_timed_dissat_fn(plain_fn, rec, name="unit.dissat")
+
+    def call(fn, loads_arg):
+        return fn(agg, r0, prob.node_weights, loads_arg, prob.speeds,
+                  prob.mu, "c", jnp.sum(prob.node_weights))
+
+    base = call(plain_fn, loads)
+    eager = call(timed_fn, loads)
+    assert _tree_equal(base, eager)
+    assert [e["name"] for e in rec.events if e["kind"] == "phase"] \
+        == ["unit.dissat"]
+
+    # under tracing the wrapper passes straight through: same jaxpr, no
+    # extra phase events
+    before = len(rec.events)
+    jaxpr_timed = str(jax.make_jaxpr(lambda l: call(timed_fn, l))(loads))
+    jaxpr_plain = str(jax.make_jaxpr(lambda l: call(plain_fn, l))(loads))
+    assert jaxpr_timed == jaxpr_plain
+    assert len(rec.events) == before
