@@ -200,6 +200,13 @@ def _schedules(quick: bool):
         "slowdown-recover": scenarios.slowdown(
             k, machine=0, at_tick=400, factor=0.25,
             recover_tick=1600, base=BASE_SPEEDS),
+        # machine 0 truly DOWN (speed exactly 0, DESIGN.md §15.5): its
+        # queue freezes and holds GVT back; refinement sees ~zero
+        # capacity and re-homes the LPs, so the refined modes ride out
+        # what the static partition must wait through
+        "fail-recover": scenarios.true_failure(
+            k, machine=0, fail_tick=400, recover_tick=1600,
+            base=BASE_SPEEDS),
         # churn slow enough that a refinement cadence can track it —
         # sub-cadence churn is unlearnable by ANY repartitioner
         "random-churn": scenarios.random_churn(

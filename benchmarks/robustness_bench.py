@@ -1,0 +1,309 @@
+"""Fault-tolerance benchmark: recovery time + wire overhead (DESIGN.md §15).
+
+Four gates, all asserted on every run (CI runs ``--quick``):
+
+  1. **Do no harm** — pushing an all-clear ``zero_fault_plan`` through
+     the faulty drivers reproduces the fault-free drivers bitwise
+     (assignment/loads everywhere; the sweep driver's self-move counters
+     are the one documented exemption, DESIGN.md §15.1).
+  2. **Recover or raise** — every cell of a fault-severity grid either
+     closes with ``recovered=True`` within the ≤ 1e-3 repair budget or
+     raises a typed :class:`FaultToleranceError`; a permanent outage
+     must raise :class:`DeadShardError`.
+  3. **Measured wire, byte-exact** — every fault-injected run's
+     retry/repair traffic is accumulated on device and must reconcile
+     byte-exactly against the host-side plan ledger
+     (``accounting.ledger_for_run(..., fault_bytes=...)``).
+  4. **O(K) stays O(K)** — the steady-state per-round exchange under
+     retry-only fault load is byte-identical across a 4x N sweep; fault
+     traffic rides on top of the O(K) protocol, it never inflates the
+     per-turn message size.
+
+Headline metrics: rounds-to-recovery (first clear round after the last
+fault, from the degraded-mode schedule) and wire overhead fraction
+(fault bytes / total payload) per severity.  Results land in
+BENCH_robustness.json (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.problem import make_problem
+from repro.distributed import (DeadShardError, FaultToleranceError, faults,
+                               ledger_for_run, reconcile, refine_distributed,
+                               refine_distributed_simultaneous,
+                               refine_distributed_traced, zero_fault_plan)
+from repro.distributed.views import boundary_stats
+from repro.graphs.generators import random_degree_graph, random_weights
+
+from .common import (cli_telemetry, section, table, telemetry_recorder,
+                     write_bench_json)
+
+K, S = 4, 4
+PLAN_ROUNDS = 128
+
+#: severity grid: probabilities per (round, shard); "outage" adds real
+#: shard downtime, "nan-storm" is pure carried-state bit corruption
+SEVERITIES = (
+    ("light", dict(p_lost=0.05, p_dup=0.02)),
+    ("moderate", dict(p_lost=0.2, p_dup=0.08, p_omit=0.05, p_corrupt=0.02)),
+    ("outage", dict(p_down=0.04, down_length=(2, 5), p_lost=0.2,
+                    p_omit=0.05, p_corrupt=0.04)),
+    ("nan-storm", dict(p_corrupt=0.15, nan_frac=1.0)),
+)
+
+
+def _instance(n: int, seed: int = 0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    prob = make_problem(c, b, np.ones(K) / K, mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, K, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def _plan(seed: int, n: int, **kwargs):
+    return faults.make_fault_plan(PLAN_ROUNDS, S, seed,
+                                  num_machines=K, num_nodes=n, **kwargs)
+
+
+def check_zero_fault_bitwise(n: int):
+    """Gate 1: the fault-free path is untouched, driver by driver."""
+    prob, r0 = _instance(n)
+    zp = zero_fault_plan(PLAN_ROUNDS, S)
+    out = {}
+
+    ref = refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S)
+    res, rep = refine_distributed(prob, r0, costs.C_FRAMEWORK,
+                                  num_shards=S, fault_plan=zp)
+    assert np.array_equal(np.asarray(ref.assignment),
+                          np.asarray(res.assignment)), "plain: assignment"
+    assert np.array_equal(np.asarray(ref.loads), np.asarray(res.loads))
+    assert int(ref.num_moves) == int(res.num_moves), "plain: moves"
+    assert rep.recovered and rep.retries == 0
+    out["plain"] = {"turns": int(res.num_turns), "bitwise": True}
+
+    ref, rtr = refine_distributed_traced(prob, r0, costs.C_FRAMEWORK,
+                                         num_shards=S, max_turns=256)
+    res, tr, rep = refine_distributed_traced(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_turns=256,
+        fault_plan=zp)
+    assert np.array_equal(np.asarray(ref.assignment),
+                          np.asarray(res.assignment)), "traced: assignment"
+    for a, b in zip(rtr, tr):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "traced: trace"
+    out["traced"] = {"turns": int(res.num_turns), "bitwise": True}
+
+    ref, (c0s, ct0s, _) = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96)
+    res, (f0s, ft0s, _), rep = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96,
+        fault_plan=zp)
+    # sweep exemption (DESIGN.md §15.1): ULP fusion noise can elect
+    # zero-gain SELF-moves under the baseline election, so num_moves /
+    # num_turns are not compared; the state and potential traces are.
+    assert np.array_equal(np.asarray(ref.assignment),
+                          np.asarray(res.assignment)), "sweep: assignment"
+    assert np.array_equal(np.asarray(ref.loads), np.asarray(res.loads))
+    assert np.array_equal(np.asarray(c0s), np.asarray(f0s)), "sweep: c0s"
+    assert np.array_equal(np.asarray(ct0s), np.asarray(ft0s))
+    out["sweep"] = {"turns": int(res.num_turns), "bitwise": True,
+                    "exempt": ["num_moves", "num_turns", "converged"]}
+    return out
+
+
+def severity_grid(n: int, seeds, recorder=None):
+    """Gates 2+3: recover-or-raise + byte-exact wire, per severity."""
+    prob, r0 = _instance(n)
+    stats = boundary_stats(prob, S)
+    msg = faults.message_bytes(traced=False, simultaneous=False,
+                               num_machines=K)
+    rows, results = [], []
+    for name, kwargs in SEVERITIES:
+        for seed in seeds:
+            plan = _plan(seed, n, **kwargs)
+            # instrument one cell that cannot hit DeadShardError (no
+            # p_down) so the CI telemetry replay sees a recovered run
+            rec = (recorder if name == "moderate" and seed == seeds[0]
+                   else None)
+            entry = {"severity": name, "seed": seed}
+            try:
+                res, wire, report = refine_distributed(
+                    prob, r0, costs.C_FRAMEWORK, num_shards=S,
+                    fault_plan=plan, measure_wire=True, recorder=rec)
+            except FaultToleranceError as err:
+                entry.update(verdict=type(err).__name__,
+                             recovered=False,
+                             report=err.report._asdict()
+                             if err.report else None)
+                results.append(entry)
+                rows.append([name, seed, type(err).__name__, "-", "-", "-"])
+                continue
+            rounds = int(res.num_turns)
+            extra = faults.plan_extra_bytes(plan, rounds, msg)
+            led = ledger_for_run(stats, K, rounds, fault_bytes=extra)
+            check = reconcile(led, wire)
+            assert check.ok, f"{name}/{seed}: wire mismatch {check}"
+            assert report.recovered, f"{name}/{seed}: not recovered " \
+                f"(drift {report.recovery_drift:g}) and no raise"
+            overhead = extra / max(int(wire.payload_bytes), 1)
+            entry.update(
+                verdict="recovered", recovered=True, rounds=rounds,
+                recovery_round=report.recovery_round,
+                recovery_drift=report.recovery_drift,
+                retries=report.retries, repairs=report.repairs,
+                repaired_cols=report.repaired_cols,
+                down_rounds=report.down_rounds,
+                quarantined_rounds=report.quarantined_rounds,
+                payload_bytes=int(wire.payload_bytes),
+                fault_bytes=extra, wire_overhead=overhead,
+                wire_reconciled=True)
+            results.append(entry)
+            rows.append([name, seed, "recovered", rounds,
+                         report.recovery_round,
+                         f"{100 * overhead:.1f}%"])
+    table(["severity", "seed", "verdict", "rounds", "recovery@",
+           "wire overhead"], rows)
+    recovered = [e for e in results if e.get("recovered")]
+    assert recovered, "no grid cell recovered — fault layer is broken"
+    return results
+
+
+def check_dead_shard_raises(n: int):
+    """Gate 2b: an unrecoverable outage must raise, never return."""
+    prob, r0 = _instance(n)
+    rounds = PLAN_ROUNDS
+    z = np.zeros((rounds, S), bool)
+    down = z.copy()
+    down[:, 0] = True
+    plan = faults._assemble(down, z, np.zeros((rounds, S), np.int32), z, z,
+                            np.zeros((rounds, S), np.int32),
+                            np.zeros((rounds, S), np.float32),
+                            faults.DEFAULT_DEGRADED, 0)
+    try:
+        refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S,
+                           fault_plan=plan, max_turns=rounds // 2)
+    except DeadShardError as err:
+        assert err.report is not None and err.report.dead
+        return {"raised": "DeadShardError", "dead": True}
+    raise AssertionError("permanent shard outage did not raise")
+
+
+def recovery_vs_outage_length(n: int, lengths):
+    """Headline: rounds-to-recovery as a single outage grows longer.
+
+    One shard goes down at round 8 for exactly L rounds; the degraded
+    schedule then prices the catch-up (replay within the staleness
+    window, full resync beyond it) and reports the first all-clear
+    round.  Recovery cost grows with L; the budget verdict must hold at
+    every length."""
+    prob, r0 = _instance(n)
+    msg = faults.message_bytes(traced=False, simultaneous=False,
+                               num_machines=K)
+    rows, results = [], []
+    for length in lengths:
+        z = np.zeros((PLAN_ROUNDS, S), bool)
+        down = z.copy()
+        down[8:8 + length, 0] = True
+        plan = faults._assemble(down, z,
+                                np.zeros((PLAN_ROUNDS, S), np.int32), z, z,
+                                np.zeros((PLAN_ROUNDS, S), np.int32),
+                                np.zeros((PLAN_ROUNDS, S), np.float32),
+                                faults.DEFAULT_DEGRADED, n)
+        res, wire, report = refine_distributed(
+            prob, r0, costs.C_FRAMEWORK, num_shards=S, fault_plan=plan,
+            measure_wire=True)
+        assert report.recovered, f"L={length}: drift {report.recovery_drift}"
+        extra = faults.plan_extra_bytes(plan, int(res.num_turns), msg)
+        entry = {"outage_rounds": length,
+                 "recovery_round": report.recovery_round,
+                 "rounds_to_recover": (report.recovery_round - 8
+                                       if report.recovery_round else None),
+                 "total_rounds": int(res.num_turns),
+                 "recovery_drift": report.recovery_drift,
+                 "fault_bytes": extra,
+                 "full_resync": length > faults.DEFAULT_DEGRADED
+                 .max_staleness}
+        results.append(entry)
+        rows.append([length, report.recovery_round,
+                     entry["rounds_to_recover"], extra,
+                     "resync" if entry["full_resync"] else "replay"])
+    table(["outage L", "recovery@", "rounds to recover", "fault bytes",
+           "repair mode"], rows)
+    return results
+
+
+def wire_flatness(sizes):
+    """Gate 4: per-round payload under retry load is flat in N (byte-
+    identical — the O(K) protocol claim survives the fault layer)."""
+    per_round, rows, results = [], [], []
+    for n in sizes:
+        prob, r0 = _instance(n)
+        plan = _plan(5, n, p_lost=0.25)       # retry-only: no resyncs
+        res, wire, report = refine_distributed(
+            prob, r0, costs.C_FRAMEWORK, num_shards=S, fault_plan=plan,
+            measure_wire=True)
+        rounds = int(res.num_turns)
+        extra = faults.plan_extra_bytes(plan, rounds, faults.message_bytes(
+            traced=False, simultaneous=False, num_machines=K))
+        led = ledger_for_run(boundary_stats(prob, S), K, rounds,
+                             fault_bytes=extra)
+        assert reconcile(led, wire).ok
+        per_round.append(led.per_round_bytes)
+        results.append({"n": n, "rounds": rounds,
+                        "per_round_bytes": led.per_round_bytes,
+                        "fault_bytes": extra,
+                        "retries": report.retries})
+        rows.append([n, rounds, led.per_round_bytes, extra, report.retries])
+    assert len(set(per_round)) == 1, \
+        f"per-round payload is not flat across N: {per_round}"
+    table(["N", "rounds", "per-round B", "fault B", "retries"], rows)
+    print("  per-round payload byte-identical across the N sweep: "
+          "retry traffic is O(K) per event, never O(N)")
+    return results
+
+
+def run(quick: bool = False, telemetry=None):
+    n = 96 if quick else 192
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    lengths = (2, 4, 8) if quick else (2, 4, 8, 16)
+    sizes = (64, 128, 256) if quick else (64, 128, 256, 512)
+    recorder = telemetry_recorder(telemetry, "robustness")
+
+    section("Gate 1: zero-fault plans are bitwise no-ops")
+    bitwise = check_zero_fault_bitwise(n)
+    for mode, cell in bitwise.items():
+        print(f"  [{mode}] {cell['turns']} turns, bitwise"
+              + (f" (exempt: {', '.join(cell['exempt'])})"
+                 if "exempt" in cell else ""))
+
+    section("Gates 2+3: severity grid — recover-or-raise, wire byte-exact")
+    grid = severity_grid(n, seeds, recorder=recorder)
+
+    section("Gate 2b: permanent outage raises DeadShardError")
+    dead = check_dead_shard_raises(n)
+    print(f"  raised {dead['raised']} with report.dead=True")
+
+    section("Recovery time vs outage length")
+    recovery = recovery_vs_outage_length(n, lengths)
+
+    section("Gate 4: per-round wire stays O(K) under fault load")
+    flat = wire_flatness(sizes)
+
+    if recorder is not None:
+        recorder.close()
+    payload = {"bitwise_gate": bitwise, "grid": grid,
+               "dead_shard_gate": dead, "recovery": recovery,
+               "wire_flatness": flat,
+               "backend_devices": jax.device_count()}
+    write_bench_json("robustness", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv, telemetry=cli_telemetry(sys.argv))

@@ -18,8 +18,8 @@ import traceback
 
 from . import (baselines_compare, batch_study, distributed_bench,
                dynamics_bench, fig7_8_simtime, fig9_10_load_traces,
-               kernel_bench, planner_bench, refine_bench, roofline,
-               sparse_bench, sweep_bench, table1_cost_frameworks,
+               kernel_bench, planner_bench, refine_bench, robustness_bench,
+               roofline, sparse_bench, sweep_bench, table1_cost_frameworks,
                train_bench)
 from .common import write_bench_json
 
@@ -38,14 +38,15 @@ SUITES = {
     "dynamics": dynamics_bench.run,
     "sweeps": sweep_bench.run,
     "sparse": sparse_bench.run,
+    "robustness": robustness_bench.run,
 }
 
 # these write their BENCH_<name>.json themselves (they must also do so
 # when invoked standalone by the CI smoke jobs)
-_SELF_WRITING = {"refine", "dynamics", "sweeps", "sparse"}
+_SELF_WRITING = {"refine", "dynamics", "sweeps", "sparse", "robustness"}
 
 # these accept a telemetry dir and emit JSONL run logs (DESIGN.md §14)
-_TELEMETRY = {"refine", "sweeps", "sparse", "distributed"}
+_TELEMETRY = {"refine", "sweeps", "sparse", "distributed", "robustness"}
 
 
 def main() -> None:

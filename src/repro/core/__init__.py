@@ -59,12 +59,15 @@ from .initial import (  # noqa: F401
     initial_partition,
     select_focal_nodes,
 )
+from . import checkpoint  # noqa: F401
 from .problem import (  # noqa: F401
     PartitionProblem,
     PartitionState,
+    ProblemValidationError,
     machine_loads,
     make_problem,
     make_state,
+    validate_assignment,
 )
 from .sparse import (  # noqa: F401
     SparseProblem,

@@ -256,3 +256,49 @@ def resync(problem: AnyProblem, agg: AggregateState
 def drift(problem: AnyProblem, agg: AggregateState) -> Array:
     """Max absolute deviation of the carried state from a rebuild."""
     return resync(problem, agg)[1]
+
+
+def repair_columns(problem: AnyProblem, agg: AggregateState, tol: float
+                   ) -> tuple[AggregateState, Array, Array]:
+    """Active repair (DESIGN.md §15.3): rebuild from scratch like
+    :func:`resync`, but patch ONLY the quantities that actually deviate
+    beyond ``tol`` — per machine-column for the (N, K) aggregate, per
+    entry for the loads, and per scalar (relative) for the potentials.
+    Clean state passes through bitwise untouched, so a repair boundary
+    on an undrifted carry is a no-op rather than a wholesale rewrite.
+
+    Detection predicates are NaN-safe (``~(dev <= tol)`` flags NaN and
+    inf as corrupt), so bit-corrupted columns are always caught.
+
+    Returns ``(repaired, observed, cols)``: the patched state, the max
+    pre-repair deviation (NaN mapped to inf — same convention as the
+    ``verify_every`` drift record), and the number of aggregate columns
+    patched.
+    """
+    fresh = init_aggregate_state(problem, agg.assignment)
+    inf_dev = lambda x: jnp.nan_to_num(x, nan=jnp.inf, posinf=jnp.inf)
+
+    col_dev = jnp.max(jnp.abs(agg.aggregate - fresh.aggregate), axis=0)  # (K,)
+    col_bad = ~(col_dev <= tol)
+    aggregate = jnp.where(col_bad[None, :], fresh.aggregate, agg.aggregate)
+
+    load_dev = jnp.abs(agg.loads - fresh.loads)
+    load_bad = ~(load_dev <= tol)
+    loads = jnp.where(load_bad, fresh.loads, agg.loads)
+
+    # Potentials are O(N^2)-sized f32 sums — compare relatively.
+    def patch_scalar(live, ref):
+        dev = jnp.abs(live - ref)
+        bad = ~(dev <= tol * jnp.maximum(1.0, jnp.abs(ref)))
+        return jnp.where(bad, ref, live), inf_dev(dev)
+
+    c0, c0_dev = patch_scalar(agg.c0, fresh.c0)
+    ct0, ct0_dev = patch_scalar(agg.ct0, fresh.ct0)
+
+    observed = jnp.maximum(
+        jnp.max(inf_dev(col_dev)),
+        jnp.maximum(jnp.max(inf_dev(load_dev)),
+                    jnp.maximum(c0_dev, ct0_dev)))
+    repaired = AggregateState(assignment=agg.assignment, loads=loads,
+                              aggregate=aggregate, c0=c0, ct0=ct0)
+    return repaired, observed, jnp.sum(col_bad.astype(jnp.int32))

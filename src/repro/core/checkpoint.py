@@ -1,0 +1,86 @@
+"""Checkpoint/heal for the carried aggregate state (DESIGN.md §15.3).
+
+The incremental drivers carry an :class:`~repro.core.aggregate
+.AggregateState` across thousands of rank-1 updates.  ``verify_every``
+(PR 2) *observes* drift; this module *acts* on it: a :class:`Checkpoint`
+is a cheap snapshot of the carry (a pytree alias — zero copies until a
+donation or an update forces one), and :func:`heal` is the recovery
+step the ``repair_every`` boundary of :func:`repro.core.refine.refine`
+runs inside a ``lax.cond``:
+
+1. **Rollback** — if any float leaf of the live carry is non-finite
+   (bit corruption, a NaN that leaked through the cost assembly), the
+   whole carry is replaced by the last checkpoint.  A NaN cannot be
+   patched column-wise because it poisons every reduction that reads
+   it, so the only sound base state is the last known-good one.
+2. **Column repair** — :func:`repro.core.aggregate.repair_columns`
+   rebuilds the oracle state from the (possibly rolled-back)
+   assignment and patches only the aggregate columns / load entries /
+   potentials that deviate beyond ``tol``.  An undrifted carry passes
+   through bitwise untouched.
+
+Refinement then resumes from the repaired state: moves replayed since
+the checkpoint are simply re-discovered by the game (every turn is a
+best response to the *current* state, so rollback costs extra turns,
+never correctness — Thm. 4.1 descent still holds from the repaired
+state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregate as agg_mod
+from .aggregate import AggregateState
+
+Array = jax.Array
+
+# Matches the repo-wide drift budget (obs.recorder.DRIFT_BUDGET and the
+# recover-or-raise budget of repro.distributed.faults).
+DEFAULT_REPAIR_TOL = 1e-3
+
+
+class Checkpoint(NamedTuple):
+    """A known-good carry snapshot plus the turn it was taken at."""
+    state: AggregateState
+    turn: Array                 # int32 — turn counter at snapshot time
+
+
+def take(agg: AggregateState, turn) -> Checkpoint:
+    """Snapshot the carry.  O(1) at trace time (pytree alias)."""
+    return Checkpoint(state=agg, turn=jnp.asarray(turn, jnp.int32))
+
+
+def restore(ckpt: Checkpoint) -> AggregateState:
+    """The checkpointed carry (symmetry helper for :func:`take`)."""
+    return ckpt.state
+
+
+def is_healthy(agg: AggregateState) -> Array:
+    """True iff every float leaf of the carry is finite."""
+    ok = jnp.ones((), bool)
+    for leaf in jax.tree.leaves(agg):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def heal(problem, agg: AggregateState, ckpt: Checkpoint,
+         tol: float = DEFAULT_REPAIR_TOL
+         ) -> tuple[AggregateState, Array, Array, Array]:
+    """Rollback-if-poisoned, then column repair (module docstring).
+
+    Returns ``(repaired, observed, cols, rolled_back)`` — the healed
+    carry, the max pre-repair deviation (inf when the live carry was
+    rolled back over a NaN), the number of aggregate columns patched,
+    and whether the rollback branch fired.
+    """
+    healthy = is_healthy(agg)
+    base = jax.tree.map(
+        lambda live, saved: jnp.where(healthy, live, saved),
+        agg, ckpt.state)
+    repaired, observed, cols = agg_mod.repair_columns(problem, base, tol)
+    observed = jnp.where(healthy, observed, jnp.inf)
+    return repaired, observed, cols, ~healthy

@@ -24,6 +24,20 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+class ProblemValidationError(ValueError):
+    """Typed error for malformed problem inputs (DESIGN.md §15.7).
+
+    Raised by the ``validate()`` methods and
+    :func:`validate_assignment` instead of letting bad inputs fail deep
+    inside jit as shape errors or NaN-poisoned results.  Value checks
+    (NaN, negativity, symmetry, range) run only on concrete arrays —
+    under a trace only the shape checks apply."""
+
+
+def _is_concrete(*arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PartitionProblem:
@@ -41,10 +55,42 @@ class PartitionProblem:
         return self.speeds.shape[0]
 
     def validate(self) -> None:
+        """Raise :class:`ProblemValidationError` on malformed fields."""
+        import numpy as np
         n = self.num_nodes
-        assert self.adjacency.shape == (n, n), self.adjacency.shape
-        assert self.node_weights.shape == (n,), self.node_weights.shape
-        assert self.speeds.ndim == 1
+        if self.adjacency.ndim != 2 \
+                or self.adjacency.shape != (n, n):
+            raise ProblemValidationError(
+                f"adjacency must be square (N, N); got "
+                f"{self.adjacency.shape}")
+        if self.node_weights.shape != (n,):
+            raise ProblemValidationError(
+                f"node_weights shape {self.node_weights.shape} does not "
+                f"match N={n}")
+        if self.speeds.ndim != 1:
+            raise ProblemValidationError(
+                f"speeds must be (K,); got shape {self.speeds.shape}")
+        if not _is_concrete(self.adjacency, self.node_weights, self.speeds):
+            return
+        adj = np.asarray(self.adjacency)
+        if np.isnan(adj).any():
+            raise ProblemValidationError("adjacency contains NaN edge "
+                                         "weights")
+        if (adj < 0).any():
+            raise ProblemValidationError("adjacency contains negative edge "
+                                         "weights")
+        if not np.array_equal(adj, adj.T):
+            raise ProblemValidationError("adjacency is not symmetric (the "
+                                         "graph is undirected; use "
+                                         "make_problem to symmetrize)")
+        b = np.asarray(self.node_weights)
+        if np.isnan(b).any() or (b < 0).any():
+            raise ProblemValidationError("node_weights must be finite and "
+                                         "non-negative")
+        w = np.asarray(self.speeds)
+        if np.isnan(w).any() or (w <= 0).any():
+            raise ProblemValidationError("speeds must be finite and "
+                                         "positive")
 
 
 def make_problem(
@@ -86,6 +132,32 @@ class PartitionState:
     @property
     def num_machines(self) -> int:
         return self.loads.shape[0]
+
+
+def validate_assignment(assignment, num_machines: int,
+                        num_nodes: int | None = None) -> None:
+    """Raise :class:`ProblemValidationError` on a malformed assignment
+    vector: wrong dtype/shape, or (concrete arrays only) machine ids
+    outside ``[0, num_machines)``."""
+    import numpy as np
+    if getattr(assignment, "ndim", None) != 1:
+        raise ProblemValidationError(
+            f"assignment must be a 1-D vector; got "
+            f"{getattr(assignment, 'shape', type(assignment))}")
+    if not jnp.issubdtype(assignment.dtype, jnp.integer):
+        raise ProblemValidationError(
+            f"assignment must be integer-typed; got {assignment.dtype}")
+    if num_nodes is not None and assignment.shape[0] != num_nodes:
+        raise ProblemValidationError(
+            f"assignment has {assignment.shape[0]} entries for "
+            f"{num_nodes} nodes")
+    if not _is_concrete(assignment):
+        return
+    r = np.asarray(assignment)
+    if r.size and (r.min() < 0 or r.max() >= num_machines):
+        raise ProblemValidationError(
+            f"assignment entries must lie in [0, {num_machines}); got "
+            f"range [{r.min()}, {r.max()}]")
 
 
 def machine_loads(node_weights: Array, assignment: Array, num_machines: int) -> Array:

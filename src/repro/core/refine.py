@@ -99,6 +99,7 @@ import jax
 import jax.numpy as jnp
 
 from . import aggregate as agg_mod
+from . import checkpoint as ckpt_mod
 from . import costs
 from .problem import PartitionProblem, PartitionState, make_state
 
@@ -232,12 +233,12 @@ class RefineResult(NamedTuple):
 
 @partial(jax.jit, static_argnames=("framework", "max_turns", "cost_matrix_fn",
                                    "incremental", "verify_every",
-                                   "dissat_fn", "on_turn"))
+                                   "repair_every", "dissat_fn", "on_turn"))
 def _refine(problem: PartitionProblem, assignment: Array,
             framework: str = costs.C_FRAMEWORK,
             max_turns: int = 10_000, tol: float = DEFAULT_TOL,
             cost_matrix_fn=None, incremental: bool = True,
-            verify_every: int = 0, dissat_fn=None,
+            verify_every: int = 0, repair_every: int = 0, dissat_fn=None,
             theta=None, on_turn=None) -> RefineResult:
     """Jitted while-loop body of :func:`refine`.
 
@@ -289,11 +290,11 @@ def _refine(problem: PartitionProblem, assignment: Array,
     total_b = jnp.sum(problem.node_weights)
 
     def cond(carry):
-        _, _, idle, turns, _, _ = carry
+        idle, turns = carry[2], carry[3]
         return (idle < K) & (turns < max_turns)
 
     def body(carry):
-        agg, machine, idle, turns, moves, max_drift = carry
+        agg, machine, idle, turns, moves, max_drift = carry[:6]
         if on_turn is None:
             agg, res = _turn_incremental(problem, agg, machine, framework,
                                          tol, total_b, dissat_fn, theta)
@@ -306,19 +307,29 @@ def _refine(problem: PartitionProblem, assignment: Array,
                                res.ct0, raw_gain)
         idle = jnp.where(res.moved, 0, idle + 1)
         turns = turns + 1
+        moves = moves + res.moved.astype(jnp.int32)
         if verify_every:
             agg, max_drift = jax.lax.cond(
                 turns % verify_every == 0,
                 lambda a, d: _resync_max(problem, a, d),
                 lambda a, d: (a, d), agg, max_drift)
-        return (agg, (machine + 1) % K, idle, turns,
-                moves + res.moved.astype(jnp.int32), max_drift)
+        if repair_every:
+            ckpt = carry[6]
+            agg, max_drift, ckpt = jax.lax.cond(
+                turns % repair_every == 0,
+                lambda a, d, c: _heal_take(problem, a, d, c, turns),
+                lambda a, d, c: (a, d, c), agg, max_drift, ckpt)
+            return (agg, (machine + 1) % K, idle, turns, moves, max_drift,
+                    ckpt)
+        return (agg, (machine + 1) % K, idle, turns, moves, max_drift)
 
     init = (agg0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
             jnp.zeros(()))
-    agg, _, idle, turns, moves, max_drift = jax.lax.while_loop(
-        cond, body, init)
+    if repair_every:
+        init = init + (ckpt_mod.take(agg0, jnp.zeros((), jnp.int32)),)
+    out = jax.lax.while_loop(cond, body, init)
+    agg, _, idle, turns, moves, max_drift = out[:6]
     return RefineResult(assignment=agg.assignment, loads=agg.loads,
                         num_moves=moves, num_turns=turns,
                         converged=idle >= K, aggregate_drift=max_drift)
@@ -343,7 +354,7 @@ def refine(problem: PartitionProblem, assignment: Array,
            framework: str = costs.C_FRAMEWORK,
            max_turns: int = 10_000, tol: float = DEFAULT_TOL,
            cost_matrix_fn=None, incremental: bool = True,
-           verify_every: int = 0, dissat_fn=None,
+           verify_every: int = 0, repair_every: int = 0, dissat_fn=None,
            theta=None, recorder=None) -> RefineResult:
     """Run round-robin refinement to convergence (K consecutive idle turns).
 
@@ -351,7 +362,13 @@ def refine(problem: PartitionProblem, assignment: Array,
     ``cost_matrix_fn`` forces the recompute path (a custom cost function
     rebuilds from the full adjacency).  ``verify_every=M > 0`` rebuilds the
     carry from scratch every M turns and records the drift (incremental
-    path only).  ``theta`` (scalar or (N,)) is the per-node migration-price
+    path only).  ``repair_every=M > 0`` (DESIGN.md §15.3) goes further:
+    every M turns the carry is *healed* — rolled back to the last
+    checkpoint if any float leaf went non-finite, then column-repaired
+    against the recompute oracle (only deviating columns are patched, so
+    an undrifted carry is untouched bitwise) and re-checkpointed.  The
+    default ``0`` stages the exact pre-repair program (same jaxpr).
+    ``theta`` (scalar or (N,)) is the per-node migration-price
     hysteresis threshold (DESIGN.md §11); ``None``/``0`` reproduces the
     threshold-free move sequence bitwise.
 
@@ -365,7 +382,8 @@ def refine(problem: PartitionProblem, assignment: Array,
         return _refine(problem, assignment, framework, max_turns=max_turns,
                        tol=tol, cost_matrix_fn=cost_matrix_fn,
                        incremental=incremental, verify_every=verify_every,
-                       dissat_fn=dissat_fn, theta=theta)
+                       repair_every=repair_every, dissat_fn=dissat_fn,
+                       theta=theta)
     run = _open_run(recorder, "refine", problem, assignment, framework,
                     theta, incremental=incremental and cost_matrix_fn is None)
     recorder.begin_rows()
@@ -375,8 +393,8 @@ def refine(problem: PartitionProblem, assignment: Array,
                          max_turns=max_turns, tol=tol,
                          cost_matrix_fn=cost_matrix_fn,
                          incremental=incremental, verify_every=verify_every,
-                         dissat_fn=dissat_fn, theta=theta,
-                         on_turn=recorder._on_turn_row)
+                         repair_every=repair_every, dissat_fn=dissat_fn,
+                         theta=theta, on_turn=recorder._on_turn_row)
         jax.block_until_ready(result)
         jax.effects_barrier()
     wall = time.perf_counter() - t0
@@ -395,6 +413,15 @@ def refine(problem: PartitionProblem, assignment: Array,
 def _resync_max(problem, agg, max_drift):
     fresh, observed = agg_mod.resync(problem, agg)
     return fresh, jnp.maximum(max_drift, observed)
+
+
+def _heal_take(problem, agg, max_drift, ckpt, turn):
+    """One ``repair_every`` boundary (DESIGN.md §15.3): heal the carry
+    (rollback over NaN, then column repair against the recompute
+    oracle), fold the observed pre-repair drift into the running max,
+    and re-checkpoint the now-known-good state."""
+    agg, observed, _cols, _rolled = ckpt_mod.heal(problem, agg, ckpt)
+    return (agg, jnp.maximum(max_drift, observed), ckpt_mod.take(agg, turn))
 
 
 class Trace(NamedTuple):

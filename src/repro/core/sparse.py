@@ -44,7 +44,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .problem import PartitionProblem, make_problem
+from .problem import (PartitionProblem, ProblemValidationError,
+                      _is_concrete, make_problem)
 
 Array = jax.Array
 
@@ -86,14 +87,82 @@ class SparseProblem:
         return self.senders.shape[0]
 
     def validate(self) -> None:
+        """Raise :class:`~repro.core.problem.ProblemValidationError` on
+        malformed fields (DESIGN.md §15.7).  Shape/static checks always
+        run; value checks (NaN/negative weights, endpoint range,
+        ``row_start`` consistency with the sender slabs) only on
+        concrete arrays."""
         n, e = self.num_nodes, self.num_edges
-        assert self.senders.shape == (e,), self.senders.shape
-        assert self.receivers.shape == (e,), self.receivers.shape
-        assert self.edge_weights.shape == (e,), self.edge_weights.shape
-        assert self.row_start.shape == (n,), self.row_start.shape
-        assert self.speeds.ndim == 1
-        assert self.max_degree >= 1
-        assert e >= self.max_degree, (e, self.max_degree)
+        for name, arr in (("senders", self.senders),
+                          ("receivers", self.receivers),
+                          ("edge_weights", self.edge_weights)):
+            if arr.shape != (e,):
+                raise ProblemValidationError(
+                    f"{name} shape {arr.shape} does not match padded edge "
+                    f"count E={e}")
+        if self.row_start.shape != (n,):
+            raise ProblemValidationError(
+                f"row_start shape {self.row_start.shape} does not match "
+                f"N={n}")
+        if self.speeds.ndim != 1:
+            raise ProblemValidationError(
+                f"speeds must be (K,); got shape {self.speeds.shape}")
+        if self.max_degree < 1:
+            raise ProblemValidationError(
+                f"max_degree must be >= 1; got {self.max_degree}")
+        if e < self.max_degree:
+            raise ProblemValidationError(
+                f"padded edge count E={e} is smaller than "
+                f"max_degree={self.max_degree} (the incident-edge window "
+                "would run off the arrays)")
+        if not _is_concrete(self.senders, self.receivers,
+                            self.edge_weights, self.row_start,
+                            self.node_weights, self.speeds):
+            return
+        s = np.asarray(self.senders)
+        r = np.asarray(self.receivers)
+        w = np.asarray(self.edge_weights)
+        if np.isnan(w).any():
+            raise ProblemValidationError("edge_weights contains NaN")
+        if (w < 0).any():
+            raise ProblemValidationError("edge_weights contains negative "
+                                         "weights")
+        if s.size and (s.min() < 0 or r.min() < 0
+                       or max(s.max(), r.max()) >= n):
+            raise ProblemValidationError(
+                f"edge endpoints out of range [0, {n})")
+        if np.any(np.diff(s) < 0):
+            raise ProblemValidationError("senders must be sorted ascending "
+                                         "(CSR slab layout)")
+        # row_start[i] must open node i's slab: every real (nonzero-
+        # weight) edge of sender i must land in
+        # [row_start[i], row_start[i] + max_degree).
+        rs = np.asarray(self.row_start)
+        if np.any(np.diff(rs) < 0) or (rs.size and rs[0] != 0):
+            raise ProblemValidationError(
+                "row_start must be non-decreasing CSR offsets starting "
+                "at 0")
+        if rs.size and rs.max() > e:
+            raise ProblemValidationError(
+                f"row_start points past the edge arrays "
+                f"(max {rs.max()} > E={e})")
+        real = w != 0
+        if real.any():
+            idx = np.nonzero(real)[0]
+            lo = rs[s[idx]]
+            if (idx < lo).any() or (idx >= lo + self.max_degree).any():
+                raise ProblemValidationError(
+                    "row_start inconsistent with sender slabs: a real "
+                    "edge lies outside its sender's "
+                    "[row_start, row_start + max_degree) window")
+        b = np.asarray(self.node_weights)
+        if np.isnan(b).any() or (b < 0).any():
+            raise ProblemValidationError("node_weights must be finite and "
+                                         "non-negative")
+        sp = np.asarray(self.speeds)
+        if np.isnan(sp).any() or (sp <= 0).any():
+            raise ProblemValidationError("speeds must be finite and "
+                                         "positive")
 
 
 def _round_up(x: int, multiple: int) -> int:
@@ -119,12 +188,12 @@ def make_sparse_problem(senders, receivers, edge_weights, node_weights,
     r = np.asarray(receivers, np.int64).ravel()
     w = np.asarray(edge_weights, np.float64).ravel()
     if not (s.shape == r.shape == w.shape):
-        raise ValueError(f"edge arrays disagree: {s.shape}, {r.shape}, "
-                         f"{w.shape}")
+        raise ProblemValidationError(
+            f"edge arrays disagree: {s.shape}, {r.shape}, {w.shape}")
     node_weights = np.asarray(node_weights, np.float64).ravel()
     n = node_weights.shape[0]
     if s.size and (s.min() < 0 or r.min() < 0 or max(s.max(), r.max()) >= n):
-        raise ValueError("edge endpoints out of range")
+        raise ProblemValidationError("edge endpoints out of range")
 
     keep = s != r                                    # no self loops
     a = np.minimum(s[keep], r[keep])

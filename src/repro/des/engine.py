@@ -320,6 +320,16 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState,
     rows = jnp.arange(N)
     speeds = _base_speeds(cfg) if speed_schedule is None \
         else speeds_at(speed_schedule, state.tick)
+    # speed <= 0 means "machine down" (DESIGN.md §15.5): its LPs are
+    # quarantined for the segment — no event selection, no busy-time
+    # countdown, no completions — so the queue freezes in place instead of
+    # dividing by zero (the old code fed speed=0 straight into the busy
+    # ceil, producing inf -> int32).  Frozen local clocks hold GVT back,
+    # so no surviving LP can fossil-collect past the down machine's
+    # unprocessed events; when the schedule restores the speed the queue
+    # drains normally.  All-positive speeds leave every gate constant-
+    # false and the tick bitwise-identical.
+    lp_down = speeds[state.machine] <= 0.0
 
     # ---- P0: transfer-delay countdown (only events already in lists) -------
     ev = ev._replace(tick=jnp.maximum(ev.tick - (ev.valid & (ev.tick > 0)), 0))
@@ -342,9 +352,11 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState,
     seen_time = jnp.minimum(jnp.minimum(ev_seen, hist_seen), perm)
 
     # ---- P1: busy LPs advance; completions forward the flood ---------------
+    # (down machines' LPs neither count down nor complete — frozen mid-job)
     was_busy = state.busy
-    busy_tick = jnp.where(was_busy, state.busy_tick - 1, state.busy_tick)
-    completed = was_busy & (busy_tick <= 0)
+    busy_tick = jnp.where(was_busy & ~lp_down, state.busy_tick - 1,
+                          state.busy_tick)
+    completed = was_busy & ~lp_down & (busy_tick <= 0)
     still_busy = was_busy & ~completed
     # transfer-freeze completions (cur_thread == -1, no event in flight —
     # see _refine_partition) release the LP without counting as processed
@@ -357,7 +369,8 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState,
     fwd_count = state.cur_count - 1
 
     # ---- P2: idle LPs select and locally handle one event ------------------
-    idle = ~was_busy
+    # (down machines' LPs are quarantined: they select nothing this tick)
+    idle = ~was_busy & ~lp_down
     has, slot = _select_events(ev, idle)
     sel_time = ev.time[rows, slot]
     sel_thread = ev.thread[rows, slot]
@@ -456,9 +469,14 @@ def des_tick(cfg: DESConfig, adj: Array, state: DESState,
     # original integer cost)
     starts = normal | straggler
     nlps = jnp.zeros((K,), jnp.int32).at[state.machine].add(1)
+    # a down machine's LPs never start (idle excludes them), so the guard
+    # value 1.0 is never consumed — it only keeps 0-speed out of the
+    # divide (inf cast to int32 is implementation-defined)
+    live_speed = jnp.where(speeds[state.machine] > 0.0,
+                           speeds[state.machine], 1.0)
     busy_cost = jnp.maximum(jnp.ceil(
         (nlps[state.machine] * cfg.proc_ticks).astype(jnp.float32)
-        / speeds[state.machine]).astype(jnp.int32), 1)
+        / live_speed).astype(jnp.int32), 1)
     busy = still_busy | starts
     busy_tick = jnp.where(starts, busy_cost, busy_tick)
     cur_time = jnp.where(starts, sel_time, state.cur_time)

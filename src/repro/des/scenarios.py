@@ -13,11 +13,18 @@ refinement round feeds the live speeds into the partition game.
 Builders are host-side (numpy); the schedule itself is jnp arrays so
 ``speeds_at`` traces inside the engine's ``lax.while_loop``.
 
-Speeds are clamped to ``MIN_SPEED`` — a "failed" machine is modeled as
-nearly-stopped rather than stopped, both because busy-time divides by
-speed and because a truly dead machine needs LP re-homing, which is the
-refinement layer's job (the failure scenario is exactly what should
-trigger it).
+Speeds are clamped to ``MIN_SPEED`` by default — a "failed" machine is
+modeled as nearly-stopped rather than stopped.  Passing ``floor=0.0``
+(or using :func:`true_failure`) lifts the clamp: speed ``0`` is the
+engine's "machine down" state (DESIGN.md §15.5) — the machine's LPs are
+quarantined (queues frozen, no busy-time countdown) until the schedule
+restores a positive speed, and the refinement layer re-homes LPs off the
+dead machine via the existing game.
+
+:func:`refine_exchange_loss` covers the *other* refinement-layer fault
+class: candidate exchanges lost on the wire (a ``FaultPlan`` for the
+distributed drivers, DESIGN.md §15.1), so ``dynamics_bench`` can measure
+load CV through both machine death and message loss.
 """
 from __future__ import annotations
 
@@ -48,8 +55,15 @@ class SpeedSchedule(NamedTuple):
         return self.speeds.shape[1]
 
 
-def make_schedule(times, speeds) -> SpeedSchedule:
-    """Validate + clamp host-side arrays into a :class:`SpeedSchedule`."""
+def make_schedule(times, speeds, *, floor: float = MIN_SPEED
+                  ) -> SpeedSchedule:
+    """Validate + clamp host-side arrays into a :class:`SpeedSchedule`.
+
+    ``floor`` is the speed clamp; the ``MIN_SPEED`` default keeps the
+    pre-fault-model "failure = nearly stopped" semantics.  ``floor=0.0``
+    permits exact-zero segments — the engine's "machine down" state
+    (:func:`true_failure`); negative inputs clamp to the floor either
+    way."""
     times = np.asarray(times, np.int32)
     speeds = np.asarray(speeds, np.float32)
     if times.ndim != 1 or speeds.ndim != 2 or times.shape[0] != speeds.shape[0]:
@@ -59,7 +73,7 @@ def make_schedule(times, speeds) -> SpeedSchedule:
         raise ValueError("times must start at tick 0")
     if np.any(np.diff(times) <= 0):
         raise ValueError("times must be strictly ascending")
-    speeds = np.maximum(speeds, MIN_SPEED)
+    speeds = np.maximum(speeds, np.float32(floor))
     return SpeedSchedule(times=jnp.asarray(times),
                          speeds=jnp.asarray(speeds))
 
@@ -114,6 +128,46 @@ def failure_recovery(num_machines: int, machine: int, fail_tick: int,
     tests whether the partitioner thrashes everything straight back."""
     return slowdown(num_machines, machine, fail_tick,
                     factor=floor, recover_tick=recover_tick, base=base)
+
+
+def true_failure(num_machines: int, machine: int, fail_tick: int,
+                 recover_tick: int | None = None, base=None) -> SpeedSchedule:
+    """``machine`` is DOWN (speed exactly 0) from ``fail_tick`` until
+    ``recover_tick`` (forever if ``None``) — the DESIGN.md §15.5 fault
+    scenario.  Unlike :func:`failure_recovery`'s near-zero floor, the
+    engine quarantines the machine's LPs outright: queues freeze, busy
+    jobs suspend mid-countdown, and the frozen local clocks hold GVT
+    back until recovery, while each refinement round re-homes LPs off
+    the dead machine via the partition game."""
+    base = np.ones(num_machines, np.float32) if base is None \
+        else np.asarray(base, np.float32)
+    down = base.copy()
+    down[machine] = 0.0
+    if fail_tick == 0:        # down from the first tick: no base segment
+        rows, times = [down], [0]
+    else:
+        rows, times = [base, down], [0, fail_tick]
+    if recover_tick is not None:
+        rows.append(base)
+        times.append(recover_tick)
+    return make_schedule(times, np.stack(rows), floor=0.0)
+
+
+def refine_exchange_loss(num_rounds: int, num_shards: int, seed: int = 0, *,
+                         p_lost: float = 0.2, max_lost: int = 3,
+                         num_machines: int = 1, num_nodes: int = 0):
+    """Refinement-layer exchange-loss scenario: a seeded
+    :class:`repro.distributed.faults.FaultPlan` where candidate
+    exchanges are lost on the wire with probability ``p_lost`` per
+    (round, shard) — each loss costs up to ``max_lost`` bounded retries
+    before the round proceeds on the stale aggregate (DESIGN.md §15.2).
+    Pass it as ``fault_plan=`` to any distributed driver; pair with
+    :func:`true_failure` to measure load CV through both fault classes
+    in ``dynamics_bench``."""
+    from repro.distributed import faults
+    return faults.make_fault_plan(
+        num_rounds, num_shards, seed, p_lost=p_lost, max_lost=max_lost,
+        num_machines=num_machines, num_nodes=num_nodes)
 
 
 def pad_segments(schedule: SpeedSchedule, num_segments: int) -> SpeedSchedule:

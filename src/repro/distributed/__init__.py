@@ -18,8 +18,14 @@ Modules:
     mesh, sequential-turn and §4.5 simultaneous-sweep modes.
   * :mod:`~repro.distributed.accounting` — bytes-exchanged ledgers proving
     the O(K + boundary) bound empirically.
+  * :mod:`~repro.distributed.faults`     — seeded fault injection
+    (FaultPlan), degraded-mode policy (DegradedMode) and the
+    recover-or-raise report types (DESIGN.md §15).
 """
 from .accounting import ExchangeLedger, WireCheck, ledger_for_run, reconcile
+from .faults import (DeadShardError, DegradedMode, FaultPlan, FaultReport,
+                     FaultToleranceError, RecoveryFailedError,
+                     make_fault_plan, zero_fault_plan)
 from .runtime import (WireMeasurement, refine_distributed,
                       refine_distributed_shard_map,
                       refine_distributed_simultaneous,
@@ -27,13 +33,21 @@ from .runtime import (WireMeasurement, refine_distributed,
 from .views import ShardViews, boundary_stats, build_views
 
 __all__ = [
+    "DeadShardError",
+    "DegradedMode",
     "ExchangeLedger",
+    "FaultPlan",
+    "FaultReport",
+    "FaultToleranceError",
+    "RecoveryFailedError",
     "ShardViews",
     "WireCheck",
     "WireMeasurement",
     "boundary_stats",
     "build_views",
     "ledger_for_run",
+    "make_fault_plan",
+    "zero_fault_plan",
     "reconcile",
     "refine_distributed",
     "refine_distributed_shard_map",

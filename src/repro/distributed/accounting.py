@@ -56,18 +56,21 @@ class ExchangeLedger:
     trace_bytes: int            # potential partials (0 for untraced runs)
     ghost_sync_bytes: int       # one-time boundary-assignment sync
     setup_bytes: int            # one-time loads allreduce + total-B scalar
+    fault_bytes: int = 0        # retry/duplicate re-sends + repair traffic
+                                # (0 for fault-free runs; DESIGN.md §15.4)
 
     @property
     def per_round_bytes(self) -> float:
         """Steady-state payload per round — the O(K) quantity the paper
-        claims is independent of N."""
+        claims is independent of N.  Fault traffic is excluded: retries
+        are O(K) bursts and repair is amortized, reported separately."""
         if self.rounds == 0:
             return 0.0
         return (self.candidate_bytes + self.trace_bytes) / self.rounds
 
     @property
     def total_bytes(self) -> int:
-        return (self.candidate_bytes + self.trace_bytes
+        return (self.candidate_bytes + self.trace_bytes + self.fault_bytes
                 + self.ghost_sync_bytes + self.setup_bytes)
 
     def summary(self) -> str:
@@ -140,12 +143,17 @@ def init_potential_bytes(num_shards: int, num_machines: int) -> int:
 
 def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
                    *, traced: bool = False, simultaneous: bool = False,
-                   incremental: bool = True) -> ExchangeLedger:
+                   incremental: bool = True,
+                   fault_bytes: int = 0) -> ExchangeLedger:
     """Ledger for an executed run (``rounds`` = its measured turn count).
 
     ``incremental`` must match the driver flag the run used — the traced
     and sweep wire shapes differ between the two protocols (see the
-    module docstring)."""
+    module docstring).  ``fault_bytes`` is the degraded-mode extra
+    traffic (candidate re-sends + repair payloads) of a fault-injected
+    run, computed from its :class:`repro.distributed.faults.FaultPlan`
+    via ``faults.plan_extra_bytes`` — the drivers accumulate the same
+    per-round sum on device, so :func:`reconcile` stays byte-exact."""
     s = stats.num_shards
     setup = setup_bytes(num_machines)
     if simultaneous:
@@ -167,6 +175,7 @@ def ledger_for_run(stats: BoundaryStats, num_machines: int, rounds: int,
         trace_bytes=trace,
         ghost_sync_bytes=ghost_sync_bytes(stats),
         setup_bytes=setup,
+        fault_bytes=int(fault_bytes),
     )
 
 
@@ -227,7 +236,8 @@ def reconcile(ledger: ExchangeLedger, measurement) -> WireCheck:
     return WireCheck(
         rounds=rounds,
         measured_payload=int(measurement.payload_bytes),
-        predicted_payload=ledger.candidate_bytes + ledger.trace_bytes,
+        predicted_payload=(ledger.candidate_bytes + ledger.trace_bytes
+                          + ledger.fault_bytes),
         measured_setup=int(measurement.setup_bytes),
         predicted_setup=ledger.setup_bytes,
     )

@@ -308,6 +308,38 @@ def elect(cands: Candidate, tol) -> Winner:
                   shard=shard)
 
 
+def elect_degraded(cands: Candidate, tol, lag: Array,
+                   stale_penalty) -> Winner:
+    """Degraded-mode election under bounded staleness (DESIGN.md §15.2).
+
+    A shard whose carried aggregate is ``lag`` winner broadcasts old only
+    wins with gain above ``tol + lag * stale_penalty`` — the S-dependent
+    acceptance threshold from the Adolphs–Berenbrink bounded-staleness
+    analysis (arXiv:1109.6925): stale gains are optimistic by at most the
+    drift a bounded number of missed moves can cause, so demanding a
+    proportionally larger improvement keeps the potential descending.
+    Callers mask unavailable shards (down / quarantined / undelivered)
+    to ``-inf`` gain before electing.
+
+    With ``lag == 0`` everywhere and no masks this is decision-equivalent
+    to :func:`elect`: the winner, tie-break, and every ``moved``-gated
+    field match bitwise, which is what keeps a zero-fault plan through
+    the faulty drivers identical to the fault-free path.
+    """
+    thresh = tol + stale_penalty * lag.astype(jnp.float32)   # (S,)
+    eligible = cands.gain > thresh
+    eff = jnp.where(eligible, cands.gain, -jnp.inf)
+    best = jnp.max(eff)
+    tie = eff == best
+    shard = jnp.argmin(jnp.where(tie, cands.node, I32_MAX)).astype(jnp.int32)
+    return Winner(moved=best > -jnp.inf,
+                  node=cands.node[shard],
+                  dest=cands.dest[shard],
+                  gain=best,
+                  weight=cands.weight[shard],
+                  shard=shard)
+
+
 def apply_move(assignment: Array, loads: Array, winner: Winner,
                machine: Array) -> tuple[Array, Array]:
     """Apply the elected move to the replicated mirror + O(K) loads.

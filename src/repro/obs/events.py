@@ -49,9 +49,34 @@ Kinds
 ``element``
     Per-batch-element reduction of a sweep/fleet: the §12.5 headline
     stats for element ``batch``.
+``fault_injected``
+    One injected fault (DESIGN.md §15): round ``t``, target ``shard``,
+    and the ``fault`` class (``"down"``, ``"omit"``, ``"lost"``,
+    ``"dup"``, ``"corrupt"``).
+``exchange_retry``
+    A candidate exchange lost on the wire at round ``t``: the sender
+    ``shard``, how many bounded ``attempts`` the retry loop spent, and
+    whether the candidate was ultimately ``delivered`` (else the round
+    proceeds without it, stale).
+``staleness``
+    A shard acting on an out-of-date aggregate: round ``t``, ``shard``,
+    its staleness ``lag`` (rounds since the last accepted exchange),
+    and whether the bounded-staleness rule has ``quarantined`` it
+    (lag > max_staleness, DESIGN.md §15.2).
+``repair``
+    One self-healing repair action: round ``t``, ``action``
+    (``"column"`` for an in-run column repair, ``"audit"`` for the
+    end-of-run reconciliation), the observed pre-repair ``drift``, and
+    the number of aggregate ``cols`` patched (both ``None`` when the
+    driver only knows the repair schedule, not its measurements).
+``run_aborted``
+    Terminal event flushed when the wrapped run raised before its
+    events could be finalized (recorder ``finally`` path): ``error``
+    is the exception's ``repr``.
 ``run_end``
     Closes a run with the final counters and, when available, final
-    potentials and loads.
+    potentials and loads.  Fault-injected runs add ``recovered`` and
+    ``recovery_drift`` (the recover-or-raise verdict, DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -69,6 +94,11 @@ EVENT_KINDS: dict[str, tuple[str, ...]] = {
     "drift": ("value", "budget"),
     "phase": ("name", "ts", "dur"),
     "element": ("batch",),
+    "fault_injected": ("t", "shard", "fault"),
+    "exchange_retry": ("t", "shard", "attempts", "delivered"),
+    "staleness": ("t", "shard", "lag", "quarantined"),
+    "repair": ("t", "action", "drift", "cols"),
+    "run_aborted": ("error",),
     "run_end": (),
 }
 

@@ -85,14 +85,28 @@ class Recorder:
 
     @contextmanager
     def phase(self, name: str, run: str | None = None):
-        """Wall-clock a span; emits one ``phase`` event on exit."""
+        """Wall-clock a span; emits one ``phase`` event on exit.
+
+        If the wrapped block raises (e.g. a jit failure before
+        ``block_until_ready``), the span is still closed, a terminal
+        ``run_aborted`` event records the error, and the sinks are
+        flushed — everything buffered up to the abort survives on disk
+        instead of being lost with the process (DESIGN.md §15.6)."""
         t0 = time.perf_counter()
         try:
             yield
-        finally:
-            dur = time.perf_counter() - t0
+        except BaseException as exc:
+            rid = run or self._last_run or "r----"
+            self.emit("phase", rid, name=name, ts=t0,
+                      dur=time.perf_counter() - t0)
+            self.emit("run_aborted", rid, error=repr(exc),
+                      pending_rows=len(self._rows) + len(self._tick_rows)
+                      + len(self._refine_rows))
+            self.flush()
+            raise
+        else:
             self.emit("phase", run or self._last_run or "r----",
-                      name=name, ts=t0, dur=dur)
+                      name=name, ts=t0, dur=time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     # device-row bridge (jax.debug.callback target)
@@ -248,11 +262,14 @@ class Recorder:
     # ------------------------------------------------------------------
     def record_result(self, run: str, result, *, wall: float | None = None,
                       c0=None, ct0=None,
-                      drift_budget: float = DRIFT_BUDGET) -> None:
+                      drift_budget: float = DRIFT_BUDGET, **extra) -> None:
         """Emit the ``drift`` check and the closing ``run_end`` event.
 
         ``result`` is any ``RefineResult``-shaped object (duck-typed:
-        ``num_moves/num_turns/converged/loads/aggregate_drift``)."""
+        ``num_moves/num_turns/converged/loads/aggregate_drift``).
+        ``extra`` fields ride on the ``run_end`` verbatim — fault-
+        injected runs attach ``recovered``/``recovery_drift``
+        (DESIGN.md §15.6)."""
         drift = float(np.asarray(result.aggregate_drift))
         self.emit("drift", run, value=drift, budget=drift_budget,
                   ok=drift <= drift_budget)
@@ -267,6 +284,7 @@ class Recorder:
             fields["c0"] = float(c0)
         if ct0 is not None:
             fields["ct0"] = float(ct0)
+        fields.update(extra)
         self.emit("run_end", run, **fields)
 
     def record_wire(self, run: str, check) -> None:

@@ -97,6 +97,29 @@ def replay_run(events: list[dict]) -> dict:
             frozen_max = max(frozen_max, event["frozen"])
         elif kind == "des_refine":
             des_refines += 1
+    fault_counts: dict[str, int] = {}
+    retries = 0
+    undelivered = 0
+    max_lag = 0
+    quarantined = 0
+    for event in events:
+        kind = event["kind"]
+        if kind == "fault_injected":
+            fault_counts[event["fault"]] = \
+                fault_counts.get(event["fault"], 0) + 1
+        elif kind == "exchange_retry":
+            retries += event["attempts"]
+            undelivered += 0 if event["delivered"] else 1
+        elif kind == "staleness":
+            max_lag = max(max_lag, event["lag"])
+            quarantined += 1 if event["quarantined"] else 0
+    summary.update(
+        faults=fault_counts, retries=retries, undelivered=undelivered,
+        max_lag=max_lag, quarantined=quarantined,
+        repairs=[e for e in events if e["kind"] == "repair"],
+        aborted=next((e for e in events if e["kind"] == "run_aborted"),
+                     None),
+    )
     summary.update(
         accepted=accepted, rejects=rejects, movers=movers,
         loads=loads, load_cv=_cv(loads, speeds) if loads.size else None,
@@ -116,7 +139,20 @@ def check_run(summary: dict) -> list[str]:
     problems: list[str] = []
     run = summary["run"]
     end = summary["end"]
+    faulty = bool(summary["meta"].get("faults")) or bool(summary["faults"])
     had_turns = summary["accepted"] + sum(summary["rejects"].values()) > 0
+    if summary["aborted"] is not None:
+        problems.append(f"{run}: run aborted — {summary['aborted']['error']}")
+    if faulty:
+        # Recover-or-raise verdict (DESIGN.md §15): a fault-injected run
+        # must close with an explicit recovered=True.
+        if end is None:
+            problems.append(f"{run}: fault-injected run has no run_end")
+        elif not end.get("recovered", False):
+            drift = end.get("recovery_drift")
+            problems.append(
+                f"{run}: fault-injected run did not recover "
+                f"(recovery drift {drift if drift is not None else '?'})")
     if end is not None and summary["loads"].size and had_turns:
         end_loads = np.asarray(end.get("loads", []), np.float64)
         if end_loads.size and not np.allclose(
@@ -131,7 +167,10 @@ def check_run(summary: dict) -> list[str]:
         if replayed != end["num_moves"]:
             problems.append(f"{run}: replayed {replayed} moves, run_end "
                             f"reports {end['num_moves']}")
-    if summary["runtime"] in SEQUENTIAL_RUNTIMES:
+    # Degraded-mode moves elected on stale aggregates (and repair jumps)
+    # may transiently ascend — the recover-or-raise verdict above is the
+    # fault-injected run's correctness gate, not strict descent.
+    if summary["runtime"] in SEQUENTIAL_RUNTIMES and not faulty:
         pots = summary["potentials"]
         for (t0, c0a, _), (t1, c0b, _) in zip(pots, pots[1:]):
             if c0b - c0a > ASCENT_REL_TOL * abs(c0a) and not math.isnan(c0b):
@@ -189,9 +228,30 @@ def render(summary: dict) -> str:
     for event in summary["drift"]:
         lines.append(f"  drift: {event['value']:g} (budget "
                      f"{event['budget']:g})")
+    if summary["faults"]:
+        injected = ", ".join(f"{k}:{v}" for k, v in
+                             sorted(summary["faults"].items()))
+        lines.append(f"  faults: {{{injected}}}, {summary['retries']} "
+                     f"retry attempts ({summary['undelivered']} given up), "
+                     f"max staleness {summary['max_lag']}, "
+                     f"{summary['quarantined']} quarantined shard-rounds")
+    if summary["repairs"]:
+        cols = sum(e["cols"] or 0 for e in summary["repairs"])
+        drifts = [e["drift"] for e in summary["repairs"]
+                  if e["drift"] is not None]
+        worst = f", worst drift {max(drifts):g}" if drifts else ""
+        lines.append(f"  repairs: {len(summary['repairs'])} "
+                     f"({cols} columns patched{worst})")
+    if summary["aborted"] is not None:
+        lines.append(f"  ABORTED: {summary['aborted']['error']}")
     end = summary["end"]
     if end is not None:
         extra = f", wall {end['wall']:.3f}s" if "wall" in end else ""
+        if "recovered" in end:
+            verdict = "recovered" if end["recovered"] else "NOT RECOVERED"
+            rd = end.get("recovery_drift")
+            extra += f", {verdict}" + \
+                (f" (drift {rd:g})" if rd is not None else "")
         lines.append(f"  end: moves={end.get('num_moves')} "
                      f"turns={end.get('num_turns')} "
                      f"converged={end.get('converged')}{extra}")

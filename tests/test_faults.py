@@ -1,0 +1,568 @@
+"""Fault-tolerance suite (DESIGN.md §15).
+
+Pins the two contracts of the robustness layer:
+
+  * the fault-free path is BITWISE identical — pushing an all-clear
+    ``zero_fault_plan`` through the faulty drivers reproduces the plain
+    drivers' results exactly (one documented exemption: the sweep
+    driver's ``num_moves`` counter, §15.1), and ``repair_every=0`` in
+    :func:`repro.core.refine.refine` stages the pre-repair program;
+  * under ANY injected fault plan the run either recovers to within the
+    repair budget of the recompute oracle or fails loudly with a typed
+    :class:`~repro.distributed.faults.FaultToleranceError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import checkpoint as ckpt_mod
+from repro.core import costs
+from repro.core.aggregate import drift, init_aggregate_state, repair_columns
+from repro.core.problem import (PartitionProblem, ProblemValidationError,
+                                make_problem, validate_assignment)
+from repro.core.refine import refine
+from repro.core.sparse import sparse_from_dense
+from repro.distributed import (DeadShardError, DegradedMode,
+                               FaultToleranceError, faults, ledger_for_run,
+                               refine_distributed,
+                               refine_distributed_shard_map,
+                               refine_distributed_simultaneous,
+                               refine_distributed_traced, zero_fault_plan)
+from repro.distributed.accounting import reconcile
+from repro.distributed.views import boundary_stats
+from repro.graphs.generators import random_degree_graph, random_weights
+from repro.obs import MemorySink, Recorder
+from repro.obs.report import check_run, replay_run, split_runs
+
+N, K, S = 64, 4, 4          # one shape for every driver: one compile each
+PLAN_ROUNDS = 96
+
+
+def _problem(n=N, k=K, seed=0, mu=8.0):
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    speeds = [0.1, 0.2, 0.3, 0.4][:k] if k <= 4 else np.ones(k) / k
+    prob = make_problem(c, b, speeds, mu=mu)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, r0
+
+
+def _mixed_plan(seed=0, rounds=PLAN_ROUNDS, **overrides):
+    kwargs = dict(p_down=0.03, down_length=(2, 4), p_omit=0.05,
+                  p_lost=0.2, p_dup=0.08, p_corrupt=0.04,
+                  num_machines=K, num_nodes=N)
+    kwargs.update(overrides)
+    return faults.make_fault_plan(rounds, S, seed, **kwargs)
+
+
+def _permanent_down_plan(rounds, shards, shard=0):
+    """A plan no degraded mode can absorb: one shard down every round."""
+    z = np.zeros((rounds, shards), bool)
+    down = z.copy()
+    down[:, shard] = True
+    return faults._assemble(down, z, np.zeros((rounds, shards), np.int32),
+                            z, z, np.zeros((rounds, shards), np.int32),
+                            np.zeros((rounds, shards), np.float32),
+                            faults.DEFAULT_DEGRADED, 0)
+
+
+def _assert_result_bitwise(ref, res, *, check_moves=True):
+    np.testing.assert_array_equal(np.asarray(ref.assignment),
+                                  np.asarray(res.assignment))
+    np.testing.assert_array_equal(np.asarray(ref.loads),
+                                  np.asarray(res.loads))
+    assert int(ref.num_turns) == int(res.num_turns)
+    assert bool(ref.converged) == bool(res.converged)
+    if check_moves:
+        assert int(ref.num_moves) == int(res.num_moves)
+
+
+# ---------------------------------------------------------------------------
+# zero-fault bitwise identity (the "do no harm" half of the contract)
+# ---------------------------------------------------------------------------
+
+def test_zero_fault_plain_bitwise():
+    prob, r0 = _problem()
+    ref = refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S)
+    res, report = refine_distributed(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S,
+        fault_plan=zero_fault_plan(PLAN_ROUNDS, S))
+    _assert_result_bitwise(ref, res)
+    assert report.recovered and not report.dead
+    assert report.retries == 0 and report.repairs == 0
+    assert report.recovery_drift <= faults.DEFAULT_DEGRADED.repair_tol
+
+
+def test_zero_fault_traced_bitwise():
+    prob, r0 = _problem()
+    ref, ref_tr = refine_distributed_traced(prob, r0, costs.C_FRAMEWORK,
+                                            num_shards=S, max_turns=256)
+    res, tr, report = refine_distributed_traced(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_turns=256,
+        fault_plan=zero_fault_plan(PLAN_ROUNDS, S))
+    _assert_result_bitwise(ref, res)
+    for a, b in zip(ref_tr, tr):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert report.recovered
+
+
+def test_zero_fault_sweep_bitwise():
+    """Sweep driver: assignment / loads / potential traces bitwise; the
+    self-move counters are exempt (DESIGN.md §15.1: XLA fusion-order ULP
+    noise can elect a zero-gain SELF-move under the baseline ``elect``,
+    inflating num_moves / num_turns and pinning ``active`` without ever
+    changing the assignment; the degraded election nets those out)."""
+    prob, r0 = _problem()
+    ref, (c0s, ct0s, _) = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96)
+    res, (fc0s, fct0s, _), report = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96,
+        fault_plan=zero_fault_plan(PLAN_ROUNDS, S))
+    np.testing.assert_array_equal(np.asarray(ref.assignment),
+                                  np.asarray(res.assignment))
+    np.testing.assert_array_equal(np.asarray(ref.loads),
+                                  np.asarray(res.loads))
+    # every recorded potential — including the post-fixed-point tail the
+    # baseline keeps sweeping through — is bitwise identical
+    np.testing.assert_array_equal(np.asarray(c0s), np.asarray(fc0s))
+    np.testing.assert_array_equal(np.asarray(ct0s), np.asarray(fct0s))
+    assert int(res.num_turns) <= int(ref.num_turns)
+    assert report.recovered
+
+
+def test_zero_fault_shard_map_bitwise():
+    prob, r0 = _problem()
+    ref = refine_distributed_shard_map(prob, r0, costs.C_FRAMEWORK,
+                                       num_shards=1)
+    res, report = refine_distributed_shard_map(
+        prob, r0, costs.C_FRAMEWORK, num_shards=1,
+        fault_plan=zero_fault_plan(PLAN_ROUNDS, 1))
+    _assert_result_bitwise(ref, res)
+    assert report.recovered and not report.dead
+
+
+# ---------------------------------------------------------------------------
+# recover-or-raise under injected faults
+# ---------------------------------------------------------------------------
+
+def test_transient_faults_recover():
+    """A mixed outage/loss/dup/corruption plan recovers within budget."""
+    prob, r0 = _problem()
+    plan = _mixed_plan(seed=7)
+    res, report = refine_distributed(prob, r0, costs.C_FRAMEWORK,
+                                     num_shards=S, fault_plan=plan)
+    assert report.recovered and not report.dead
+    assert report.recovery_drift <= faults.DEFAULT_DEGRADED.repair_tol
+    assert report.down_rounds > 0 or report.retries > 0
+    r = np.asarray(res.assignment)
+    assert r.min() >= 0 and r.max() < K
+    assert np.isfinite(np.asarray(res.loads)).all()
+
+
+def test_nan_corruption_repaired():
+    """Pure NaN bit-corruption of carried aggregates is healed in-run."""
+    prob, r0 = _problem()
+    plan = _mixed_plan(seed=3, p_down=0.0, p_omit=0.0, p_lost=0.0,
+                       p_dup=0.0, p_corrupt=0.15, nan_frac=1.0)
+    res, report = refine_distributed(prob, r0, costs.C_FRAMEWORK,
+                                     num_shards=S, fault_plan=plan)
+    assert report.recovered
+    assert report.repairs > 0
+    assert np.isfinite(np.asarray(res.loads)).all()
+    # the worst pre-repair drift actually saw the NaN poison
+    assert report.max_repair_drift > faults.DEFAULT_DEGRADED.repair_tol
+
+
+def test_permanent_down_raises_dead_shard():
+    """A shard still down when the run ends is unrecoverable: typed raise,
+    with the report attached for post-mortems."""
+    prob, r0 = _problem()
+    plan = _permanent_down_plan(PLAN_ROUNDS, S, shard=1)
+    with pytest.raises(DeadShardError) as exc_info:
+        refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S,
+                           fault_plan=plan, max_turns=PLAN_ROUNDS // 2)
+    report = exc_info.value.report
+    assert report is not None and report.dead and not report.recovered
+
+
+def test_faulty_rejects_recompute_path():
+    prob, r0 = _problem()
+    with pytest.raises(ValueError, match="incremental"):
+        refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S,
+                           incremental=False,
+                           fault_plan=zero_fault_plan(8, S))
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: fault traffic is measured and byte-exactly reconciled
+# ---------------------------------------------------------------------------
+
+def test_fault_wire_reconciles_byte_exact():
+    prob, r0 = _problem()
+    plan = _mixed_plan(seed=11)
+    stats = boundary_stats(prob, S)
+
+    res, wire, report = refine_distributed(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, fault_plan=plan,
+        measure_wire=True)
+    rounds = int(res.num_turns)
+    extra = faults.plan_extra_bytes(plan, rounds, faults.message_bytes(
+        traced=False, simultaneous=False, num_machines=K))
+    assert extra > 0, "plan produced no retry/repair traffic"
+    led = ledger_for_run(stats, K, rounds, fault_bytes=extra)
+    check = reconcile(led, wire)
+    assert check.ok, check
+    assert int(wire.payload_bytes) == led.candidate_bytes \
+        + led.trace_bytes + led.fault_bytes
+
+    # per-round steady-state payload stays O(K): identical to a fault-free
+    # ledger for the same run length — fault bytes ride on top, they do
+    # not change the protocol's per-turn message size.
+    clean = ledger_for_run(stats, K, rounds)
+    assert led.per_round_bytes == clean.per_round_bytes
+
+
+def test_fault_wire_reconciles_traced_and_sweep():
+    prob, r0 = _problem()
+    plan = _mixed_plan(seed=13, p_down=0.0, p_corrupt=0.0)
+    stats = boundary_stats(prob, S)
+
+    res, _, wire, _ = refine_distributed_traced(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_turns=256,
+        fault_plan=plan, measure_wire=True)
+    extra = faults.plan_extra_bytes(
+        plan, int(res.num_turns),
+        faults.message_bytes(traced=True, simultaneous=False,
+                             num_machines=K))
+    assert reconcile(ledger_for_run(stats, K, int(res.num_turns),
+                                    traced=True, fault_bytes=extra),
+                     wire).ok
+
+    res, _, wire, _ = refine_distributed_simultaneous(
+        prob, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96,
+        fault_plan=plan, measure_wire=True)
+    extra = faults.plan_extra_bytes(
+        plan, int(res.num_turns),
+        faults.message_bytes(traced=False, simultaneous=True,
+                             num_machines=K))
+    assert reconcile(ledger_for_run(stats, K, int(res.num_turns),
+                                    simultaneous=True, fault_bytes=extra),
+                     wire).ok
+
+
+# ---------------------------------------------------------------------------
+# core: column repair + checkpoint heal
+# ---------------------------------------------------------------------------
+
+def test_repair_columns_clean_state_untouched():
+    prob, r0 = _problem(n=32, k=3, seed=5)
+    agg = init_aggregate_state(prob, r0)
+    repaired, observed, cols = repair_columns(prob, agg, 1e-3)
+    assert int(cols) == 0
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(repaired)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(observed) <= 1e-3
+
+
+def test_repair_columns_patches_only_bad_column():
+    prob, r0 = _problem(n=32, k=3, seed=5)
+    agg = init_aggregate_state(prob, r0)
+    bad = agg._replace(aggregate=agg.aggregate.at[:, 1].add(5.0))
+    repaired, observed, cols = repair_columns(prob, bad, 1e-3)
+    assert int(cols) == 1
+    assert float(observed) == pytest.approx(5.0)
+    np.testing.assert_array_equal(np.asarray(repaired.aggregate),
+                                  np.asarray(agg.aggregate))
+    # untouched columns come back bitwise from the corrupted carry, not
+    # from the oracle rebuild
+    np.testing.assert_array_equal(np.asarray(repaired.aggregate[:, 0]),
+                                  np.asarray(bad.aggregate[:, 0]))
+
+
+def test_checkpoint_heal_rolls_back_nan_poison():
+    prob, r0 = _problem(n=32, k=3, seed=5)
+    agg = init_aggregate_state(prob, r0)
+    ckpt = ckpt_mod.take(agg, jnp.zeros((), jnp.int32))
+    poisoned = agg._replace(aggregate=agg.aggregate.at[0, 0].set(jnp.nan))
+    assert not bool(ckpt_mod.is_healthy(poisoned))
+    healed, observed, cols, rolled = ckpt_mod.heal(prob, poisoned, ckpt)
+    assert bool(rolled)
+    assert float(observed) == np.inf       # NaN reports as inf drift
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(healed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a finite-but-drifted carry is column-repaired, not rolled back
+    drifted = agg._replace(aggregate=agg.aggregate.at[:, 2].add(7.0))
+    healed, observed, cols, rolled = ckpt_mod.heal(prob, drifted, ckpt)
+    assert not bool(rolled) and int(cols) == 1
+    assert float(drift(prob, healed)) <= ckpt_mod.DEFAULT_REPAIR_TOL
+
+
+def test_refine_repair_every_bitwise_dense_and_sparse():
+    """repair_every on a healthy run never rewrites clean state: the full
+    result is bitwise identical to the repair-free program, dense and
+    sparse alike."""
+    prob, r0 = _problem(n=48, k=3, seed=9)
+    for p in (prob, sparse_from_dense(prob)):
+        ref = refine(p, r0, costs.C_FRAMEWORK)
+        res = refine(p, r0, costs.C_FRAMEWORK, repair_every=8)
+        _assert_result_bitwise(ref, res)
+        # aggregate_drift is a diagnostic, not part of the bitwise
+        # contract: repair runs REPORT the observed f32 carry drift
+        # (like verify_every), the baseline reports 0.0
+        assert np.isfinite(float(res.aggregate_drift))
+
+
+# ---------------------------------------------------------------------------
+# DES: speed 0 == machine down (satellite regression)
+# ---------------------------------------------------------------------------
+
+def _des_down_setup(n=16, t=2):
+    from repro.des.engine import DESConfig, make_initial_state
+    from repro.des.workload import flooded_packet_workload
+    adj = random_degree_graph(n, seed=4, dmin=2, dmax=3)
+    spec = flooded_packet_workload(adj, 6, num_threads=t, scope=2,
+                                   max_per_lp=3)
+    cfg = DESConfig(num_lps=n, num_machines=2, num_threads=t,
+                    event_capacity=32, history_capacity=64, max_ticks=400)
+    # every LP on machine 0 — the machine we take down
+    state = make_initial_state(cfg, jnp.zeros(n, jnp.int32),
+                               spec.src, spec.time, spec.count)
+    return cfg, adj, state
+
+
+def test_des_speed_zero_freezes_machine():
+    """speed=0 means DOWN: the machine processes NOTHING while failed.
+    With every LP and every thread source on the failed machine, the
+    engine commits zero events and GVT stays at 0."""
+    from repro.des import scenarios
+    from repro.des.engine import run_simulation
+    cfg, adj, state = _des_down_setup()
+    sched = scenarios.true_failure(2, machine=0, fail_tick=0)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state,
+                         speed_schedule=sched)
+    assert int(out.processed) == 0
+    assert float(out.gvt) == 0.0
+    assert not bool(out.done)
+
+
+def test_des_machine_recovers_and_drains():
+    """Regression for the speed=0 busy-time bug (DESIGN.md §15.5): the
+    old engine divided service time by speed and cast the resulting inf
+    to int32 (saturating to INT32_MAX), wedging the 'failed' machine's
+    LP in a busy state it could never complete — the simulation never
+    drained even after the schedule restored the speed.  The fixed
+    engine freezes the queue instead, so recovery drains normally."""
+    from repro.des import scenarios
+    from repro.des.engine import run_simulation
+    cfg, adj, state = _des_down_setup()
+    cfg = dataclasses.replace(cfg, max_ticks=20_000)
+    sched = scenarios.true_failure(2, machine=0, fail_tick=0,
+                                   recover_tick=60)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state,
+                         speed_schedule=sched)
+    assert bool(out.done)
+    assert int(out.processed) > 0
+    assert int(out.dropped) == 0
+
+
+def test_des_all_positive_schedule_bitwise():
+    """A schedule that never hits zero leaves the engine bitwise on the
+    pre-§15.5 path: all the down-gates are constant-false."""
+    from repro.des import scenarios
+    from repro.des.engine import run_simulation
+    cfg, adj, state = _des_down_setup()
+    cfg = dataclasses.replace(cfg, max_ticks=20_000)
+    ref = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state)
+    out = run_simulation(cfg, jnp.asarray(adj, jnp.float32), state,
+                         speed_schedule=scenarios.constant(2))
+    assert int(ref.processed) == int(out.processed)
+    assert float(ref.gvt) == float(out.gvt)
+    np.testing.assert_array_equal(np.asarray(ref.seen), np.asarray(out.seen))
+
+
+def test_scenarios_exchange_loss_is_fault_plan():
+    from repro.des import scenarios
+    plan = scenarios.refine_exchange_loss(32, S, seed=1, p_lost=0.3)
+    assert isinstance(plan, faults.FaultPlan)
+    assert plan.num_shards == S and plan.horizon == 32
+    assert int(np.asarray(plan.lost).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# input validation (satellite: typed errors instead of jit-deep failures)
+# ---------------------------------------------------------------------------
+
+def _raw_problem(adj, b=None, w=None, mu=8.0):
+    n = adj.shape[0]
+    return PartitionProblem(
+        adjacency=jnp.asarray(adj, jnp.float32),
+        node_weights=jnp.asarray(np.ones(n) if b is None else b, jnp.float32),
+        speeds=jnp.asarray(np.ones(3) / 3 if w is None else w, jnp.float32),
+        mu=jnp.float32(mu))
+
+
+def test_validate_dense_typed_errors():
+    good = np.triu(np.ones((6, 6)), 1)
+    with pytest.raises(ProblemValidationError, match="symmetric"):
+        _raw_problem(good).validate()
+    sym = good + good.T
+    _raw_problem(sym).validate()
+    bad = sym.copy()
+    bad[0, 1] = bad[1, 0] = np.nan
+    with pytest.raises(ProblemValidationError, match="NaN"):
+        _raw_problem(bad).validate()
+    bad = sym.copy()
+    bad[0, 1] = bad[1, 0] = -1.0
+    with pytest.raises(ProblemValidationError, match="negative"):
+        _raw_problem(bad).validate()
+    with pytest.raises(ProblemValidationError, match="node_weights"):
+        _raw_problem(sym, b=-np.ones(6)).validate()
+    with pytest.raises(ProblemValidationError, match="speeds"):
+        _raw_problem(sym, w=np.array([0.5, 0.5, 0.0])).validate()
+    with pytest.raises(ProblemValidationError, match="square"):
+        PartitionProblem(jnp.zeros((4, 5)), jnp.ones(4), jnp.ones(2),
+                         jnp.float32(1.0)).validate()
+
+
+def test_validate_assignment_typed_errors():
+    validate_assignment(jnp.asarray([0, 1, 2, 0], jnp.int32), 3)
+    with pytest.raises(ProblemValidationError, match="integer"):
+        validate_assignment(jnp.zeros(4, jnp.float32), 3)
+    with pytest.raises(ProblemValidationError, match=r"\[0, 3\)"):
+        validate_assignment(jnp.asarray([0, 1, 3, 0], jnp.int32), 3)
+    with pytest.raises(ProblemValidationError, match="entries"):
+        validate_assignment(jnp.asarray([0, 1], jnp.int32), 3, num_nodes=4)
+    with pytest.raises(ProblemValidationError, match="1-D"):
+        validate_assignment(jnp.zeros((2, 2), jnp.int32), 3)
+
+
+def test_validate_sparse_typed_errors():
+    prob, _ = _problem(n=24, k=3, seed=2)
+    sp = sparse_from_dense(prob)
+    sp.validate()
+    with pytest.raises(ProblemValidationError, match="NaN"):
+        dataclasses.replace(
+            sp, edge_weights=sp.edge_weights.at[0].set(jnp.nan)).validate()
+    with pytest.raises(ProblemValidationError, match="negative"):
+        dataclasses.replace(
+            sp, edge_weights=sp.edge_weights.at[0].set(-2.0)).validate()
+    with pytest.raises(ProblemValidationError, match="row_start"):
+        dataclasses.replace(
+            sp, row_start=sp.row_start[::-1]).validate()
+    with pytest.raises(ProblemValidationError, match="sorted"):
+        dataclasses.replace(
+            sp, senders=sp.senders[::-1],
+            receivers=sp.receivers[::-1],
+            edge_weights=sp.edge_weights[::-1]).validate()
+
+
+# ---------------------------------------------------------------------------
+# obs: abort flush + recovery verdict in report --check
+# ---------------------------------------------------------------------------
+
+def test_recorder_abort_flushes_terminal_event():
+    class Boom(RuntimeError):
+        pass
+
+    sink = MemorySink()
+    rec = Recorder([sink])
+    run = rec.new_run("refine")
+    rec.begin_rows()
+    rec._on_turn_row(np.int32(0), np.int32(0), np.int32(1), np.int32(3),
+                     np.int32(0), np.int32(1), np.float32(0.5),
+                     np.float32(1.0), np.float32(9.0), np.float32(4.0),
+                     np.int32(0))
+    with pytest.raises(Boom):
+        with rec.phase("refine.loop", run):
+            raise Boom("device OOM mid-run")
+    kinds = [e["kind"] for e in sink.events]
+    assert kinds[-1] == "run_aborted"
+    assert kinds[-2] == "phase"            # the span still closed
+    aborted = sink.events[-1]
+    assert "Boom" in aborted["error"]
+    assert aborted["pending_rows"] == 1
+    # an aborted run fails --check loudly
+    summary = replay_run(split_runs(sink.events)[run])
+    assert any("aborted" in p for p in check_run(summary))
+
+
+def test_report_check_requires_recovery_verdict():
+    """A fault-injected run passes --check only if its run_end carries
+    recovered=True within budget; a missing/false verdict is a failure."""
+    prob, r0 = _problem()
+    rec = Recorder([MemorySink()])
+    refine_distributed(prob, r0, costs.C_FRAMEWORK, num_shards=S,
+                       fault_plan=_mixed_plan(seed=17), recorder=rec)
+    runs = split_runs(rec.events)
+    assert len(runs) == 1
+    events = next(iter(runs.values()))
+    summary = replay_run(events)
+    assert summary["faults"], "fault events were not recorded"
+    assert not check_run(summary), check_run(summary)
+
+    # strip the verdict: same events must now FAIL the check
+    stripped = [dict(e) for e in events]
+    for e in stripped:
+        if e["kind"] == "run_end":
+            e["recovered"] = False
+    problems = check_run(replay_run(stripped))
+    assert any("recover" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# adversarial property suite (hypothesis, stub-aware — see conftest)
+# ---------------------------------------------------------------------------
+
+_DRIVER = {
+    "plain": lambda p, r0, plan: refine_distributed(
+        p, r0, costs.C_FRAMEWORK, num_shards=S, fault_plan=plan),
+    "traced": lambda p, r0, plan: refine_distributed_traced(
+        p, r0, costs.C_FRAMEWORK, num_shards=S, max_turns=256,
+        fault_plan=plan)[::2],
+    "sweep": lambda p, r0, plan: refine_distributed_simultaneous(
+        p, r0, costs.C_FRAMEWORK, num_shards=S, max_sweeps=96,
+        fault_plan=plan)[::2],
+}
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), mode=st.sampled_from(sorted(_DRIVER)))
+def test_random_fault_plans_recover_or_raise(seed, mode):
+    """ANY seeded fault plan either recovers within the repair budget or
+    raises a typed FaultToleranceError — never a silent bad result."""
+    prob, r0 = _problem()
+    plan = _mixed_plan(seed=seed)
+    try:
+        res, report = _DRIVER[mode](prob, r0, plan)
+    except FaultToleranceError as err:
+        assert err.report is not None
+        assert err.report.dead or not err.report.recovered
+        return
+    assert report.recovered
+    assert report.recovery_drift <= faults.DEFAULT_DEGRADED.repair_tol
+    r = np.asarray(res.assignment)
+    assert r.min() >= 0 and r.max() < K
+    assert np.isfinite(np.asarray(res.loads)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), use_sparse=st.booleans(),
+       repair_every=st.sampled_from([4, 8, 16]))
+def test_repair_every_never_perturbs_healthy_runs(seed, use_sparse,
+                                                  repair_every):
+    prob, r0 = _problem(n=48, k=3, seed=seed % 1000)
+    p = sparse_from_dense(prob) if use_sparse else prob
+    ref = refine(p, r0, costs.C_FRAMEWORK)
+    res = refine(p, r0, costs.C_FRAMEWORK, repair_every=repair_every)
+    _assert_result_bitwise(ref, res)
+    assert np.isfinite(np.asarray(res.loads)).all()
