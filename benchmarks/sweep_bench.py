@@ -77,10 +77,22 @@ def _mixed_cases(num: int, n: int, k: int, seed0: int = 0):
 def check_game_agreement(num: int = 8, n: int = 96, k: int = 4,
                          max_turns: int = 192, recorder=None):
     """Gate 1: run_sweep vs per-case looped refine_traced."""
+    from repro.sweeps.runtime import _group_key
+
     cases = _mixed_cases(num, n, k)
+    # compile-count gate (DESIGN.md §16.5): each sweep group must lower
+    # exactly once — a case that breaks its group's jit signature would
+    # silently multiply compile time, which repro.analysis flags
+    # statically and this cache-miss counter catches at runtime
+    groups = len({_group_key(c) for c in cases})
+    cache_before = sweeps.refine_traced_batched._cache_size()
     res = sweeps.run_sweep(sweeps.make_spec(cases, mode="traced",
                                             max_turns=max_turns),
                            recorder=recorder)
+    compiled = sweeps.refine_traced_batched._cache_size() - cache_before
+    assert compiled == groups, \
+        f"sweep compiled {compiled} programs for {groups} case groups — " \
+        f"a group is recompiling (run python -m repro.analysis --check)"
     max_rel = 0.0
     for i, case in enumerate(cases):
         r_l, t_l = refine_traced(case.problem,
@@ -107,7 +119,8 @@ def check_game_agreement(num: int = 8, n: int = 96, k: int = 4,
             assert rel <= POTENTIAL_TOL, \
                 f"[{case.label}] {pot} drifted {rel:.2e} > {POTENTIAL_TOL}"
     return {"cases": num, "n": n, "k": k, "turns": max_turns,
-            "moves": res.moves.tolist(),
+            "moves": res.moves.tolist(), "groups": groups,
+            "compiled_programs": compiled,
             "max_rel_potential_diff": max_rel, "bitwise_moves": True}
 
 

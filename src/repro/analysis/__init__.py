@@ -1,0 +1,30 @@
+"""repro.analysis — the contract linter (DESIGN.md §16).
+
+Statically verifies the invariants the whole stack rests on: zero
+callbacks on telemetry-disabled paths, an f32-only dataflow, one-lowering
+sweep groups, the canonical 9-arg ``dissat_fn`` convention, the single
+Eq.-4 θ-subtraction site, trace-safe jitted bodies, the dense/sparse ×
+runtime dispatch matrix, and the O(K) wire contract — all before any
+driver runs.
+
+CLI::
+
+    python -m repro.analysis --check [--json out.json]
+
+Known gaps live in the checked-in ``baseline.json``; ``--check`` fails
+only on NEW findings.
+"""
+from .registry import (AnalysisContext, FAMILIES, Finding, Rule,
+                       default_baseline_path, load_baseline,
+                       registered_rules, rule, run_rules, split_findings)
+
+# importing the rule modules populates the registry
+from . import ast_rules, docs_rules, jaxpr_rules, wire_rules  # noqa: E402,F401
+from . import entrypoints  # noqa: E402,F401
+
+__all__ = [
+    "AnalysisContext", "FAMILIES", "Finding", "Rule", "rule",
+    "registered_rules", "run_rules", "load_baseline", "split_findings",
+    "default_baseline_path", "entrypoints", "ast_rules", "docs_rules",
+    "jaxpr_rules", "wire_rules",
+]

@@ -1,0 +1,119 @@
+"""CLI for the contract linter: ``python -m repro.analysis --check``.
+
+Runs the rule registry (all four families by default), diffs the
+findings against the checked-in baseline, prints the dispatch matrix and
+a findings report, and optionally dumps everything as JSON.  Exit code:
+0 when every finding is baselined, 2 when NEW findings exist (only under
+``--check``; without it the run is informational).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from . import (AnalysisContext, FAMILIES, default_baseline_path,
+               load_baseline, registered_rules, run_rules, split_findings)
+
+
+def _print_matrix(report: dict) -> None:
+    cells = report.get("cells", {})
+    if not cells:
+        return
+    print("\ndispatch-coverage matrix:")
+    width = max(len(c) for c in cells) + 2
+    for cell, info in cells.items():
+        status = "covered" if info["covered"] else "MISSING"
+        print(f"  {cell:<{width}}{status}")
+        for m in info["missing"]:
+            print(f"  {'':<{width}}  wants: {m}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="contract linter: jaxpr / AST / wire / docs analyzers "
+                    "(DESIGN.md §16)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 2 if any finding is not in the baseline")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full findings report as JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default=str(default_baseline_path()),
+                    help="baseline file (default: the checked-in one)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to accept ALL current "
+                         "findings (review the diff!)")
+    ap.add_argument("--families", nargs="+", choices=FAMILIES,
+                    default=None, metavar="FAMILY",
+                    help=f"run only these rule families {FAMILIES}")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: autodetected)")
+    args = ap.parse_args(argv)
+
+    ctx = AnalysisContext(repo_root=args.root)
+    rules = registered_rules(args.families)
+    t0 = time.perf_counter()
+    findings = run_rules(ctx, args.families)
+    elapsed = time.perf_counter() - t0
+
+    baseline = load_baseline(args.baseline)
+    new, known, stale = split_findings(findings, baseline)
+
+    fams = sorted({r.family for r in rules})
+    print(f"repro.analysis: {len(rules)} rules "
+          f"({', '.join(fams)}) in {elapsed:.1f}s")
+    if "jaxpr-zero-callback" in ctx.reports:
+        eps = ctx.reports["jaxpr-zero-callback"]["entry_points"]
+        print(f"  traced entry points: {len(eps)}")
+    if "sweep-compile-groups" in ctx.reports:
+        r = ctx.reports["sweep-compile-groups"]
+        print(f"  sweep compile audit: {r['cases']} cases in "
+              f"{r['groups']} groups, {r['violations']} violations")
+    _print_matrix(ctx.reports.get("dispatch-coverage", {}))
+
+    print(f"\nfindings: {len(findings)} total — {len(known)} baselined, "
+          f"{len(new)} new")
+    for f in known:
+        print(f"  [baselined] {f.id}")
+    for f in new:
+        loc = f" ({f.file}:{f.line})" if f.file else ""
+        print(f"  [NEW] {f.id}{loc}\n        {f.message}")
+    for sid in sorted(stale):
+        print(f"  [stale baseline entry — delete it] {sid}")
+
+    if args.json:
+        payload = {
+            "rules": [{"name": r.name, "family": r.family, "doc": r.doc}
+                      for r in rules],
+            "findings": [f.to_json() for f in findings],
+            "new": [f.id for f in new],
+            "baselined": [f.id for f in known],
+            "stale_baseline": sorted(stale),
+            "reports": ctx.reports,
+            "elapsed_seconds": elapsed,
+        }
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+        print(f"\nwrote {path}")
+
+    if args.update_baseline:
+        entries = sorted(({"rule": f.rule, "key": f.key} for f in findings),
+                        key=lambda e: (e["rule"], e["key"]))
+        pathlib.Path(args.baseline).write_text(
+            json.dumps({"findings": entries}, indent=2) + "\n")
+        print(f"baseline rewritten with {len(entries)} entries")
+        return 0
+
+    if args.check and new:
+        print(f"\nFAIL: {len(new)} new finding(s) not in baseline "
+              f"({args.baseline})")
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

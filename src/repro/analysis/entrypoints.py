@@ -1,0 +1,228 @@
+"""Registry of public entry points the jaxpr analyzers trace (DESIGN.md §16.3).
+
+Every public execution path of the stack — controller refinement (three
+modes, dense and sparse, jnp and fused-kernel reductions), the batched
+drivers, all four distributed drivers, and the DES tick — is registered
+here with a thunk that traces it on a small canonical problem with
+telemetry disabled (``recorder=None`` / ``emit_*=None``).  The analyzers
+then make one statement over ALL of them: the disabled-telemetry
+programs contain zero host callbacks and never leave the f32 dataflow.
+This replaces the single hand-written jaxpr pin that used to live in
+``tests/test_obs.py`` with registry-driven coverage: a new driver gets
+the same guarantees by adding one entry here.
+
+Tracing is cached per process (``lru_cache``), so the CLI and the test
+suite share the work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EntryPoint", "registered_entry_points", "trace_entry_point",
+           "trace_all", "canonical_problem", "canonical_sparse",
+           "canonical_batch", "canonical_assignment"]
+
+_N, _K = 16, 3
+_MAX_TURNS = 32
+_MAX_SWEEPS = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One traced public execution path.
+
+    ``trace`` returns the ClosedJaxpr of the path on its canonical small
+    problem, with telemetry disabled — exactly the program the
+    ``recorder=None`` fast path stages.
+    """
+    name: str
+    runtime: str   # "controller" | "batched" | "distributed" | "des"
+    trace: Callable[[], object]
+
+
+@lru_cache(maxsize=None)
+def canonical_problem(n: int = _N, k: int = _K, seed: int = 3):
+    """The canonical small dense problem every analyzer traces on."""
+    from ..core.problem import make_problem
+    from ..graphs.generators import random_degree_graph, random_weights
+    adj = random_degree_graph(n, seed=seed)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    return make_problem(c, b, np.ones(k) / k, mu=8.0)
+
+
+@lru_cache(maxsize=None)
+def canonical_sparse(n: int = _N, k: int = _K, seed: int = 3):
+    from ..core.sparse import sparse_from_dense
+    return sparse_from_dense(canonical_problem(n, k, seed))
+
+
+def canonical_assignment(n: int = _N, k: int = _K):
+    return jnp.asarray(np.arange(n) % k, jnp.int32)
+
+
+@lru_cache(maxsize=None)
+def canonical_batch(b: int = 2, n: int = _N, k: int = _K):
+    """A stacked pair of same-shape problems + (B, N) assignments."""
+    from ..core.batch import stack_problems
+    probs = stack_problems([canonical_problem(n, k, seed=3 + i)
+                            for i in range(b)])
+    r0 = jnp.stack([canonical_assignment(n, k)] * b)
+    return probs, r0
+
+
+@lru_cache(maxsize=None)
+def _canonical_des():
+    """A tiny DES scenario (config, adjacency, initial state)."""
+    from ..des.engine import DESConfig, make_initial_state
+    from ..des.workload import flooded_packet_workload
+    from ..graphs.generators import preferential_attachment
+    n, k, threads = 12, 2, 4
+    adj = preferential_attachment(n, 5, m=2)
+    spec = flooded_packet_workload(adj, 9, num_threads=threads,
+                                   num_windows=1, scope=2,
+                                   window_sim_time=20.0, max_per_lp=2)
+    cfg = DESConfig(num_lps=n, num_machines=k, num_threads=threads,
+                    event_capacity=32, history_capacity=64,
+                    inter_delay=6, intra_delay=1, trace_stride=10,
+                    max_ticks=1_000, machine_speeds=(1.0, 0.7),
+                    refine_freq=40, refine_theta_scale=5.0,
+                    migration_freeze=0.25)
+    m0 = jnp.asarray(np.arange(n) % k, jnp.int32)
+    state0 = make_initial_state(cfg, m0, spec.src, spec.time, spec.count)
+    return cfg, jnp.asarray(adj, jnp.float32), state0
+
+
+# -- the individual trace thunks (one per registered path) -----------------
+
+def _controller(fn_name: str, sparse: bool = False, **kwargs):
+    import importlib
+    # attribute access would find the re-exported refine() function, not
+    # the module, so resolve the submodule explicitly
+    refine_mod = importlib.import_module("repro.core.refine")
+    fn = getattr(refine_mod, fn_name)
+    prob = canonical_sparse() if sparse else canonical_problem()
+    return jax.make_jaxpr(lambda r: fn(prob, r, **kwargs))(
+        canonical_assignment())
+
+
+def _kernel_dissat():
+    from ..core.refine import refine
+    from ..kernels.ops import make_aggregate_dissat_fn
+    prob = canonical_problem()
+    dfn = make_aggregate_dissat_fn(interpret=True)
+    return jax.make_jaxpr(
+        lambda r: refine(prob, r, "c", max_turns=_MAX_TURNS, dissat_fn=dfn)
+    )(canonical_assignment())
+
+
+def _edge_kernel_dissat():
+    from ..core.refine import refine
+    from ..kernels.ops import make_edge_dissat_fn
+    sp = canonical_sparse()
+    dfn = make_edge_dissat_fn(sp, interpret=True)
+    return jax.make_jaxpr(
+        lambda r: refine(sp, r, "c", max_turns=_MAX_TURNS, dissat_fn=dfn)
+    )(canonical_assignment())
+
+
+def _batched(fn_name: str, **kwargs):
+    from ..core import batch as batch_mod
+    fn = getattr(batch_mod, fn_name)
+    probs, r0 = canonical_batch()
+    return jax.make_jaxpr(lambda r: fn(probs, r, "c", **kwargs))(r0)
+
+
+def _distributed(fn_name: str, **kwargs):
+    from ..distributed import runtime as rt
+    fn = getattr(rt, fn_name)
+    prob = canonical_problem()
+    return jax.make_jaxpr(
+        lambda r: fn(prob, r, "c", num_shards=3, **kwargs)
+    )(canonical_assignment())
+
+
+def _shard_map():
+    from ..distributed.runtime import refine_distributed_shard_map
+    prob = canonical_problem()
+    # num_shards=1 so the real collective path traces on any host; the
+    # mesh degenerates but the all_gather program is the same code path.
+    return jax.make_jaxpr(
+        lambda r: refine_distributed_shard_map(prob, r, "c", num_shards=1,
+                                               max_turns=_MAX_TURNS)
+    )(canonical_assignment())
+
+
+def _des_tick():
+    from ..des.engine import des_tick
+    cfg, adj, state0 = _canonical_des()
+    return jax.make_jaxpr(lambda s: des_tick(cfg, adj, s))(state0)
+
+
+_ENTRY_POINTS: tuple[EntryPoint, ...] = (
+    EntryPoint("refine", "controller",
+               lambda: _controller("refine", max_turns=_MAX_TURNS)),
+    EntryPoint("refine.recompute", "controller",
+               lambda: _controller("refine", max_turns=_MAX_TURNS,
+                                   incremental=False)),
+    EntryPoint("refine.theta", "controller",
+               lambda: _controller("refine", framework="ct",
+                                   max_turns=_MAX_TURNS, theta=0.25)),
+    EntryPoint("refine.kernel", "controller", _kernel_dissat),
+    EntryPoint("refine_traced", "controller",
+               lambda: _controller("refine_traced", max_turns=_MAX_TURNS)),
+    EntryPoint("refine_simultaneous", "controller",
+               lambda: _controller("refine_simultaneous",
+                                   max_sweeps=_MAX_SWEEPS)),
+    EntryPoint("refine.sparse", "controller",
+               lambda: _controller("refine", sparse=True,
+                                   max_turns=_MAX_TURNS)),
+    EntryPoint("refine_traced.sparse", "controller",
+               lambda: _controller("refine_traced", sparse=True,
+                                   max_turns=_MAX_TURNS)),
+    EntryPoint("refine.sparse.edge_kernel", "controller",
+               _edge_kernel_dissat),
+    EntryPoint("batch.refine", "batched",
+               lambda: _batched("refine_batched", max_turns=_MAX_TURNS)),
+    EntryPoint("batch.refine_traced", "batched",
+               lambda: _batched("refine_traced_batched",
+                                max_turns=_MAX_TURNS)),
+    EntryPoint("batch.refine_simultaneous", "batched",
+               lambda: _batched("refine_simultaneous_batched",
+                                max_sweeps=_MAX_SWEEPS)),
+    EntryPoint("distributed.refine", "distributed",
+               lambda: _distributed("refine_distributed",
+                                    max_turns=_MAX_TURNS)),
+    EntryPoint("distributed.refine_traced", "distributed",
+               lambda: _distributed("refine_distributed_traced",
+                                    max_turns=_MAX_TURNS)),
+    EntryPoint("distributed.refine_simultaneous", "distributed",
+               lambda: _distributed("refine_distributed_simultaneous",
+                                    max_sweeps=_MAX_SWEEPS)),
+    EntryPoint("distributed.shard_map", "distributed", _shard_map),
+    EntryPoint("des.tick", "des", _des_tick),
+)
+
+
+def registered_entry_points() -> tuple[EntryPoint, ...]:
+    return _ENTRY_POINTS
+
+
+@lru_cache(maxsize=None)
+def trace_entry_point(name: str):
+    """ClosedJaxpr of the named entry point (cached per process)."""
+    for ep in _ENTRY_POINTS:
+        if ep.name == name:
+            return ep.trace()
+    raise KeyError(f"unknown entry point {name!r}; registered: "
+                   f"{[e.name for e in _ENTRY_POINTS]}")
+
+
+def trace_all() -> dict[str, object]:
+    return {ep.name: trace_entry_point(ep.name) for ep in _ENTRY_POINTS}

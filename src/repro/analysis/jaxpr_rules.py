@@ -1,0 +1,200 @@
+"""jaxpr-family analyzers: walk the traced entry points (DESIGN.md §16.3).
+
+Three statically checkable properties of the staged programs:
+
+  * **zero-callback** — the ``recorder=None`` / ``emit_*=None`` program
+    of every registered entry point contains no host-callback primitive
+    (the telemetry seams of DESIGN.md §14 must stage NOTHING when
+    disabled; this generalizes the one-off jaxpr pin that used to live
+    in ``tests/test_obs.py``).
+  * **dtype-drift** — no equation output anywhere in any entry-point
+    jaxpr leaves the f32 dataflow (no f64/weak-f64 promotion, no f16/
+    bf16 truncation, no complex, no 64-bit ints): the bitwise contracts
+    (sparse==dense, batched==looped, distributed==controller) are only
+    meaningful if every path computes in the same precision.
+  * **compile-cache audit** — over the canonical sweep grouping grid,
+    every case inside one ``sweeps.runtime._group_key`` group must
+    present the identical jit signature (pytree structure + per-element
+    leaf shapes/dtypes), i.e. each group lowers exactly once.  A case
+    that would silently trigger recompilation inside its group is a
+    finding — the runtime gate for this is the compile-count assert in
+    ``benchmarks/sweep_bench.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from .registry import AnalysisContext, Finding, rule
+from .entrypoints import (canonical_assignment, canonical_problem,
+                          canonical_sparse)
+
+__all__ = ["iter_eqns", "callback_primitives", "dtype_drift",
+           "canonical_sweep_cases", "case_signature",
+           "group_signature_findings", "compiled_group_count"]
+
+# the only dtypes the potential/dissatisfaction dataflow may stage;
+# everything else (f64, f16/bf16, complex, 64-bit ints) is drift
+_ALLOWED_DTYPES = frozenset({
+    "bool", "int8", "uint8", "int16", "uint16", "int32", "uint32",
+    "float32",
+})
+
+
+def _sub_jaxprs(params: dict):
+    for v in params.values():
+        vals = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vals:
+            if hasattr(item, "eqns"):                 # Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr"):              # ClosedJaxpr
+                yield item.jaxpr
+
+
+def iter_eqns(jaxpr):
+    """All equations of ``jaxpr`` including nested sub-jaxprs
+    (scan/while/cond bodies, pjit calls, custom_vmap, shard_map...)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)   # accept ClosedJaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def callback_primitives(jaxpr) -> list[str]:
+    """Names of every host-callback primitive staged in ``jaxpr``."""
+    return [eqn.primitive.name for eqn in iter_eqns(jaxpr)
+            if "callback" in eqn.primitive.name]
+
+
+def _aval_dtype_name(aval) -> str | None:
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return None                       # tokens etc.
+    try:
+        if jax.dtypes.issubdtype(dtype, jax.dtypes.extended):
+            return None                   # PRNG key dtypes
+    except TypeError:
+        return None
+    return np.dtype(dtype).name
+
+
+def dtype_drift(jaxpr) -> list[tuple[str, str]]:
+    """Sorted ``(dtype, primitive)`` pairs for every off-contract dtype
+    staged by any equation output (one representative primitive each)."""
+    seen: dict[str, str] = {}
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            name = _aval_dtype_name(getattr(var, "aval", None))
+            if name is not None and name not in _ALLOWED_DTYPES:
+                seen.setdefault(name, eqn.primitive.name)
+    return sorted(seen.items())
+
+
+@rule("jaxpr-zero-callback", "jaxpr")
+def _rule_zero_callback(ctx: AnalysisContext) -> list[Finding]:
+    """recorder=None programs stage zero host callbacks (every entry point)."""
+    findings = []
+    for name, jaxpr in ctx.entry_jaxprs().items():
+        for prim in sorted(set(callback_primitives(jaxpr))):
+            findings.append(Finding(
+                rule="jaxpr-zero-callback", key=f"{name}:{prim}",
+                message=f"entry point {name!r} stages host callback "
+                        f"primitive {prim!r} on its telemetry-disabled "
+                        f"path (must be identical to the pre-telemetry "
+                        f"program — DESIGN.md §14.2)"))
+    ctx.reports["jaxpr-zero-callback"] = {
+        "entry_points": sorted(ctx.entry_jaxprs())}
+    return findings
+
+
+@rule("jaxpr-dtype-drift", "jaxpr")
+def _rule_dtype_drift(ctx: AnalysisContext) -> list[Finding]:
+    """No equation output leaves the f32 dataflow (any entry point)."""
+    findings = []
+    for name, jaxpr in ctx.entry_jaxprs().items():
+        for dtype, prim in dtype_drift(jaxpr):
+            findings.append(Finding(
+                rule="jaxpr-dtype-drift", key=f"{name}:{dtype}",
+                message=f"entry point {name!r} stages a {dtype} value "
+                        f"(first seen at primitive {prim!r}); the "
+                        f"bitwise contracts require the f32 dataflow"))
+    return findings
+
+
+# -- compile-cache audit over the sweep grouping grid ----------------------
+
+def canonical_sweep_cases():
+    """The canonical grouping grid: (framework, theta-ness, problem shape)
+    with two same-shape dense problems per combination, a second dense
+    shape, and a sparse problem — 16 cases in 12 groups."""
+    from ..sweeps.runtime import SweepCase
+    probs = [canonical_problem(16, 3, seed=3),
+             canonical_problem(16, 3, seed=11),
+             canonical_problem(24, 3, seed=5),
+             canonical_sparse(16, 3, seed=3)]
+    cases = []
+    for p in probs:
+        n = p.num_nodes
+        r0 = canonical_assignment(n, 3)
+        for fw in ("c", "ct"):
+            for theta in (None, 0.3):
+                cases.append(SweepCase(problem=p, assignment=r0,
+                                       framework=fw, theta=theta,
+                                       label=f"n{n}-{fw}-{theta}"))
+    return cases
+
+
+def case_signature(case):
+    """The jit-signature surrogate of one case: the pytree structure and
+    per-element leaf (shape, dtype) of its single-case stack.  Two cases
+    in the same group stack into one program iff these agree (the static
+    argnames — framework, theta-ness, mode knobs — are already part of
+    ``_group_key`` / the spec)."""
+    from ..sweeps.runtime import _stack_group
+    operands = _stack_group([case])
+    leaves, treedef = jax.tree_util.tree_flatten(operands)
+    return (str(treedef),
+            tuple((leaf.shape[1:], str(leaf.dtype)) for leaf in leaves))
+
+
+def group_signature_findings(cases) -> tuple[list[Finding], dict]:
+    """Audit: every ``_group_key`` group must hold exactly one signature."""
+    from ..sweeps.runtime import _group_key
+    groups: dict = {}
+    for case in cases:
+        groups.setdefault(_group_key(case), []).append(case)
+    findings = []
+    for gkey, gcases in groups.items():
+        sigs = {}
+        for case in gcases:
+            sigs.setdefault(case_signature(case), []).append(case.label)
+        if len(sigs) > 1:
+            fw, theta_none, shape = gkey
+            labels = sorted(l for ls in sigs.values() for l in ls)
+            findings.append(Finding(
+                rule="sweep-compile-groups",
+                key=f"{fw}:{'nothet' if theta_none else 'theta'}:{shape}",
+                message=f"sweep group {gkey} holds {len(sigs)} distinct "
+                        f"jit signatures across cases {labels} — the "
+                        f"group would lower {len(sigs)} times instead of "
+                        f"once (recompilation trigger)"))
+    report = {"cases": len(cases), "groups": len(groups),
+              "violations": len(findings)}
+    return findings, report
+
+
+@rule("sweep-compile-groups", "jaxpr")
+def _rule_compile_groups(ctx: AnalysisContext) -> list[Finding]:
+    """Each canonical sweep group presents exactly one jit signature."""
+    findings, report = group_signature_findings(canonical_sweep_cases())
+    ctx.reports["sweep-compile-groups"] = report
+    return findings
+
+
+def compiled_group_count(fn) -> int:
+    """Current jit-cache entry count of a jitted callable — the runtime
+    counterpart of the static audit; ``benchmarks/sweep_bench.py`` takes
+    the delta across a sweep and asserts it equals the group count."""
+    return fn._cache_size()

@@ -1,0 +1,193 @@
+"""Rule registry + analysis context for the contract linter (DESIGN.md §16).
+
+The linter is a flat registry of named rules grouped into four families:
+
+  * ``jaxpr`` — trace the registered public entry points
+    (:mod:`repro.analysis.entrypoints`) and walk the jaxprs: zero host
+    callbacks on ``recorder=None`` paths, no dtype drift out of the f32
+    potential dataflow, and a compile-cache audit over the sweep
+    grouping grid.
+  * ``ast``   — stdlib-``ast`` lint over ``src/``: the canonical 9-arg
+    ``dissat_fn`` signature, the single Eq.-4 θ-subtraction site,
+    trace-unsafe patterns inside jitted bodies, and the
+    dense/sparse × runtime dispatch-coverage matrix.
+  * ``wire``  — size the exchange buffers symbolically
+    (``jax.eval_shape`` over :mod:`repro.distributed.protocol`) and
+    prove the per-round ledger bytes are independent of N.
+  * ``docs``  — the DESIGN.md-§ and doc-file reference scans
+    (formerly inlined in ``tests/test_docs.py``).
+
+Findings carry a stable id ``rule:key``.  A checked-in baseline file
+(:func:`load_baseline`) absorbs *known* gaps — today exactly the
+missing sparse×distributed dispatch cell — so CI fails only on NEW
+findings, never on the documented ones.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+from typing import Callable, Iterable
+
+__all__ = [
+    "Finding", "Rule", "AnalysisContext", "rule", "registered_rules",
+    "run_rules", "load_baseline", "split_findings", "default_baseline_path",
+    "FAMILIES",
+]
+
+FAMILIES = ("jaxpr", "ast", "wire", "docs")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation (or documented gap) with a stable identity."""
+    rule: str
+    key: str          # stable within the rule — the baseline matches on it
+    message: str
+    file: str = ""    # repo-relative path, when the finding has a location
+    line: int = 0
+
+    @property
+    def id(self) -> str:
+        return f"{self.rule}:{self.key}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "key": self.key, "message": self.message,
+                "file": self.file, "line": self.line, "id": self.id}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    family: str
+    doc: str
+    fn: Callable[["AnalysisContext"], list[Finding]]
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def rule(name: str, family: str):
+    """Register ``fn(ctx) -> list[Finding]`` under ``name``.
+
+    Adding a rule is: write the function, decorate it, done — the CLI,
+    the baseline machinery and ``tests/test_contracts.py`` pick it up
+    from the registry (DESIGN.md §16.2).
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"unknown rule family {family!r}; "
+                         f"expected one of {FAMILIES}")
+
+    def deco(fn):
+        if name in _RULES:
+            raise ValueError(f"duplicate rule name {name!r}")
+        _RULES[name] = Rule(name=name, family=family,
+                            doc=(fn.__doc__ or "").strip().splitlines()[0]
+                            if fn.__doc__ else "", fn=fn)
+        return fn
+    return deco
+
+
+def registered_rules(families: Iterable[str] | None = None) -> list[Rule]:
+    fams = set(families) if families is not None else set(FAMILIES)
+    return [r for r in _RULES.values() if r.family in fams]
+
+
+def _default_repo_root() -> pathlib.Path:
+    # src/repro/analysis/registry.py -> repo root is three levels above src
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+class AnalysisContext:
+    """Shared state for one analysis run: cached sources/ASTs, lazily
+    traced entry-point jaxprs, and the per-rule report stash.
+
+    ``source_overrides`` maps repo-relative paths to replacement source
+    text — the seeded-violation tests use it to lint a deliberately
+    broken copy of a module without touching the tree on disk.
+    """
+
+    def __init__(self, repo_root: pathlib.Path | str | None = None,
+                 source_overrides: dict[str, str] | None = None):
+        self.repo = pathlib.Path(repo_root) if repo_root else \
+            _default_repo_root()
+        self.source_overrides = dict(source_overrides or {})
+        self._sources: dict[str, str] = {}
+        self._trees: dict[str, ast.Module] = {}
+        self._jaxprs = None
+        self.reports: dict[str, dict] = {}
+
+    # -- sources / ASTs ----------------------------------------------------
+    def source(self, relpath: str) -> str:
+        if relpath not in self._sources:
+            if relpath in self.source_overrides:
+                self._sources[relpath] = self.source_overrides[relpath]
+            else:
+                self._sources[relpath] = (self.repo / relpath).read_text()
+        return self._sources[relpath]
+
+    def tree(self, relpath: str) -> ast.Module:
+        if relpath not in self._trees:
+            self._trees[relpath] = ast.parse(self.source(relpath),
+                                             filename=relpath)
+        return self._trees[relpath]
+
+    def py_files(self, *dirs: str) -> list[str]:
+        """Repo-relative paths of every .py file under the given dirs,
+        plus any override paths that fall under them."""
+        out: set[str] = set()
+        for d in dirs:
+            base = self.repo / d
+            if base.is_dir():
+                out.update(str(p.relative_to(self.repo))
+                           for p in base.rglob("*.py"))
+            out.update(p for p in self.source_overrides
+                       if p.startswith(d.rstrip("/") + "/"))
+        return sorted(out)
+
+    # -- entry-point jaxprs ------------------------------------------------
+    def entry_jaxprs(self) -> dict[str, object]:
+        """name -> ClosedJaxpr for every registered entry point (lazy;
+        tracing happens once per context, and once per process thanks to
+        the ``entrypoints`` module cache)."""
+        if self._jaxprs is None:
+            from . import entrypoints
+            self._jaxprs = entrypoints.trace_all()
+        return self._jaxprs
+
+
+def run_rules(ctx: AnalysisContext,
+              families: Iterable[str] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for r in registered_rules(families):
+        findings.extend(r.fn(ctx))
+    return findings
+
+
+# -- baseline --------------------------------------------------------------
+
+def default_baseline_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+
+def load_baseline(path: pathlib.Path | str | None = None) -> set[str]:
+    """The set of finding ids (``rule:key``) that are known and accepted."""
+    p = pathlib.Path(path) if path else default_baseline_path()
+    if not p.is_file():
+        return set()
+    data = json.loads(p.read_text())
+    return {f"{e['rule']}:{e['key']}" for e in data.get("findings", [])}
+
+
+def split_findings(findings: list[Finding], baseline: set[str]):
+    """Partition into (new, known) and report stale baseline ids.
+
+    Returns ``(new, known, stale)`` where ``stale`` is the set of
+    baseline ids no current finding matches — the gap got fixed, so the
+    baseline entry should be deleted (reported, never fatal).
+    """
+    new = [f for f in findings if f.id not in baseline]
+    known = [f for f in findings if f.id in baseline]
+    stale = baseline - {f.id for f in findings}
+    return new, known, stale

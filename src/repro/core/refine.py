@@ -91,7 +91,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Protocol
 
 import numpy as np
 
@@ -104,6 +104,29 @@ from . import costs
 from .problem import PartitionProblem, PartitionState, make_state
 
 Array = jax.Array
+
+
+class DissatFn(Protocol):
+    """THE canonical 9-argument ``dissat_fn`` convention (see "The
+    ``dissat_fn`` convention" in the module docstring above).
+
+    Every factory producing a pluggable per-turn reduction returns this
+    Protocol (``repro.kernels.ops.make_aggregate_dissat_fn`` /
+    ``make_edge_dissat_fn``, ``sweeps.runtime._kernel_dissat_fn``,
+    ``distributed.runtime._shard_dissat_fn``), and every consumer
+    (``refine`` here, ``protocol.local_candidate_from_aggregate``) calls
+    it with exactly these 9 positionals.  The contract linter
+    (``repro.analysis``, DESIGN.md §16) anchors its signature rule on
+    this annotation — not on a magic arity — so annotate new factories
+    with ``-> DissatFn``.
+    """
+
+    def __call__(self, aggregate: Array, assignment: Array,
+                 node_weights: Array, loads: Array, speeds: Array,
+                 mu, framework: str, total_weight,
+                 theta=None) -> tuple[Array, Array]:
+        """Returns ``(dissat (rows,), best_machine (rows,))``."""
+        ...
 
 # Dissatisfaction below this threshold counts as "satisfied" — guards float
 # round-off from keeping the loop alive on a plateau.
@@ -354,7 +377,8 @@ def refine(problem: PartitionProblem, assignment: Array,
            framework: str = costs.C_FRAMEWORK,
            max_turns: int = 10_000, tol: float = DEFAULT_TOL,
            cost_matrix_fn=None, incremental: bool = True,
-           verify_every: int = 0, repair_every: int = 0, dissat_fn=None,
+           verify_every: int = 0, repair_every: int = 0,
+           dissat_fn: DissatFn | None = None,
            theta=None, recorder=None) -> RefineResult:
     """Run round-robin refinement to convergence (K consecutive idle turns).
 

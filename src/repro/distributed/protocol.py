@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from ..core import aggregate as agg_mod
 from ..core import costs
+from ..core.refine import DissatFn
 
 Array = jax.Array
 
@@ -196,7 +197,8 @@ def local_candidate_from_aggregate(aggregate: Array, b_local: Array,
                                    speeds: Array, mu: Array, total_b: Array,
                                    machine: Array, framework: str,
                                    with_deltas: bool = False,
-                                   dissat_fn=None, theta_local=None):
+                                   dissat_fn: DissatFn | None = None,
+                                   theta_local=None):
     """Incremental-path candidate: costs from the shard's carried block
     aggregate, O(Ns*K) — no matmul, no read of any off-shard adjacency.
 

@@ -61,7 +61,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core import aggregate as agg_mod
 from ..core import costs
 from ..core.problem import PartitionProblem, make_state
-from ..core.refine import DEFAULT_TOL, RefineResult, Trace, _open_run
+from ..core.refine import (DEFAULT_TOL, DissatFn, RefineResult, Trace,
+                           _open_run)
 from . import accounting, faults, protocol
 from .views import ShardViews, boundary_stats, build_views, shard_node_values
 
@@ -151,7 +152,7 @@ def _shard_cost_fn(cost_fn: str):
     raise ValueError(f"unknown cost_fn {cost_fn!r}")
 
 
-def _shard_dissat_fn(cost_fn: str):
+def _shard_dissat_fn(cost_fn: str) -> DissatFn | None:
     """Shard-local (dissat, best) from the carried block aggregate, for the
     INCREMENTAL path: "jnp" (shared O(Ns·K) assembly, bitwise equal to the
     controller) or "pallas" (fused aggregate→(dissat, best) kernel).  Both

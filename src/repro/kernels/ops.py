@@ -11,6 +11,7 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
+from ..core.refine import DissatFn
 from . import ref
 from .decode_attention import decode_attention_pallas
 from .dissatisfaction import (cost_matrix_pallas,
@@ -114,7 +115,7 @@ def dissatisfaction_from_aggregate(aggregate: Array, row_assignment: Array,
         theta)
 
 
-def make_edge_dissat_fn(problem, interpret: bool | None = None):
+def make_edge_dissat_fn(problem, interpret: bool | None = None) -> DissatFn:
     """The ``dissat_fn`` convention (see :mod:`repro.core.refine`) on the
     fused Pallas EDGE-BLOCK kernel (DESIGN.md §13.3): the per-turn
     reduction is recomputed straight from ``problem``'s edge list — the
@@ -140,7 +141,8 @@ def make_edge_dissat_fn(problem, interpret: bool | None = None):
     return fn
 
 
-def make_timed_dissat_fn(dissat_fn, recorder, name: str = "kernels.dissat"):
+def make_timed_dissat_fn(dissat_fn: DissatFn, recorder,
+                         name: str = "kernels.dissat") -> DissatFn:
     """Wrap a ``dissat_fn`` with recorder phase timing (DESIGN.md §14.3).
 
     Eager calls are wall-clocked — ``recorder.phase(name)`` around the
@@ -164,7 +166,7 @@ def make_timed_dissat_fn(dissat_fn, recorder, name: str = "kernels.dissat"):
     return fn
 
 
-def make_aggregate_dissat_fn(interpret: bool | None = None):
+def make_aggregate_dissat_fn(interpret: bool | None = None) -> DissatFn:
     """Adapter implementing THE ``dissat_fn`` calling convention — see the
     canonical 9-argument spec in :mod:`repro.core.refine` ("The
     ``dissat_fn`` convention") — on the fused Pallas kernel, so the

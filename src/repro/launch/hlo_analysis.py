@@ -12,11 +12,18 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
+# whole bytes per element; sub-byte dtypes live in _DTYPE_BITS instead
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1,
 }
+# 4-bit dtypes pack two elements per byte (ceil over the whole buffer)
+_DTYPE_BITS = {"s4": 4, "u4": 4, "f4e2m1fn": 4}
+# shape tokens that legitimately carry no data
+_ZERO_SIZE_DTYPES = frozenset({"token", "tuple", "opaque"})
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -25,16 +32,29 @@ _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
 def _shape_bytes(shape_str: str) -> int:
-    """Total bytes of an HLO shape string like 'f32[128,256]' or a tuple."""
+    """Total bytes of an HLO shape string like 'f32[128,256]' or a tuple.
+
+    Unknown dtype tokens raise instead of silently contributing 0 bytes
+    — a new XLA dtype must be added to the tables above, or the
+    collective accounting would quietly under-count.
+    """
     total = 0
     for dtype, dims in _SHAPE_RE.findall(shape_str):
-        if dtype not in _DTYPE_BYTES:
+        if dtype in _ZERO_SIZE_DTYPES:
             continue
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
+        if dtype in _DTYPE_BYTES:
+            total += n * _DTYPE_BYTES[dtype]
+        elif dtype in _DTYPE_BITS:
+            total += (n * _DTYPE_BITS[dtype] + 7) // 8
+        else:
+            raise ValueError(
+                f"unknown HLO dtype {dtype!r} in shape {shape_str!r}; "
+                f"add its width to launch.hlo_analysis._DTYPE_BYTES / "
+                f"_DTYPE_BITS")
     return total
 
 

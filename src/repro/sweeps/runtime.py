@@ -34,7 +34,7 @@ from ..core.batch import (problem_shape_key, refine_batched,
                           refine_traced_batched, stack_problems,
                           unstack_pytree)
 from ..core.problem import PartitionProblem
-from ..core.refine import DEFAULT_TOL, RefineResult
+from ..core.refine import DEFAULT_TOL, DissatFn, RefineResult
 from . import metrics
 
 Array = jax.Array
@@ -88,7 +88,7 @@ def make_spec(cases: Sequence[SweepCase], **kwargs) -> SweepSpec:
 
 
 @lru_cache(maxsize=None)
-def _kernel_dissat_fn():
+def _kernel_dissat_fn() -> DissatFn:
     """One shared fused-kernel adapter so every sweep reuses the same jit
     cache entry (``dissat_fn`` is a static argument of ``refine``)."""
     from ..kernels.ops import make_aggregate_dissat_fn

@@ -51,6 +51,25 @@ def test_shape_bytes():
     assert hlo_analysis._shape_bytes("token[]") == 0
 
 
+def test_shape_bytes_wide_and_narrow_dtypes():
+    # widths that used to silently contribute 0 bytes
+    assert hlo_analysis._shape_bytes("c128[8]") == 8 * 16
+    assert hlo_analysis._shape_bytes("c64[8]") == 8 * 8
+    for f8 in ("f8e4m3b11fnuz", "f8e4m3fnuz", "f8e5m2fnuz"):
+        assert hlo_analysis._shape_bytes(f"{f8}[16,4]") == 64
+    # 4-bit ints pack two per byte, odd counts round up
+    assert hlo_analysis._shape_bytes("s4[64]") == 32
+    assert hlo_analysis._shape_bytes("u4[7]") == 4
+    assert hlo_analysis._shape_bytes("(s4[3], f32[2])") == 2 + 8
+
+
+def test_shape_bytes_unknown_dtype_raises():
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        hlo_analysis._shape_bytes("f6e3m2[8]")
+    # zero-size tokens stay accepted, not raised on
+    assert hlo_analysis._shape_bytes("(token[], f32[2])") == 8
+
+
 def test_collective_stats_with_loop_trip():
     stats = hlo_analysis.collective_stats(HLO_SAMPLE)
     f = 4  # bytes

@@ -1,80 +1,45 @@
-"""Docs-consistency gate: doc references from code must resolve.
+"""Docs-consistency gate — thin wrapper over the contract linter.
 
-Two failure modes are caught:
-
-  * Docstrings across ``src/`` cite design sections as ``DESIGN.md §N``
-    / ``DESIGN.md §N.M``; stale citations (a renumbered or removed
-    section) rot silently.  Every such reference is checked against the
-    actual DESIGN.md headers.
-  * Docstrings citing a repo doc FILE that does not exist — e.g. the
-    ``random_weights`` docstring long pointed at a nonexistent
-    ``EXPERIMENTS.md`` (ISSUE 5).  Every ``SOMETHING.md`` mention in
-    ``src``/``tests``/``benchmarks``/``examples`` must name a file that
-    is actually in the repo root.
+The actual scans (DESIGN-§ citations resolve, referenced doc files
+exist) live in :mod:`repro.analysis.docs_rules` as registry rules
+(DESIGN.md §16), shared by ``python -m repro.analysis --check`` and the
+``lint-contracts`` CI job.  These tests keep the tier-1 behavior: any
+docs finding fails the suite.
 """
 from __future__ import annotations
 
 import pathlib
-import re
+
+from repro.analysis import AnalysisContext
+from repro.analysis.docs_rules import (design_ref_findings,
+                                       design_sections, doc_file_findings)
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-REF_RE = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
-HEADER_RE = re.compile(r"^#{1,6}\s.*?§(\d+(?:\.\d+)?)", re.MULTILINE)
-DOCFILE_RE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
-DOCFILE_SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
 
 
-def _design_sections() -> set[str]:
-    text = (REPO / "DESIGN.md").read_text()
-    return set(HEADER_RE.findall(text))
-
-
-def _source_references() -> dict[str, set[str]]:
-    refs: dict[str, set[str]] = {}
-    for path in sorted((REPO / "src").rglob("*.py")):
-        found = set(REF_RE.findall(path.read_text()))
-        if found:
-            refs[str(path.relative_to(REPO))] = found
-    return refs
+def _ctx() -> AnalysisContext:
+    return AnalysisContext(repo_root=REPO)
 
 
 def test_design_md_has_section_headers():
-    sections = _design_sections()
+    sections = design_sections(_ctx())
     assert "1" in sections and "12" in sections, sorted(sections)
 
 
 def test_src_design_references_resolve():
-    sections = _design_sections()
-    dangling = {
-        path: sorted(found - sections)
-        for path, found in _source_references().items()
-        if found - sections
-    }
-    assert not dangling, (
-        f"docstrings cite DESIGN.md sections that have no header: "
-        f"{dangling}; valid sections: {sorted(sections)}")
+    findings = [f for f in design_ref_findings(_ctx())
+                if f.key.startswith("src")]
+    assert not findings, [f.message for f in findings]
 
 
 def test_doc_file_references_exist():
-    """Every UPPERCASE.md mentioned anywhere in code must exist in the
-    repo root (catches citations of removed/never-written docs)."""
-    this_file = pathlib.Path(__file__).resolve()
-    dangling: dict[str, set[str]] = {}
-    for d in DOCFILE_SCAN_DIRS:
-        for path in sorted((REPO / d).rglob("*.py")):
-            if path.resolve() == this_file:
-                continue   # this file names nonexistent docs as examples
-            missing = {name for name in DOCFILE_RE.findall(path.read_text())
-                       if not (REPO / name).is_file()}
-            if missing:
-                dangling[str(path.relative_to(REPO))] = missing
-    assert not dangling, (
-        f"code references repo doc files that do not exist: {dangling}")
+    findings = doc_file_findings(_ctx())
+    assert not findings, [f.message for f in findings]
 
 
 def test_src_actually_cites_design():
     # the convention is load-bearing (new public APIs must cite their
-    # section); guard against the reference extraction silently matching
-    # nothing
-    refs = _source_references()
-    assert len(refs) >= 10, sorted(refs)
+    # section); the rule emits a dedicated finding if extraction matches
+    # fewer than 10 citing files
+    assert not any(f.key == "too-few-citing-files"
+                   for f in design_ref_findings(_ctx()))

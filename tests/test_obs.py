@@ -91,11 +91,19 @@ def test_disabled_mode_results_bitwise(instance):
     assert any(e["kind"] == "run_end" for e in rec.events)
 
 
-def test_disabled_refine_jaxpr_has_no_callbacks(instance):
-    prob, r0 = instance
-    jaxpr = str(jax.make_jaxpr(
-        lambda r: refine(prob, r, "c", max_turns=64))(r0))
-    assert "callback" not in jaxpr
+def test_disabled_entry_points_have_no_callbacks():
+    # registry-driven coverage (DESIGN.md §16.3): EVERY registered public
+    # entry point — not just refine — stages zero host callbacks on its
+    # telemetry-disabled path.  The per-path jaxprs are traced once per
+    # process and shared with tests/test_contracts.py.
+    from repro.analysis.entrypoints import (registered_entry_points,
+                                            trace_entry_point)
+    from repro.analysis.jaxpr_rules import callback_primitives
+
+    eps = registered_entry_points()
+    assert len(eps) >= 10
+    for ep in eps:
+        assert callback_primitives(trace_entry_point(ep.name)) == [], ep.name
 
 
 # ---------------------------------------------------------------------------
