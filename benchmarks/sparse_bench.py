@@ -23,19 +23,33 @@ Two claims measured (ISSUE 5 acceptance criteria, DESIGN.md §13):
      fit — that sparse is ≥5x faster end to end (incl. setup) at the
      largest size where the dense path is actually measured.
 
+  3. **Sweeps** (ISSUE 9, DESIGN.md §17) — the multi-move probabilistic
+     sweep mode: (a) the degenerate config (one move/machine, move_prob
+     1, ε=0) reproduces ``refine_simultaneous`` BITWISE on dense and
+     sparse problems, looped and batched; (b) unbounded multi-move
+     sweeps reach an ε-equilibrium in fewer sweeps than the
+     one-move-per-machine rule (quick: ratio > 1 at N=16384; full:
+     ratio ≥ 5 at N=65536); (c) full runs equilibrate an N=10^6
+     ``SparseProblem`` in ≤ 10 s wall-clock on one device, recorded as
+     a scaling row with sweeps-to-equilibrium and moves/sweep.
+
 Results land in BENCH_sparse.json (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import os
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.batch import (refine_simultaneous_batched,
+                              refine_sweeps_batched, stack_problems)
 from repro.core.problem import make_problem
-from repro.core.refine import refine, refine_traced
+from repro.core.refine import (refine, refine_simultaneous, refine_sweeps,
+                               refine_traced)
 from repro.core.sparse import make_sparse_problem, sparse_from_dense
 from repro.graphs.generators import (random_degree_graph,
                                      random_degree_graph_edges,
@@ -48,6 +62,9 @@ from .common import (cli_telemetry, section, table, telemetry_recorder,
 AGREE_TOL = 1e-3          # max relative potential deviation (repo budget)
 SPEEDUP_FLOOR = 5.0       # dense must be infeasible or 5x slower on top size
 THETAS = (None, 0.5)
+SWEEP_RATIO_FLOOR = 5.0   # full-run multi-vs-single sweep count at N=65536
+MILLION_WALL_S = 10.0     # N=10^6 equilibrium budget (ISSUE 9 acceptance)
+SWEEP_CFG = dict(moves_per_machine=None, move_prob=0.5, epsilon=1e-3)
 
 
 def _host_memory_bytes() -> int:
@@ -181,6 +198,152 @@ def scaling(sizes, k: int = 8, timing_turns: int = 16,
     return results
 
 
+def _assert_bitwise(res_a, aux_a, res_b, aux_b, tag: str):
+    """Full bitwise equality of two refinement runs: final assignment,
+    move/turn counters, and all three per-sweep traces."""
+    assert np.array_equal(np.asarray(res_a.assignment),
+                          np.asarray(res_b.assignment)), \
+        f"{tag}: assignments diverged"
+    for name in ("num_moves", "num_turns", "converged"):
+        a = np.asarray(getattr(res_a, name))
+        b = np.asarray(getattr(res_b, name))
+        assert np.array_equal(a, b), f"{tag}: {name} {a} != {b}"
+    for name, a, b in zip(("c0s", "ct0s", "active"), aux_a, aux_b):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{tag}: {name} trace diverged"
+
+
+def check_sweeps_degenerate(n: int = 256, k: int = 8, max_sweeps: int = 64):
+    """Sweeps gate (a): the degenerate config — one move per machine,
+    move_prob 1, ε=0, i.e. ``refine_sweeps``'s defaults — must BITWISE
+    reproduce ``refine_simultaneous`` (DESIGN.md §17.2): dense and
+    sparse representations, looped and batched."""
+    cells = []
+    prob, r0 = _dense_instance(n, k)
+    sp = sparse_from_dense(prob)
+    for rep, problem in (("dense", prob), ("sparse", sp)):
+        for fw in ("c", "ct"):
+            tag = f"degenerate {rep} fw={fw}"
+            res_s, aux_s = refine_simultaneous(problem, r0, fw,
+                                               max_sweeps=max_sweeps)
+            res_w, aux_w = refine_sweeps(problem, r0, fw,
+                                         max_sweeps=max_sweeps)
+            _assert_bitwise(res_s, aux_s, res_w, aux_w, tag)
+            cells.append({"rep": rep, "framework": fw,
+                          "moves": int(res_w.num_moves), "bitwise": True})
+    # batched: a dense fleet (independent instances) and a sparse fleet
+    # (stack_problems needs one shared edge structure, so vary weights)
+    dense = [_dense_instance(n, k, seed=s) for s in (0, 3, 6)]
+    probs_d = stack_problems([p for p, _ in dense])
+    r0s_d = jnp.stack([r for _, r in dense])
+    s_idx, r_idx = random_degree_graph_edges(n, seed=0)
+    sparse, r0s_s = [], []
+    for ws in (1, 11, 21):
+        b, w = random_weights_edges(n, s_idx, seed=ws, mean=5.0)
+        sparse.append(make_sparse_problem(s_idx, r_idx, w, b,
+                                          np.ones(k) / k, mu=8.0))
+        r0s_s.append(np.random.default_rng(ws + 1).integers(0, k, n))
+    probs_s = stack_problems(sparse)
+    r0s_s = jnp.asarray(np.stack(r0s_s), jnp.int32)
+    for rep, probs, r0s in (("dense", probs_d, r0s_d),
+                            ("sparse", probs_s, r0s_s)):
+        for fw in ("c", "ct"):
+            tag = f"degenerate batched {rep} fw={fw}"
+            res_s, aux_s = refine_simultaneous_batched(
+                probs, r0s, fw, max_sweeps=max_sweeps)
+            res_w, aux_w = refine_sweeps_batched(
+                probs, r0s, fw, max_sweeps=max_sweeps)
+            _assert_bitwise(res_s, aux_s, res_w, aux_w, tag)
+            cells.append({"rep": f"batched-{rep}", "framework": fw,
+                          "moves": [int(m) for m in
+                                    np.asarray(res_w.num_moves)],
+                          "bitwise": True})
+    return {"n": n, "k": k, "max_sweeps": max_sweeps, "cells": cells,
+            "bitwise_equal": True}
+
+
+def sweeps_ratio(n: int, k: int = 8, multi_cap: int = 128,
+                 single_cap: int = 512, floor: float = 1.0):
+    """Sweeps gate (b): unbounded multi-move sweeps vs the
+    one-move-per-machine rule, sweeps to the SAME ε-equilibrium
+    (ε=1e-3; single-move runs ``refine_sweeps`` with M=1, p=1 so both
+    modes stop at the identical no-improving-move-above-ε test).
+
+    The start is the paper's dynamic-load-balancing scenario: a load
+    shift has left 65% of the nodes on one machine, so a θ(N)
+    migration is required.  One-move-per-machine admits at most K
+    moves per sweep — O(N/K) sweeps — while the multi-move mode moves
+    whole cohorts per sweep.  If the single-move run exhausts its cap
+    unconverged, the cap is a LOWER bound on its sweep count — the
+    reported ratio only understates."""
+    sp, _ = _sparse_instance(n, k)
+    pvals = np.full(k, 0.35 / (k - 1))
+    pvals[0] = 0.65
+    r0 = jnp.asarray(np.random.default_rng(2).choice(k, size=n, p=pvals),
+                     jnp.int32)
+    res_m, _ = refine_sweeps(sp, r0, "c", max_sweeps=multi_cap,
+                             key=jax.random.PRNGKey(0), **SWEEP_CFG)
+    sweeps_m = int(res_m.num_turns)
+    assert bool(res_m.converged), \
+        f"multi-move unconverged in {multi_cap} sweeps at n={n}"
+    res_1, _ = refine_sweeps(sp, r0, "c", max_sweeps=single_cap,
+                             epsilon=SWEEP_CFG["epsilon"])
+    sweeps_1 = int(res_1.num_turns)
+    ratio = sweeps_1 / max(1, sweeps_m)
+    entry = {"n": n, "k": k, "epsilon": SWEEP_CFG["epsilon"],
+             "multi_sweeps": sweeps_m, "multi_moves": int(res_m.num_moves),
+             "single_sweeps": sweeps_1,
+             "single_converged": bool(res_1.converged),
+             "single_sweeps_is_lower_bound": not bool(res_1.converged),
+             "ratio": ratio, "floor": floor}
+    assert ratio > floor, \
+        f"multi-move only {ratio:.1f}x fewer sweeps (need > {floor}) " \
+        f"at n={n}: {sweeps_m} vs {sweeps_1}"
+    bound = "" if entry["single_converged"] else " (>=, cap hit)"
+    print(f"  n={n}: multi-move {sweeps_m} sweeps "
+          f"({entry['multi_moves']} moves) vs single-move "
+          f"{sweeps_1}{bound} -> {ratio:.1f}x fewer (floor {floor})")
+    return entry
+
+
+def million_row(k: int = 8):
+    """Sweeps gate (c): N=10^6 to ε-equilibrium in ≤ 10 s wall on one
+    device (ISSUE 9 acceptance).  The first call pays compilation and
+    instance setup; the recorded wall is the steady re-run, matching
+    the per-turn convention of the scaling table."""
+    n = 1_000_000
+    sp, r0 = _sparse_instance(n, k)
+    key = jax.random.PRNGKey(0)
+
+    def go():
+        res, aux = refine_sweeps(sp, r0, "c", max_sweeps=24, key=key,
+                                 **SWEEP_CFG)
+        jax.block_until_ready(res.assignment)
+        return res, aux
+
+    go()  # compile
+    t0 = time.perf_counter()
+    res, _ = go()
+    wall = time.perf_counter() - t0
+    sweeps = int(res.num_turns)
+    moves = int(res.num_moves)
+    assert bool(res.converged), \
+        f"N=1e6 unconverged after {sweeps} sweeps ({moves} moves)"
+    assert wall <= MILLION_WALL_S, \
+        f"N=1e6 equilibrium took {wall:.2f}s > {MILLION_WALL_S}s"
+    row = {"n": n, "k": k, "edges_padded": sp.num_edges,
+           "max_degree": sp.max_degree, "mode": "sweeps-unbounded",
+           "move_prob": SWEEP_CFG["move_prob"],
+           "epsilon": SWEEP_CFG["epsilon"],
+           "sweeps_to_equilibrium": sweeps, "moves": moves,
+           "moves_per_sweep": moves / max(1, sweeps),
+           "wall_s": wall, "converged": True}
+    print(f"  N={n}: equilibrium in {sweeps} sweeps ({moves} moves, "
+          f"{row['moves_per_sweep']:.1f}/sweep), {wall:.2f}s wall "
+          f"(budget {MILLION_WALL_S:.0f}s)")
+    return row
+
+
 def run(quick: bool = False, telemetry=None):
     k = 8
     agree_sizes = (256, 1024) if quick else (256, 1024, 4096)
@@ -228,9 +391,25 @@ def run(quick: bool = False, telemetry=None):
                   f"{ratio:.1f}x slower at the largest measured size "
                   f"(N={ref['n']})")
 
+    section("Multi-move probabilistic sweeps (DESIGN.md §17)")
+    degenerate = check_sweeps_degenerate(n=256, k=k)
+    print(f"  degenerate config == refine_simultaneous bitwise across "
+          f"{len(degenerate['cells'])} cells (dense/sparse x c/ct, "
+          "looped and batched)")
+    if quick:
+        ratio = sweeps_ratio(16384, k=k, single_cap=256, floor=1.0)
+        million = None
+    else:
+        ratio = sweeps_ratio(65536, k=k, floor=SWEEP_RATIO_FLOOR)
+        million = million_row(k=k)
+        results.append(million)
+    sweeps = {"degenerate": degenerate, "ratio": ratio,
+              "million_node": million}
+
     if recorder is not None:
         recorder.close()
     payload = {"agreement": agreement, "scaling": results,
+               "sweeps": sweeps,
                "backend_devices": jax.device_count()}
     write_bench_json("sparse", payload)
     return payload

@@ -298,6 +298,9 @@ _REGISTERED_ARMS = frozenset({
     ("src/repro/core/costs.py", "global_cost_c0"),
     ("src/repro/core/aggregate.py", "apply_move"),
     ("src/repro/core/aggregate.py", "apply_sweep"),
+    ("src/repro/core/aggregate.py", "apply_moves"),
+    ("src/repro/core/aggregate.py", "apply_cluster_move"),
+    ("src/repro/core/cluster.py", "h_hop_mask"),
     ("src/repro/core/batch.py", "problem_shape_key"),
 })
 

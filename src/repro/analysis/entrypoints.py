@@ -132,6 +132,19 @@ def _edge_kernel_dissat():
     )(canonical_assignment())
 
 
+def _sweeps_prob(sparse: bool = False, **kwargs):
+    """Probabilistic refine_sweeps configs: the PRNG key rides as a
+    traced argument (its extended key dtype is exempt from the f32
+    dataflow rule, like every other key)."""
+    import importlib
+    refine_mod = importlib.import_module("repro.core.refine")
+    prob = canonical_sparse() if sparse else canonical_problem()
+    return jax.make_jaxpr(
+        lambda r, k: refine_mod.refine_sweeps(
+            prob, r, max_sweeps=_MAX_SWEEPS, key=k, **kwargs)
+    )(canonical_assignment(), jax.random.PRNGKey(0))
+
+
 def _batched(fn_name: str, **kwargs):
     from ..core import batch as batch_mod
     fn = getattr(batch_mod, fn_name)
@@ -188,6 +201,15 @@ _ENTRY_POINTS: tuple[EntryPoint, ...] = (
                                    max_turns=_MAX_TURNS)),
     EntryPoint("refine.sparse.edge_kernel", "controller",
                _edge_kernel_dissat),
+    EntryPoint("refine_sweeps", "controller",
+               lambda: _controller("refine_sweeps",
+                                   max_sweeps=_MAX_SWEEPS)),
+    EntryPoint("refine_sweeps.multi", "controller",
+               lambda: _sweeps_prob(moves_per_machine=2, move_prob=0.5,
+                                    epsilon=1e-3)),
+    EntryPoint("refine_sweeps.sparse.unbounded", "controller",
+               lambda: _sweeps_prob(sparse=True, moves_per_machine=None,
+                                    move_prob=0.5, epsilon=1e-3)),
     EntryPoint("batch.refine", "batched",
                lambda: _batched("refine_batched", max_turns=_MAX_TURNS)),
     EntryPoint("batch.refine_traced", "batched",
@@ -195,6 +217,9 @@ _ENTRY_POINTS: tuple[EntryPoint, ...] = (
                                 max_turns=_MAX_TURNS)),
     EntryPoint("batch.refine_simultaneous", "batched",
                lambda: _batched("refine_simultaneous_batched",
+                                max_sweeps=_MAX_SWEEPS)),
+    EntryPoint("batch.refine_sweeps", "batched",
+               lambda: _batched("refine_sweeps_batched",
                                 max_sweeps=_MAX_SWEEPS)),
     EntryPoint("distributed.refine", "distributed",
                lambda: _distributed("refine_distributed",

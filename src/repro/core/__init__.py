@@ -6,6 +6,9 @@ Public API:
     dissatisfaction, global potentials C_0 / Ct_0
   * refine / refine_traced / refine_simultaneous — iterative improvement
     (incremental aggregate-state path by default, DESIGN.md §10)
+  * refine_sweeps — multi-move probabilistic sweeps (top-M or unbounded
+    elections, cs/0506098 acceptance coins, 1305.3354 ε-equilibrium
+    stop; DESIGN.md §17)
   * batched variants (stack_problems + refine*_batched, DESIGN.md §12) —
     scenario fleets under one jax.vmap-compiled program
   * AggregateState / init_aggregate_state — the carried aggregate
@@ -21,6 +24,7 @@ from .batch import (  # noqa: F401
     batch_size,
     refine_batched,
     refine_simultaneous_batched,
+    refine_sweeps_batched,
     refine_traced_batched,
     stack_problems,
     stack_pytrees,
@@ -82,5 +86,6 @@ from .refine import (  # noqa: F401
     count_discrepancies,
     refine,
     refine_simultaneous,
+    refine_sweeps,
     refine_traced,
 )

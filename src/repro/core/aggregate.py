@@ -234,6 +234,123 @@ def apply_sweep(problem: AnyProblem, agg: AggregateState, picks: Array,
                           aggregate=new_aggregate, c0=c0, ct0=ct0)
 
 
+def apply_moves(problem: AnyProblem, agg: AggregateState, nodes: Array,
+                dests: Array, will_move: Array,
+                total_weight: Array) -> AggregateState:
+    """Apply up to R simultaneous moves (DESIGN.md §17): node ``nodes[r]``
+    migrates to ``dests[r]`` wherever ``will_move[r]`` — a rank-R
+    aggregate update, then both potentials via the (loads, sq_loads,
+    cut) closed forms, exactly like :func:`apply_sweep`.
+
+    The generalization over :func:`apply_sweep` is that sources are read
+    from the carried assignment instead of being the machine ids 0..K-1,
+    so R is free: the multi-move sweep mode elects up to
+    ``moves_per_machine`` nodes per machine (R = K·M, via ``top_k`` over
+    disjoint ownership rows, so real picks never collide).  Masked slots
+    (``will_move[r]`` False — idle elections, coin rejections) have
+    their edge/column contributions zeroed and their assignment writes
+    dropped, contributing an exact ``±0.0``.
+
+    Sparse problems scatter the R moved nodes' incident-edge windows
+    (O(R·max_degree·K)); dense ones apply one (N, R) @ (R, K) matmul of
+    gathered adjacency columns against the ``±1`` one-hot column deltas.
+    """
+    k = problem.num_machines
+    b = problem.node_weights
+    dt = agg.aggregate.dtype
+    mask = will_move.astype(dt)                               # (R,)
+    sources = agg.assignment[nodes]                           # (R,)
+    kidx = jnp.arange(k)
+    col_delta = (dests[:, None] == kidx[None, :]).astype(dt) \
+        - (sources[:, None] == kidx[None, :]).astype(dt)      # (R, K)
+    if isinstance(problem, SparseProblem):
+        nbrs, ws = jax.vmap(lambda nd: node_incident_edges(problem, nd)
+                            )(nodes)                          # (R, Dmax)
+        ws = ws * mask[:, None]
+        new_aggregate = agg.aggregate.at[nbrs].add(
+            ws[:, :, None] * col_delta[:, None, :])           # dups summed
+    else:
+        cols = problem.adjacency[:, nodes] * mask[None, :]    # (N, R)
+        new_aggregate = agg.aggregate + cols @ col_delta
+    safe_nodes = jnp.where(will_move, nodes, jnp.int32(problem.num_nodes))
+    new_assignment = agg.assignment.at[safe_nodes].set(dests, mode="drop")
+    new_loads = machine_loads(b, new_assignment, k)
+    sq_loads = machine_loads(b * b, new_assignment, k)
+    cut = cut_from_aggregate(new_aggregate, new_assignment)
+    c0, ct0 = potentials_closed_form(new_loads, sq_loads, cut,
+                                     problem.speeds, problem.mu,
+                                     total_weight)
+    return AggregateState(assignment=new_assignment, loads=new_loads,
+                          aggregate=new_aggregate, c0=c0, ct0=ct0)
+
+
+def apply_cluster_move(problem: AnyProblem, agg: AggregateState, mask: Array,
+                       source: Array, dest: Array, do_move: Array,
+                       total_weight: Array) -> AggregateState:
+    """Apply a §7 cluster move: every node in the boolean ``mask`` (all
+    owned by ``source``) migrates jointly to ``dest`` when ``do_move``.
+
+    The aggregate update is a two-column group update: for every node i,
+    ``delta_i = sum_{j in cluster} c_ij`` moves from column ``source``
+    to column ``dest`` — one O(E) masked ``segment_sum`` on sparse
+    problems (the cluster members' combined incident weight per node),
+    one O(N^2) masked matvec on dense ones.  Potentials are re-derived
+    via the closed forms (a cluster move is not unilateral, so the
+    exact-potential identities do not apply — same reasoning as
+    :func:`apply_sweep`).
+    """
+    k = problem.num_machines
+    b = problem.node_weights
+    dt = agg.aggregate.dtype
+    if isinstance(problem, SparseProblem):
+        hit = jnp.where(mask[problem.receivers], problem.edge_weights,
+                        jnp.zeros((), dt))
+        delta = jax.ops.segment_sum(hit, problem.senders,
+                                    num_segments=problem.num_nodes,
+                                    indices_are_sorted=True)  # (N,)
+    else:
+        delta = problem.adjacency @ mask.astype(dt)           # (N,)
+    kidx = jnp.arange(k)
+    col_delta = (kidx == dest).astype(dt) - (kidx == source).astype(dt)
+    new_aggregate = agg.aggregate + delta[:, None] * col_delta[None, :]
+    new_assignment = jnp.where(mask, dest, agg.assignment).astype(jnp.int32)
+    new_loads = machine_loads(b, new_assignment, k)
+    sq_loads = machine_loads(b * b, new_assignment, k)
+    cut = cut_from_aggregate(new_aggregate, new_assignment)
+    c0, ct0 = potentials_closed_form(new_loads, sq_loads, cut,
+                                     problem.speeds, problem.mu,
+                                     total_weight)
+    new = AggregateState(assignment=new_assignment, loads=new_loads,
+                         aggregate=new_aggregate, c0=c0, ct0=ct0)
+    return jax.tree.map(lambda n_, o: jnp.where(do_move, n_, o), new, agg)
+
+
+def rebuild_state(problem: AnyProblem, assignment: Array,
+                  total_weight: Array) -> AggregateState:
+    """Build a fresh :class:`AggregateState` with closed-form potentials.
+
+    Same carried quantities as :func:`init_aggregate_state`, but C_0 and
+    Ct_0 come from :func:`repro.core.costs.potentials_closed_form` over
+    (loads, sq_loads, cut) — O(E·K) + O(K) total — instead of the
+    representation-dispatched global passes.  This is the overflow path
+    of the unbounded multi-move mode (DESIGN.md §17): when a sweep's
+    accepted set outgrows the mover buffer the rank-R scatter would be
+    O(N)-wide, and a from-scratch rebuild is both cheaper and drift-free
+    by construction.
+    """
+    assignment = jnp.asarray(assignment, jnp.int32)
+    k = problem.num_machines
+    b = problem.node_weights
+    aggregate = costs.problem_aggregate(problem, assignment, k)
+    loads = machine_loads(b, assignment, k)
+    sq_loads = machine_loads(b * b, assignment, k)
+    cut = cut_from_aggregate(aggregate, assignment)
+    c0, ct0 = potentials_closed_form(loads, sq_loads, cut, problem.speeds,
+                                     problem.mu, total_weight)
+    return AggregateState(assignment=assignment, loads=loads,
+                          aggregate=aggregate, c0=c0, ct0=ct0)
+
+
 # ---------------------------------------------------------------------------
 # verify_every cross-check
 # ---------------------------------------------------------------------------

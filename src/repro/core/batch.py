@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from . import costs
 from .problem import PartitionProblem
-from .refine import DEFAULT_TOL, refine, refine_simultaneous, refine_traced
+from .refine import (DEFAULT_TOL, refine, refine_simultaneous, refine_sweeps,
+                     refine_traced)
 from .sparse import SparseProblem
 
 Array = jax.Array
@@ -222,3 +223,44 @@ def refine_simultaneous_batched(problems: PartitionProblem,
 
     return _vmap_over_theta(one, problems, assignments,
                             _stack_theta(theta, b, n))
+
+
+@partial(jax.jit, static_argnames=("framework", "max_sweeps",
+                                   "moves_per_machine", "move_prob",
+                                   "epsilon"))
+def refine_sweeps_batched(problems: PartitionProblem, assignments: Array,
+                          framework: str = costs.C_FRAMEWORK,
+                          max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                          theta=None, moves_per_machine: int | None = 1,
+                          move_prob: float = 1.0, epsilon: float = 0.0,
+                          keys: Array | None = None):
+    """:func:`repro.core.refine.refine_sweeps` over a problem stack
+    (DESIGN.md §17): multi-move probabilistic sweep fleets.
+
+    ``keys`` is a ``(B,)`` stack of PRNG keys (``jax.vmap``-able, e.g.
+    ``jax.random.split(key, B)``), required exactly when
+    ``move_prob < 1`` — each element folds its own key per sweep, so
+    per-element coin sequences equal the looped runs'.  All sweep
+    configuration (``moves_per_machine``/``move_prob``/``epsilon``) is
+    static and shared across the batch, like ``framework``.  Returns
+    ``(RefineResult, (c0s, ct0s, active))`` with leading batch axes."""
+    b, n = assignments.shape
+    if move_prob < 1.0:
+        if keys is None:
+            raise ValueError("refine_sweeps_batched(move_prob < 1) needs a "
+                             "(B,) stack of PRNG `keys` (e.g. "
+                             "jax.random.split)")
+
+    def one(problem, r0, th, key=None):
+        return refine_sweeps(problem, r0, framework, max_sweeps=max_sweeps,
+                             tol=tol, theta=th,
+                             moves_per_machine=moves_per_machine,
+                             move_prob=move_prob, epsilon=epsilon, key=key)
+
+    th = _stack_theta(theta, b, n)
+    if keys is None:
+        return _vmap_over_theta(one, problems, assignments, th)
+    if th is None:
+        return jax.vmap(lambda p, r, k: one(p, r, None, k))(
+            problems, assignments, keys)
+    return jax.vmap(one)(problems, assignments, th, keys)

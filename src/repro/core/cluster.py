@@ -7,6 +7,19 @@ exponential, so — following the §4.4 suggestion of restricting the joint
 strategy space — we evaluate, for the most dissatisfied node of each
 machine, the joint transfer of its h-hop same-machine neighborhood to each
 destination machine, accepting the best potential-decreasing move.
+
+Sparse problems (DESIGN.md §17.3): :func:`cluster_move_pass` accepts a
+:class:`~repro.core.sparse.SparseProblem` in place of the dense problem.
+The only dense-only step was the h-hop mask's O(N^2) ``mask @ adjacency``
+frontier; :func:`h_hop_mask` dispatches it to the O(E) CSR frontier
+expansion of :func:`repro.core.sparse.frontier_expand` (a masked
+``segment_max`` over the sender slabs per hop), and everything else —
+cost matrix, dissatisfaction, candidate global costs — was already
+representation-polymorphic through :mod:`repro.core.costs`.  Every
+accepted move strictly descends the global potential (the pass compares
+full global costs, so the Thm. 3.1/5.1 descent argument applies to the
+joint move exactly as to a unilateral one); ``tests/test_cluster.py``
+asserts it on both representations.
 """
 from __future__ import annotations
 
@@ -17,9 +30,12 @@ import jax
 import jax.numpy as jnp
 
 from . import costs
-from .problem import PartitionProblem, make_state
+from .problem import make_state
+from .sparse import SparseProblem, frontier_expand
 
 Array = jax.Array
+
+AnyProblem = costs.AnyProblem
 
 
 class ClusterMoveResult(NamedTuple):
@@ -40,14 +56,36 @@ def _h_hop_mask(adj: Array, seed_node: Array, hops: int) -> Array:
     return jax.lax.fori_loop(0, hops, body, mask)
 
 
+def h_hop_mask(problem: AnyProblem, seed_node: Array, hops: int) -> Array:
+    """Nodes within ``hops`` of ``seed_node`` (inclusive), either
+    representation: dense walks the O(N^2) adjacency (one boolean
+    matvec per hop), sparse expands the CSR frontier in O(E) per hop
+    (:func:`repro.core.sparse.frontier_expand`).  Identical masks on
+    converted problems — ``tests/test_cluster.py`` asserts it."""
+    if isinstance(problem, SparseProblem):
+        n = problem.num_nodes
+        mask = jnp.zeros((n,), bool).at[seed_node].set(True)
+
+        def body(_, m):
+            return frontier_expand(problem, m)
+
+        return jax.lax.fori_loop(0, hops, body, mask)
+    return _h_hop_mask(problem.adjacency, seed_node, hops)
+
+
 @partial(jax.jit, static_argnames=("framework", "hops"))
-def cluster_move_pass(problem: PartitionProblem, assignment: Array,
+def cluster_move_pass(problem: AnyProblem, assignment: Array,
                       framework: str = costs.C_FRAMEWORK,
                       hops: int = 1) -> ClusterMoveResult:
     """One pass: for every machine's most dissatisfied node, try moving its
     h-hop owned neighborhood jointly to every machine; apply the single best
     strictly-improving move found across all machines (sequential semantics
     keep the potential-descent property).
+
+    Accepts dense and sparse problems alike — the candidate costs are
+    full :func:`repro.core.costs.global_cost` evaluations (O(N^2) dense,
+    O(E) sparse per candidate), so an accepted move descends the global
+    potential by construction.
     """
     K = problem.num_machines
     state = make_state(problem, assignment)
@@ -61,7 +99,7 @@ def cluster_move_pass(problem: PartitionProblem, assignment: Array,
 
     def eval_machine(m):
         seed = seeds[m]
-        cluster = _h_hop_mask(problem.adjacency, seed, hops)
+        cluster = h_hop_mask(problem, seed, hops)
         cluster = cluster & (assignment == assignment[seed])
 
         def eval_dest(k):

@@ -62,17 +62,22 @@ def adjacency_aggregate(adjacency: Array, assignment: Array, num_machines: int) 
 
 
 def adjacency_aggregate_sparse(sp: SparseProblem, assignment: Array) -> Array:
-    """The same (N, K) aggregate from the edge list: an O(E*K)
-    ``segment_sum`` of per-edge one-hots over the sender-sorted slabs
-    (DESIGN.md §13.2).  Padded edges carry weight 0 and contribute an
-    exact +0.0; per-row summation order is receiver-ascending, matching
-    the dense matmul's j-ascending accumulation up to reassociation.
+    """The same (N, K) aggregate from the edge list: one O(E)
+    ``segment_sum`` keyed on the flattened ``sender * K + r[receiver]``
+    slot id (DESIGN.md §13.2).  Each (row, machine) slot accumulates its
+    slab's edges receiver-ascending — the same per-slot order as the
+    per-edge one-hot formulation this replaces (whose skipped entries
+    were exact ``+0.0``\\ s), so values are bitwise unchanged while the
+    (E, K) intermediate and its K-fold memory traffic disappear.  Padded
+    edges carry weight 0 and land on a real slot of the last row, an
+    exact ``+0.0``.
     """
-    onehot = jax.nn.one_hot(assignment[sp.receivers], sp.num_machines,
-                            dtype=sp.edge_weights.dtype)
-    return jax.ops.segment_sum(sp.edge_weights[:, None] * onehot,
-                               sp.senders, num_segments=sp.num_nodes,
-                               indices_are_sorted=True)
+    slot = sp.senders * sp.num_machines + assignment[sp.receivers]
+    flat = jax.ops.segment_sum(
+        sp.edge_weights, slot,
+        num_segments=sp.num_nodes * sp.num_machines,
+        indices_are_sorted=False)
+    return flat.reshape(sp.num_nodes, sp.num_machines)
 
 
 def problem_aggregate(problem: AnyProblem, assignment: Array,

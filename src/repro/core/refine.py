@@ -80,8 +80,15 @@ candidates of :mod:`repro.distributed`, the kernel adapters of
 
 Returns ``(dissat (rows,), best_machine (rows,))``: the net Eq.-4
 dissatisfaction and the LOWEST-INDEX arg-best machine (the DESIGN.md §7
-tie-break).  Reference implementation: ``costs.cost_matrix_from_aggregate``
-followed by ``costs.dissatisfaction_from_cost`` (the default when
+tie-break).  On the jnp path the tie-break is ``jnp.argmin``'s
+first-minimum; every Pallas implementation realizes the identical
+semantics in ONE place — the shared ``reduce_dissat_tile`` epilogue of
+:mod:`repro.kernels.dissatisfaction` (the iota-min trick), which all
+three fused kernels (``_dissat_kernel``, the edge-block
+``_edge_dissat_kernel`` and the sweep-candidate ``_edge_sweep_kernel``)
+call as their final reduction step.  Reference implementation:
+``costs.cost_matrix_from_aggregate`` followed by
+``costs.dissatisfaction_from_cost`` (the default when
 ``dissat_fn=None``); fused implementation:
 ``repro.kernels.ops.make_aggregate_dissat_fn`` — which under ``jax.vmap``
 (the batched sweeps of DESIGN.md §12) stays on the fused batch-grid
@@ -131,6 +138,11 @@ class DissatFn(Protocol):
 # Dissatisfaction below this threshold counts as "satisfied" — guards float
 # round-off from keeping the loop alive on a plateau.
 DEFAULT_TOL = 1e-6
+
+# Mover-buffer slots for the unbounded sweep apply (DESIGN.md §17): sets
+# up to this size update through apply_moves' incident windows; larger
+# sets fall back to the O(E) rebuild.
+_UNBOUNDED_APPLY_CAP = 4096
 
 
 class TurnResult(NamedTuple):
@@ -696,6 +708,13 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
     (each machine's pick maximizes — and its move gate tests — the
     dissatisfaction net of the node's migration price).
 
+    Tie-breaks are deterministic throughout (DESIGN.md §7): each
+    machine's pick is ``jnp.argmax``'s first maximum (lowest node
+    index), and each node's destination is the lowest-index arg-best
+    machine — the latter realized on every kernel path by the shared
+    ``reduce_dissat_tile`` epilogue (see "The ``dissat_fn`` convention"
+    in the module docstring; three fused kernels share it).
+
     ``recorder`` opts into telemetry (DESIGN.md §14): per-sweep events
     (with a movers-per-sweep side output) plus drift + ``run_end``;
     ``recorder=None`` (default) runs the identical pre-telemetry
@@ -713,6 +732,316 @@ def refine_simultaneous(problem: PartitionProblem, assignment: Array,
         result, outs, movers = _refine_simultaneous(
             problem, assignment, framework, max_sweeps=max_sweeps, tol=tol,
             theta=theta, telemetry=True)
+        jax.block_until_ready(result)
+    wall = time.perf_counter() - t0
+    c0s, ct0s, active = outs
+    recorder.record_sweeps(run, c0s, ct0s, active, movers=movers)
+    turns = int(result.num_turns)
+    last = max(turns - 1, 0)
+    recorder.record_result(run, result, wall=wall, c0=float(c0s[last]),
+                           ct0=float(ct0s[last]))
+    return result, outs
+
+
+class SweepCandidateFn(Protocol):
+    """Fused sweep-election convention (DESIGN.md §17.4): the same 9
+    positional arguments as :class:`DissatFn`, but returning the
+    per-MACHINE election instead of the per-node reduction::
+
+        sweep_fn(aggregate, assignment, node_weights, loads, speeds, mu,
+                 framework, total_weight, theta)
+            -> (gains (K,), picks (K,), dests (K,))
+
+    ``gains[m]`` is the best net dissatisfaction among machine m's owned
+    nodes, ``picks[m]`` that node (lowest index on ties — the same
+    DESIGN.md §7 tie-break ``jnp.argmax`` applies) and ``dests[m]`` its
+    lowest-index arg-best machine.  Factory:
+    ``repro.kernels.ops.make_edge_sweep_fn`` (the edge-streaming Pallas
+    kernel whose epilogue extends ``reduce_dissat_tile``).  Consumed by
+    :func:`refine_sweeps` with ``moves_per_machine=1``.
+    """
+
+    def __call__(self, aggregate: Array, assignment: Array,
+                 node_weights: Array, loads: Array, speeds: Array,
+                 mu, framework: str, total_weight,
+                 theta=None) -> tuple[Array, Array, Array]:
+        """Returns ``(gains (K,), picks (K,), dests (K,))``."""
+        ...
+
+
+@partial(jax.jit, static_argnames=("framework", "max_sweeps",
+                                   "moves_per_machine", "move_prob",
+                                   "epsilon", "dissat_fn", "sweep_fn",
+                                   "telemetry"))
+def _refine_sweeps(problem: PartitionProblem, assignment: Array, key=None,
+                   framework: str = costs.C_FRAMEWORK,
+                   max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                   theta=None, moves_per_machine: int | None = 1,
+                   move_prob: float = 1.0, epsilon: float = 0.0,
+                   dissat_fn=None, sweep_fn=None, telemetry: bool = False):
+    """Jitted scan body of :func:`refine_sweeps`.
+
+    Returns ``(RefineResult, (c0s, ct0s, active), movers)`` exactly like
+    :func:`_refine_simultaneous` (``movers`` is ``None`` unless
+    ``telemetry=True``; the default jaxpr is the pre-telemetry program).
+    """
+    K = problem.num_machines
+    n = problem.num_nodes
+    theta = _resolve_theta(theta, n)
+    agg0 = agg_mod.init_aggregate_state(problem, assignment)
+    total_b = jnp.sum(problem.node_weights)
+
+    def sweep(carry, sweep_idx):
+        agg, done, moves = carry
+        # ε-gain threshold (arXiv:1305.3354, approximate congestion
+        # games): a configuration is an ε-equilibrium once no player can
+        # improve by more than ε times the per-node average potential,
+        # so the acceptance floor scales with the CARRIED potential and
+        # the loop stops at an ε-Nash point instead of chasing O(tol)
+        # tail gains.  epsilon=0 is statically elided: thresh is the
+        # same python float ``tol`` that _refine_simultaneous compares
+        # against, keeping the degenerate config bitwise.
+        if epsilon:
+            pot = agg.c0 if framework == costs.C_FRAMEWORK else agg.ct0
+            thresh = tol + epsilon * jnp.abs(pot) / n
+        else:
+            thresh = tol
+
+        if sweep_fn is not None:
+            # fused election: gains/picks/dests straight off the kernel
+            gains, pick, dest_k = sweep_fn(
+                agg.aggregate, agg.assignment, problem.node_weights,
+                agg.loads, problem.speeds, problem.mu, framework, total_b,
+                theta)
+        else:
+            if dissat_fn is None:
+                cost = costs.cost_matrix_from_aggregate(
+                    agg.aggregate, agg.assignment, problem.node_weights,
+                    agg.loads, problem.speeds, problem.mu, framework,
+                    total_weight=total_b)
+                dissat, best = costs.dissatisfaction_from_cost(
+                    cost, agg.assignment, theta)
+            else:
+                dissat, best = dissat_fn(agg.aggregate, agg.assignment,
+                                         problem.node_weights, agg.loads,
+                                         problem.speeds, problem.mu,
+                                         framework, total_b, theta)
+
+        if sweep_fn is not None or moves_per_machine == 1:
+            if sweep_fn is None:
+                owned = jax.nn.one_hot(agg.assignment, K,
+                                       dtype=dissat.dtype)           # (N,K)
+                masked = jnp.where(owned.T > 0, dissat[None, :],
+                                   -jnp.inf)                         # (K,N)
+                pick = jnp.argmax(masked, axis=1).astype(jnp.int32)  # (K,)
+                gains = jnp.max(masked, axis=1)
+                dest_k = best[pick]
+            cand = gains > thresh                                    # (K,)
+        elif moves_per_machine is not None:
+            owned = jax.nn.one_hot(agg.assignment, K, dtype=dissat.dtype)
+            masked = jnp.where(owned.T > 0, dissat[None, :], -jnp.inf)
+            gains, pick = jax.lax.top_k(masked, moves_per_machine)   # (K,M)
+            gains = gains.reshape(-1)                                # (K·M,)
+            pick = pick.reshape(-1).astype(jnp.int32)
+            dest_k = best[pick]
+            cand = gains > thresh
+        else:
+            # unbounded: every node clearing the threshold is a candidate
+            cand = dissat > thresh                                   # (N,)
+
+        # Probabilistic acceptance (arXiv:cs/0506098, Berenbrink et al.,
+        # distributed selfish load balancing): simultaneous best
+        # responses can overshoot their destinations, so each candidate
+        # migrates only with an independent per-candidate coin.  With
+        # unilateral gains g_i, the accepted set drops the potential by
+        # Σp_i·g_i in expectation while the collision overshoot scales
+        # as Σ_{i≠j sharing a dest} p_i·p_j·b_i·b_j, so E[ΔΦ] < 0
+        # whenever each destination's EXPECTED accepted inflow stays
+        # below its load deficit — the expected-drop bound.  In the
+        # unbounded mode (where overshoot is O(N)-wide) the coin rate is
+        # DERIVED from that bound per candidate:
+        #     p_i = move_prob · min(1, gap_i / W_{d_i}),
+        # gap_i being half the source→destination normalized-load
+        # imbalance (the weight that equalizes the pair) and W_d the
+        # total candidate weight targeting d, so each destination's
+        # expected inflow is at most move_prob · its absorbable weight.
+        # The elected modes (≤ K·M movers) keep the flat ``move_prob``
+        # coin — their overshoot is already bounded by the election.
+        # ``move_prob >= 1`` is statically elided: ``accept`` IS
+        # ``cand`` (same tensor, no PRNG op staged), which is what makes
+        # the degenerate config bitwise-reproduce
+        # :func:`_refine_simultaneous`.
+        if move_prob < 1.0:
+            coin_key = jax.random.fold_in(key, sweep_idx)
+            if sweep_fn is None and moves_per_machine is None:
+                norm = agg.loads / problem.speeds                    # (K,)
+                gap = 0.5 * (norm[agg.assignment] - norm[best]) \
+                    * problem.speeds[best]                           # (N,)
+                w_dest = jax.ops.segment_sum(
+                    jnp.where(cand, problem.node_weights,
+                              jnp.zeros((), dissat.dtype)),
+                    best, num_segments=K)                            # (K,)
+                frac = gap / jnp.maximum(w_dest[best],
+                                         jnp.asarray(1e-30, dissat.dtype))
+                coin = jax.random.bernoulli(
+                    coin_key, move_prob * jnp.clip(frac, 0.0, 1.0))
+                # A candidate whose destination gap is non-positive has
+                # acceptance probability 0 on every future sweep too (its
+                # coin rate only rises if loads change, and loads only
+                # change through moves) — once ALL candidates are in that
+                # state the chain is absorbed, so they must not keep the
+                # convergence test alive.
+                cand = cand & (frac > 0)
+            else:
+                coin = jax.random.bernoulli(coin_key, move_prob,
+                                            cand.shape)
+            accept = cand & coin
+        else:
+            accept = cand
+
+        any_cand = jnp.any(cand) & ~done
+
+        if sweep_fn is not None or moves_per_machine == 1:
+            new_agg = agg_mod.apply_sweep(problem, agg, pick, dest_k,
+                                          accept, total_b)
+        elif moves_per_machine is not None:
+            new_agg = agg_mod.apply_moves(problem, agg, pick, dest_k,
+                                          accept, total_b)
+        else:
+            # Unbounded apply: the adaptive coin keeps accepted sets small
+            # after the first sweeps, so gather the movers into a fixed
+            # R-slot buffer and reuse apply_moves' O(R·max_degree·K)
+            # incident-window update; only a sweep whose accepted set
+            # overflows the buffer pays the O(E) from-scratch rebuild
+            # (lax.cond, so the cheap branch is the one executed).
+            r_cap = min(_UNBOUNDED_APPLY_CAP, n)
+            n_acc = jnp.sum(accept.astype(jnp.int32))
+            idx = jnp.nonzero(accept, size=r_cap, fill_value=0)[0] \
+                .astype(jnp.int32)
+            valid = jnp.arange(r_cap) < n_acc
+            new_agg = jax.lax.cond(
+                n_acc <= r_cap,
+                lambda: agg_mod.apply_moves(problem, agg, idx, best[idx],
+                                            valid, total_b),
+                lambda: agg_mod.rebuild_state(
+                    problem, jnp.where(accept, best, agg.assignment),
+                    total_b))
+        new_agg = jax.tree.map(
+            lambda new, old: jnp.where(any_cand, new, old), new_agg, agg)
+        sweep_movers = jnp.where(any_cand,
+                                 jnp.sum(accept.astype(jnp.int32)), 0)
+        moves = moves + sweep_movers
+        out = (new_agg.c0, new_agg.ct0, any_cand)
+        if telemetry:
+            out = out + (sweep_movers,)
+        return (new_agg, done | ~any_cand, moves), out
+
+    (agg, done, moves), outs = jax.lax.scan(
+        sweep, (agg0, jnp.zeros((), bool), jnp.zeros((), jnp.int32)),
+        jnp.arange(max_sweeps, dtype=jnp.int32))
+    movers = None
+    if telemetry:
+        c0s, ct0s, active, movers = outs
+    else:
+        c0s, ct0s, active = outs
+    result = RefineResult(
+        assignment=agg.assignment, loads=agg.loads,
+        num_moves=moves,
+        num_turns=jnp.sum(active.astype(jnp.int32)),
+        converged=done, aggregate_drift=jnp.zeros(()))
+    return result, (c0s, ct0s, active), movers
+
+
+def refine_sweeps(problem: PartitionProblem, assignment: Array,
+                  framework: str = costs.C_FRAMEWORK,
+                  max_sweeps: int = 256, tol: float = DEFAULT_TOL,
+                  theta=None, moves_per_machine: int | None = 1,
+                  move_prob: float = 1.0, epsilon: float = 0.0, key=None,
+                  dissat_fn: DissatFn | None = None,
+                  sweep_fn: SweepCandidateFn | None = None, recorder=None):
+    """Multi-move probabilistic sweeps (DESIGN.md §17): the §4.5
+    simultaneous mode generalized so convergence is O(sweeps), not
+    O(moves).
+
+    Per sweep, candidates are elected by the static ``moves_per_machine``:
+
+      * ``1`` (default) — each machine's single most dissatisfied node,
+        exactly :func:`refine_simultaneous`'s election;
+      * ``M > 1`` — each machine's top-M owned nodes (``lax.top_k``),
+        applied as one rank-K·M update
+        (:func:`repro.core.aggregate.apply_moves`);
+      * ``None`` — unbounded: EVERY node whose net dissatisfaction
+        clears the threshold migrates to its best response.  Accepted
+        sets are gathered into a fixed mover buffer and applied through
+        :func:`repro.core.aggregate.apply_moves`' incident-edge windows
+        (O(R·max_degree·K) per sweep); a sweep whose accepted set
+        overflows the buffer falls back to the drift-free O(E·K) rebuild
+        (:func:`repro.core.aggregate.rebuild_state`) — the
+        million-node-in-seconds mode of ROADMAP item 1.
+
+    ``move_prob < 1`` then thins the candidates with independent coins:
+    a flat ``move_prob`` rate in the elected modes, and in the
+    unbounded mode per-candidate rates DERIVED from the cs/0506098
+    expected-drop bound — ``move_prob · min(1, gap_i / W_dest)``, so
+    each destination's expected inflow never overshoots its load
+    deficit (see the derivation comment in the sweep body).
+    ``epsilon`` raises the acceptance floor to ``tol + ε·|Φ|/N`` — the
+    ε-equilibrium threshold of 1305.3354.  Convergence is declared when
+    no CANDIDATE clears the threshold (coin luck never extends or ends
+    the run); the unbounded adaptive mode additionally drops candidates
+    whose destination gap is non-positive — their coin rate is 0 on this
+    and every future sweep, so a sweep where ALL candidates are in that
+    state is an absorbing stochastic fixed point and counts as
+    converged.
+
+    The degenerate config — ``moves_per_machine=1, move_prob=1.0,
+    epsilon=0`` — stages the same per-sweep op sequence as
+    :func:`refine_simultaneous` and reproduces its accepted-move
+    sequence, potentials and mover counts BITWISE on dense and sparse
+    problems alike (CI-gated by ``benchmarks/sparse_bench.py``).
+
+    ``key`` (a ``jax.random`` PRNG key) is required when
+    ``move_prob < 1``; per-sweep coins derive via ``fold_in(key, sweep)``
+    so results are reproducible per (key, config).  ``dissat_fn`` is the
+    canonical 9-argument seam (module docstring) — e.g.
+    ``repro.kernels.ops.make_edge_dissat_fn`` streams the candidate
+    pass's edges once per sweep; ``sweep_fn``
+    (:class:`SweepCandidateFn`) fuses the per-machine election into the
+    kernel epilogue itself (``moves_per_machine=1`` only).
+
+    Returns ``(RefineResult, (c0s, ct0s, active))`` like
+    :func:`refine_simultaneous`; ``recorder`` opts into the identical
+    telemetry shape (per-sweep potentials + movers).
+    """
+    if move_prob < 1.0 and key is None:
+        raise ValueError("refine_sweeps(move_prob < 1) needs a PRNG `key` "
+                         "for the per-sweep acceptance coins")
+    if sweep_fn is not None and moves_per_machine != 1:
+        raise ValueError("sweep_fn fuses the one-move-per-machine election "
+                         "(moves_per_machine=1); use dissat_fn for the "
+                         "other modes")
+    if sweep_fn is not None and dissat_fn is not None:
+        raise ValueError("pass sweep_fn or dissat_fn, not both (sweep_fn "
+                         "subsumes the per-node reduction)")
+    if recorder is None:
+        result, outs, _ = _refine_sweeps(
+            problem, assignment, key, framework, max_sweeps=max_sweeps,
+            tol=tol, theta=theta, moves_per_machine=moves_per_machine,
+            move_prob=move_prob, epsilon=epsilon, dissat_fn=dissat_fn,
+            sweep_fn=sweep_fn)
+        return result, outs
+    run = _open_run(recorder, "refine_sweeps", problem, assignment,
+                    framework, theta,
+                    moves_per_machine=(-1 if moves_per_machine is None
+                                       else moves_per_machine),
+                    move_prob=move_prob, epsilon=epsilon)
+    t0 = time.perf_counter()
+    with recorder.phase("core.refine_sweeps", run):
+        result, outs, movers = _refine_sweeps(
+            problem, assignment, key, framework, max_sweeps=max_sweeps,
+            tol=tol, theta=theta, moves_per_machine=moves_per_machine,
+            move_prob=move_prob, epsilon=epsilon, dissat_fn=dissat_fn,
+            sweep_fn=sweep_fn, telemetry=True)
         jax.block_until_ready(result)
     wall = time.perf_counter() - t0
     c0s, ct0s, active = outs

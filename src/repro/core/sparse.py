@@ -270,6 +270,24 @@ def dense_from_sparse(sp: SparseProblem) -> PartitionProblem:
                         normalize_speeds=False)
 
 
+def frontier_expand(sp: SparseProblem, mask: Array) -> Array:
+    """One BFS frontier step over the edge list: ``mask`` grown by every
+    node adjacent (through a real, nonzero-weight edge) to a masked node
+    — the O(E) CSR replacement for the dense ``mask @ (adj > 0)`` step
+    of :func:`repro.core.cluster.h_hop_mask` (DESIGN.md §17.3).
+
+    Each undirected edge is stored in both directions, so testing the
+    RECEIVER endpoint and ``segment_max``-reducing over the sender slabs
+    reaches every neighbor; padded edges carry weight 0 and can never
+    fire.
+    """
+    hit = mask[sp.receivers] & (sp.edge_weights > 0)
+    reached = jax.ops.segment_max(hit.astype(jnp.int32), sp.senders,
+                                  num_segments=sp.num_nodes,
+                                  indices_are_sorted=True)
+    return mask | (reached > 0)
+
+
 def node_incident_edges(sp: SparseProblem, node: Array
                         ) -> tuple[Array, Array]:
     """(neighbors, weights) of one node as a ``max_degree`` window — the

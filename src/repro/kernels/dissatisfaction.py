@@ -229,6 +229,48 @@ def reduce_dissat_tile(aggregate, r_rows, b_rows, theta_rows, loads_row,
     return current - best_val - theta_rows, best_idx
 
 
+def reduce_sweep_tile(aggregate, r_rows, b_rows, theta_rows, loads_row,
+                      speeds_row, mu, total_b, row_base, *, framework: str,
+                      k_real: int, n_real: int):
+    """The per-MACHINE sweep election over one (TN, K) tile (DESIGN.md
+    §17.4) — EXTENDS :func:`reduce_dissat_tile` (calls it first, so the
+    per-node ``(dissat, best)`` semantics and tie-breaks stay in the one
+    shared place) and then reduces the tile to each machine's election
+    partials:
+
+      * ``tile_gain (K,)`` — max net dissatisfaction among the tile's
+        rows owned by machine k (``-_BIG`` when it owns none here);
+      * ``tile_node (K,)`` — the GLOBAL id of that row (lowest row on
+        ties — the same first-maximum tie-break ``jnp.argmax`` realizes
+        on the jnp election path, via the iota-min trick);
+      * ``tile_dest (K,)`` — that row's lowest-index arg-best machine.
+
+    ``row_base`` is the tile's global row offset; rows at or beyond
+    ``n_real`` (padding) are masked out of every election.  The host
+    combine (argmax over the tile axis — first maximum = lowest tile,
+    hence globally lowest node index) finishes the election.
+    """
+    dissat, best = reduce_dissat_tile(
+        aggregate, r_rows, b_rows, theta_rows, loads_row, speeds_row, mu,
+        total_b, framework=framework, k_real=k_real)
+    tn, kpad = aggregate.shape
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (tn, kpad), 0)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (tn, kpad), 1)
+    valid = (row_base + row_iota) < n_real
+    own = (r_rows[:, None] == kidx) & valid
+    masked = jnp.where(own, dissat[:, None], -_BIG)            # (TN, K)
+    tile_gain = jnp.max(masked, axis=0)
+    # lowest winning row per machine (first-maximum tie-break)
+    win = masked >= tile_gain[None, :]
+    tile_row = jnp.min(jnp.where(win, row_iota, tn), axis=0)
+    tile_node = (row_base + tile_row).astype(jnp.int32)
+    # gather the winning row's best machine, again via the min trick
+    tile_dest = jnp.min(jnp.where(row_iota == tile_row[None, :],
+                                  best[:, None], jnp.int32(2**31 - 1)),
+                        axis=0).astype(jnp.int32)
+    return tile_gain, tile_node, tile_dest
+
+
 def _dissat_kernel(agg_ref, r_rows_ref, b_rows_ref, theta_rows_ref,
                    loads_ref, speeds_ref, scalars_ref, dissat_ref, best_ref,
                    *, framework: str, k_real: int):

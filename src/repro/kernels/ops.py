@@ -11,7 +11,7 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
-from ..core.refine import DissatFn
+from ..core.refine import DissatFn, SweepCandidateFn
 from . import ref
 from .decode_attention import decode_attention_pallas
 from .dissatisfaction import (cost_matrix_pallas,
@@ -136,6 +136,33 @@ def make_edge_dissat_fn(problem, interpret: bool | None = None) -> DissatFn:
            framework, total_weight, theta=None):
         del aggregate   # recomputed from edges — see docstring
         return dissatisfaction_from_edges_pallas(
+            layout, assignment, node_weights, loads, speeds, mu, framework,
+            theta=theta, total_weight=total_weight, interpret=interpret)
+    return fn
+
+
+def make_edge_sweep_fn(problem,
+                       interpret: bool | None = None) -> SweepCandidateFn:
+    """The :class:`~repro.core.refine.SweepCandidateFn` convention on the
+    fused Pallas edge-block SWEEP kernel (DESIGN.md §17.4): one edge
+    stream per sweep produces the whole per-machine election
+    ``(gains, picks, dests)`` — the carried ``aggregate`` argument is
+    ignored (recomputed from edges, drift-free like
+    :func:`make_edge_dissat_fn`), and only O(T·K) election partials ever
+    leave the kernel.  ``problem`` is a concrete
+    :class:`~repro.core.sparse.SparseProblem`; its edge-tile layout is
+    built host-side once here and closed over.  Plugs into
+    ``repro.core.refine_sweeps(..., sweep_fn=...)``
+    (``moves_per_machine=1`` only — the election IS one per machine).
+    """
+    from .edge_block import (build_edge_tile_layout,
+                             sweep_candidates_from_edges_pallas)
+    layout = build_edge_tile_layout(problem)
+
+    def fn(aggregate, assignment, node_weights, loads, speeds, mu,
+           framework, total_weight, theta=None):
+        del aggregate   # recomputed from edges — see docstring
+        return sweep_candidates_from_edges_pallas(
             layout, assignment, node_weights, loads, speeds, mu, framework,
             theta=theta, total_weight=total_weight, interpret=interpret)
     return fn

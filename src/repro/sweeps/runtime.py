@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from ..core import costs
 from ..core.batch import (problem_shape_key, refine_batched,
-                          refine_simultaneous_batched,
+                          refine_simultaneous_batched, refine_sweeps_batched,
                           refine_traced_batched, stack_problems,
                           unstack_pytree)
 from ..core.problem import PartitionProblem
@@ -39,7 +39,7 @@ from . import metrics
 
 Array = jax.Array
 
-MODES = ("refine", "traced", "simultaneous")
+MODES = ("refine", "traced", "simultaneous", "multimove")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,15 +62,28 @@ class SweepSpec:
 
     ``mode`` selects the refinement entry point: ``"refine"``
     (while-loop to convergence), ``"traced"`` (fixed-length scan with
-    per-turn move/potential traces) or ``"simultaneous"`` (§4.5 sweep
-    mode).  ``use_kernel`` routes the per-turn reduction through the
-    fused Pallas batch-grid kernel (DESIGN.md §12.3; ``"refine"`` mode
-    only — the traced loop has no ``dissat_fn`` seam)."""
+    per-turn move/potential traces), ``"simultaneous"`` (§4.5 sweep
+    mode) or ``"multimove"`` (the probabilistic multi-move sweeps of
+    DESIGN.md §17 — :func:`repro.core.batch.refine_sweeps_batched`).
+    ``use_kernel`` routes the per-turn reduction through the fused
+    Pallas batch-grid kernel (DESIGN.md §12.3; ``"refine"`` mode only —
+    the traced loop has no ``dissat_fn`` seam).
+
+    The three multimove knobs — ``moves_per_machine`` (``None`` =
+    unbounded), ``move_prob`` and ``epsilon`` — plus ``seed`` (each
+    case's acceptance-coin key derives as
+    ``fold_in(PRNGKey(seed), case_index)``, so fleet results are
+    reproducible and independent of grouping) apply to
+    ``mode="multimove"`` only; other modes reject non-default values."""
     cases: tuple[SweepCase, ...]
     mode: str = "traced"
     max_turns: int = 512
     tol: float = DEFAULT_TOL
     use_kernel: bool = False
+    moves_per_machine: int | None = 1
+    move_prob: float = 1.0
+    epsilon: float = 0.0
+    seed: int = 0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -80,6 +93,11 @@ class SweepSpec:
             raise ValueError("use_kernel applies to mode='refine' only "
                              "(the traced/simultaneous loops have no "
                              "dissat_fn seam)")
+        if self.mode != "multimove" and (
+                self.moves_per_machine != 1 or self.move_prob != 1.0
+                or self.epsilon != 0.0 or self.seed != 0):
+            raise ValueError("moves_per_machine/move_prob/epsilon/seed "
+                             "apply to mode='multimove' only")
 
 
 def make_spec(cases: Sequence[SweepCase], **kwargs) -> SweepSpec:
@@ -167,6 +185,20 @@ def run_sweep(spec: SweepSpec, recorder=None) -> "SweepResult":
                 return refine_traced_batched(problems, r0, framework,
                                              max_turns=spec.max_turns,
                                              tol=spec.tol, theta=theta)
+            if spec.mode == "multimove":
+                keys = None
+                if spec.move_prob < 1.0:
+                    # per-CASE keys from the global case index, so a
+                    # case's coins do not depend on how the fleet groups
+                    base = jax.random.PRNGKey(spec.seed)
+                    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+                        jnp.asarray(idxs, jnp.int32))
+                return refine_sweeps_batched(
+                    problems, r0, framework, max_sweeps=spec.max_turns,
+                    tol=spec.tol, theta=theta,
+                    moves_per_machine=spec.moves_per_machine,
+                    move_prob=spec.move_prob, epsilon=spec.epsilon,
+                    keys=keys)
             return refine_simultaneous_batched(problems, r0, framework,
                                                max_sweeps=spec.max_turns,
                                                tol=spec.tol, theta=theta)
@@ -203,8 +235,8 @@ class SweepResult:
 
     ``results[i]`` is case i's :class:`~repro.core.refine.RefineResult`;
     ``traces[i]`` is its ``Trace`` (traced mode), its
-    ``(c0s, ct0s, active)`` per-sweep potentials (simultaneous mode) or
-    ``None`` (refine mode).  The methods below reduce across the fleet
+    ``(c0s, ct0s, active)`` per-sweep potentials (simultaneous and
+    multimove modes) or ``None`` (refine mode).  The methods below reduce across the fleet
     (DESIGN.md §12.5)."""
     spec: SweepSpec
     results: list[RefineResult]
@@ -257,7 +289,7 @@ class SweepResult:
                                 for t in self.traces]),
                     np.asarray([float(np.asarray(t.ct0)[-1])
                                 for t in self.traces]))
-        if self.spec.mode == "simultaneous":
+        if self.spec.mode in ("simultaneous", "multimove"):
             return (np.asarray([float(np.asarray(t[0])[-1])
                                 for t in self.traces]),
                     np.asarray([float(np.asarray(t[1])[-1])

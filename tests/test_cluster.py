@@ -1,0 +1,182 @@
+"""§7 cluster moves (DESIGN.md §17.3): h-hop masks (dense O(N^2) walk ==
+sparse O(E) CSR frontier), joint-move atomicity, strict potential descent
+on both representations, and the ``apply_cluster_move`` aggregate window
+against the rebuild oracle."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import costs
+from repro.core.aggregate import (apply_cluster_move, init_aggregate_state,
+                                  rebuild_state)
+from repro.core.cluster import _h_hop_mask, cluster_move_pass, h_hop_mask
+from repro.core.problem import make_problem
+from repro.core.sparse import frontier_expand, sparse_from_dense
+from repro.graphs.generators import random_degree_graph, random_weights
+
+
+def _instance(n=60, k=4, seed=0):
+    adj = random_degree_graph(n, seed=seed, dmin=2, dmax=4)
+    b, c = random_weights(adj, seed=seed + 1, mean=5.0)
+    prob = make_problem(c, b, np.linspace(0.5, 2.0, k), mu=8.0)
+    r0 = jnp.asarray(np.random.default_rng(seed + 2).integers(0, k, n),
+                     jnp.int32)
+    return prob, sparse_from_dense(prob), r0
+
+
+# ---------------------------------------------------------------------------
+# h-hop masks: dense walk == sparse CSR frontier
+# ---------------------------------------------------------------------------
+
+def test_frontier_expand_matches_dense_one_hop():
+    prob, sp, _ = _instance(seed=3)
+    nbr = np.asarray(prob.adjacency) > 0
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        mask = jnp.asarray(rng.random(prob.num_nodes) < 0.2)
+        want = np.asarray(mask) | (np.asarray(mask) @ nbr)
+        got = np.asarray(frontier_expand(sp, mask))
+        np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 1_000), node=st.integers(0, 59),
+       hops=st.integers(1, 3))
+@settings(max_examples=15)
+def test_h_hop_mask_dense_equals_sparse(seed, node, hops):
+    prob, sp, _ = _instance(seed=seed % 7)
+    seed_node = jnp.asarray(node, jnp.int32)
+    dense_mask = h_hop_mask(prob, seed_node, hops)
+    sparse_mask = h_hop_mask(sp, seed_node, hops)
+    np.testing.assert_array_equal(np.asarray(sparse_mask),
+                                  np.asarray(dense_mask))
+    np.testing.assert_array_equal(
+        np.asarray(dense_mask),
+        np.asarray(_h_hop_mask(prob.adjacency, seed_node, hops)))
+    assert bool(dense_mask[node])   # seed always included
+
+
+# ---------------------------------------------------------------------------
+# cluster_move_pass: atomicity + strict descent, both representations
+# ---------------------------------------------------------------------------
+
+def _candidate_clusters(problem, assignment, framework, hops):
+    """The per-machine candidate sets the pass evaluates: each machine's
+    most dissatisfied node's h-hop OWNED neighborhood (replicates the
+    pass's election on public pieces)."""
+    from repro.core.problem import make_state
+    k = problem.num_machines
+    state = make_state(problem, assignment)
+    dissat, _ = costs.dissatisfaction(problem, state, framework)
+    out = []
+    a = np.asarray(assignment)
+    d = np.asarray(dissat)
+    for m in range(k):
+        owned = a == m
+        masked = np.where(owned, d, -np.inf)
+        seed = int(np.argmax(masked))
+        cluster = np.asarray(h_hop_mask(problem, jnp.asarray(seed), hops))
+        out.append(cluster & (a == a[seed]))
+    return out
+
+
+@pytest.mark.parametrize("fw", costs.FRAMEWORKS)
+@pytest.mark.parametrize("rep", ["dense", "sparse"])
+def test_cluster_move_strictly_descends(fw, rep):
+    moved_any = False
+    for seed in range(6):
+        prob, sp, r0 = _instance(seed=seed)
+        problem = sp if rep == "sparse" else prob
+        before = float(costs.global_cost(problem, r0, fw))
+        res = cluster_move_pass(problem, r0, fw, hops=1)
+        after = float(costs.global_cost(problem, res.assignment, fw))
+        if bool(res.moved):
+            moved_any = True
+            assert after < before
+            assert float(res.gain) > 0
+            np.testing.assert_allclose(before - after, float(res.gain),
+                                       rtol=1e-4, atol=1e-3)
+        else:
+            np.testing.assert_array_equal(np.asarray(res.assignment),
+                                          np.asarray(r0))
+    assert moved_any   # the property must actually be exercised
+
+
+@pytest.mark.parametrize("rep", ["dense", "sparse"])
+def test_cluster_move_never_splits_h_hop_component(rep):
+    """An accepted move transfers a seed's whole owned h-hop component
+    atomically: the changed set IS one of the K candidate clusters, all
+    to one destination."""
+    checked = 0
+    for seed in range(8):
+        prob, sp, r0 = _instance(seed=seed)
+        problem = sp if rep == "sparse" else prob
+        res = cluster_move_pass(problem, r0, "c", hops=1)
+        if not bool(res.moved):
+            continue
+        old, new = np.asarray(r0), np.asarray(res.assignment)
+        changed = old != new
+        assert changed.any()
+        # all moved nodes share one source and one destination
+        assert len(set(old[changed])) == 1
+        assert len(set(new[changed])) == 1
+        # and the moved set is exactly one candidate cluster — no subset
+        clusters = _candidate_clusters(problem, r0, "c", hops=1)
+        assert any(np.array_equal(changed, c) for c in clusters)
+        checked += 1
+    assert checked >= 2
+
+
+def test_cluster_pass_dense_equals_sparse():
+    for seed in range(4):
+        prob, sp, r0 = _instance(seed=seed)
+        res_d = cluster_move_pass(prob, r0, "ct", hops=2)
+        res_s = cluster_move_pass(sp, r0, "ct", hops=2)
+        assert bool(res_d.moved) == bool(res_s.moved)
+        np.testing.assert_array_equal(np.asarray(res_s.assignment),
+                                      np.asarray(res_d.assignment))
+
+
+# ---------------------------------------------------------------------------
+# apply_cluster_move: aggregate window vs rebuild oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rep", ["dense", "sparse"])
+def test_apply_cluster_move_matches_rebuild(rep):
+    prob, sp, r0 = _instance(seed=1)
+    problem = sp if rep == "sparse" else prob
+    total_b = jnp.sum(problem.node_weights)
+    agg = init_aggregate_state(problem, r0)
+    seed_node = 7
+    source = r0[seed_node]
+    dest = (source + 1) % problem.num_machines
+    mask = h_hop_mask(problem, jnp.asarray(seed_node, jnp.int32), 1)
+    mask = mask & (r0 == source)
+
+    out = apply_cluster_move(problem, agg, mask, source, dest,
+                             jnp.asarray(True), total_b)
+    want_assignment = jnp.where(mask, dest, r0).astype(jnp.int32)
+    oracle = rebuild_state(problem, want_assignment, total_b)
+    np.testing.assert_array_equal(np.asarray(out.assignment),
+                                  np.asarray(oracle.assignment))
+    np.testing.assert_allclose(np.asarray(out.aggregate),
+                               np.asarray(oracle.aggregate),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out.loads),
+                               np.asarray(oracle.loads), rtol=1e-5)
+    for field in ("c0", "ct0"):
+        np.testing.assert_allclose(float(getattr(out, field)),
+                                   float(getattr(oracle, field)),
+                                   rtol=1e-4)
+
+    # do_move=False is a bitwise no-op on every carried leaf
+    kept = apply_cluster_move(problem, agg, mask, source, dest,
+                              jnp.asarray(False), total_b)
+    for got, old in zip(jax.tree.leaves(kept), jax.tree.leaves(agg)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(old))

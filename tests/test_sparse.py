@@ -6,6 +6,7 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from hypothesis import given, settings
@@ -15,7 +16,8 @@ from repro.core import costs
 from repro.core.aggregate import apply_move, init_aggregate_state
 from repro.core.batch import problem_shape_key, stack_problems
 from repro.core.problem import make_problem, make_state
-from repro.core.refine import refine, refine_simultaneous, refine_traced
+from repro.core.refine import (refine, refine_simultaneous, refine_sweeps,
+                               refine_traced)
 from repro.core.sparse import (SparseProblem, dense_from_sparse,
                                make_sparse_problem, node_incident_edges,
                                sparse_from_dense)
@@ -343,3 +345,147 @@ def test_edge_kernel_interpret_modes_agree():
     assert np.asarray(d_i).shape == (70,)
     assert np.asarray(b_i).dtype == np.int32
     assert int(np.asarray(b_i).max()) < 3
+
+
+# ---------------------------------------------------------------------------
+# multi-move probabilistic sweeps on SparseProblem (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fw", costs.FRAMEWORKS)
+@pytest.mark.parametrize("theta", [None, 0.5])
+def test_sparse_sweeps_degenerate_bitwise(fw, theta):
+    """moves_per_machine=1, move_prob=1, epsilon=0 stages refine_simultaneous's
+    op sequence on the sparse path too — the whole result must be bitwise."""
+    _, sp, r0 = _instance(seed=4)
+    res_s, (c0_s, ct0_s, act_s) = refine_simultaneous(
+        sp, r0, fw, max_sweeps=64, theta=theta)
+    res_w, (c0_w, ct0_w, act_w) = refine_sweeps(
+        sp, r0, fw, max_sweeps=64, theta=theta)
+    for a, b in zip(jax.tree.leaves(res_s), jax.tree.leaves(res_w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(act_s), np.asarray(act_w))
+    np.testing.assert_array_equal(np.asarray(c0_s), np.asarray(c0_w))
+    np.testing.assert_array_equal(np.asarray(ct0_s), np.asarray(ct0_w))
+
+
+@given(seed=st.integers(0, 2_000))
+@settings(max_examples=8)
+def test_sparse_sweeps_degenerate_bitwise_property(seed):
+    """Random sparse instances × frameworks × theta: the degenerate
+    config stays bitwise (accepted sweeps and final assignment)."""
+    _, sp, r0 = _instance(seed=seed % 11)
+    fw = "ct" if seed % 2 else "c"
+    theta = None if seed % 3 == 0 else 0.5
+    res_s, (_, _, act_s) = refine_simultaneous(sp, r0, fw, max_sweeps=48,
+                                               theta=theta)
+    res_w, (_, _, act_w) = refine_sweeps(sp, r0, fw, max_sweeps=48,
+                                         theta=theta)
+    np.testing.assert_array_equal(np.asarray(res_w.assignment),
+                                  np.asarray(res_s.assignment))
+    np.testing.assert_array_equal(np.asarray(act_w), np.asarray(act_s))
+
+
+@pytest.mark.parametrize("fw", costs.FRAMEWORKS)
+@pytest.mark.parametrize("theta", [None, 0.5])
+def test_sparse_dense_multimove_match(fw, theta):
+    """Sparse == dense multi-move sweep sequences under a shared key:
+    same accepted sweeps, same assignment, same mover count; potentials
+    within the §13.3 reassociation budget."""
+    prob, sp, r0 = _instance(seed=5)
+    key = jax.random.PRNGKey(21)
+    kwargs = dict(max_sweeps=128, theta=theta, moves_per_machine=2,
+                  move_prob=0.5, epsilon=1e-3, key=key)
+    res_d, (c0_d, ct0_d, act_d) = refine_sweeps(prob, r0, fw, **kwargs)
+    res_s, (c0_s, ct0_s, act_s) = refine_sweeps(sp, r0, fw, **kwargs)
+    np.testing.assert_array_equal(np.asarray(res_s.assignment),
+                                  np.asarray(res_d.assignment))
+    assert int(res_s.num_moves) == int(res_d.num_moves)
+    np.testing.assert_array_equal(np.asarray(act_s), np.asarray(act_d))
+    for name, a, b in (("c0", c0_d, c0_s), ("ct0", ct0_d, ct0_s)):
+        aa = np.asarray(a, np.float64)
+        bb = np.asarray(b, np.float64)
+        rel = np.max(np.abs(aa - bb) / np.maximum(np.abs(aa), 1e-9))
+        assert rel <= 1e-3, (name, rel)
+
+
+@pytest.mark.parametrize("fw", costs.FRAMEWORKS)
+def test_sparse_unbounded_sweeps_descend_and_converge(fw):
+    """The unbounded mode with cs/0506098 adaptive acceptance descends to
+    an equilibrium below the start (fixed-seed empirical check)."""
+    _, sp, r0 = _instance(n=120, k=4, seed=9)
+    res, (c0s, ct0s, active) = refine_sweeps(
+        sp, r0, fw, max_sweeps=512, moves_per_machine=None,
+        move_prob=0.5, epsilon=1e-3, key=jax.random.PRNGKey(3))
+    assert bool(res.converged)
+    pots = np.asarray(c0s if fw == "c" else ct0s, np.float64)
+    n_active = int(np.asarray(active).sum())
+    assert n_active >= 1
+    assert pots[n_active - 1] < float(costs.global_cost(sp, r0, fw))
+
+
+def test_refine_sweeps_validation():
+    from repro.kernels.ops import make_edge_sweep_fn
+    _, sp, r0 = _instance()
+    with pytest.raises(ValueError, match="key"):
+        refine_sweeps(sp, r0, "c", move_prob=0.5)
+    fn = make_edge_sweep_fn(sp, interpret=True)
+    with pytest.raises(ValueError, match="moves_per_machine"):
+        refine_sweeps(sp, r0, "c", sweep_fn=fn, moves_per_machine=2)
+    with pytest.raises(ValueError, match="not both"):
+        refine_sweeps(sp, r0, "c", sweep_fn=fn, dissat_fn=fn)
+
+
+# ---------------------------------------------------------------------------
+# fused sweep-election kernel (DESIGN.md §17.4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fw", costs.FRAMEWORKS)
+@pytest.mark.parametrize("theta", [None, 0.5])
+def test_sweep_kernel_election_matches_jnp(fw, theta):
+    """The kernel's per-machine election — gains, picks, destinations —
+    against the jnp reference: picks/dests EXACTLY (same lowest-index
+    tie-break as jnp.argmax), gains within the §13.3 budget."""
+    from repro.kernels.edge_block import (build_edge_tile_layout,
+                                          sweep_candidates_from_edges_pallas)
+    _, sp, r0 = _instance(n=150, k=5, seed=6)
+    agg = init_aggregate_state(sp, r0)
+    total_b = jnp.sum(sp.node_weights)
+    th = None if theta is None else jnp.full((sp.num_nodes,), theta)
+    cost = costs.cost_matrix_from_aggregate(
+        agg.aggregate, r0, sp.node_weights, agg.loads, sp.speeds, sp.mu,
+        fw, total_weight=total_b)
+    dissat, best = costs.dissatisfaction_from_cost(cost, r0, th)
+    owned = jax.nn.one_hot(r0, sp.num_machines, dtype=dissat.dtype)
+    masked = jnp.where(owned.T > 0, dissat[None, :], -jnp.inf)
+    pick_ref = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    gain_ref = jnp.max(masked, axis=1)
+    dest_ref = best[pick_ref]
+
+    layout = build_edge_tile_layout(sp)
+    gain_k, pick_k, dest_k = sweep_candidates_from_edges_pallas(
+        layout, r0, sp.node_weights, agg.loads, sp.speeds, sp.mu, fw,
+        theta=theta, total_weight=total_b)
+    np.testing.assert_array_equal(np.asarray(pick_k), np.asarray(pick_ref))
+    np.testing.assert_array_equal(np.asarray(dest_k), np.asarray(dest_ref))
+    np.testing.assert_allclose(np.asarray(gain_k), np.asarray(gain_ref),
+                               rtol=1e-3, atol=5e-2)
+
+
+def test_refine_sweeps_via_sweep_fn_matches_jnp_path():
+    """Full refinement through the fused election == the jnp path: same
+    coins (shared key, same (K,) shape), so identical elections must give
+    identical accepted sweeps, assignment and mover counts."""
+    from repro.kernels.ops import make_edge_sweep_fn
+    _, sp, r0 = _instance(n=100, k=4, seed=8)
+    fn = make_edge_sweep_fn(sp)
+    for fw in costs.FRAMEWORKS:
+        kwargs = dict(max_sweeps=256, move_prob=0.5, epsilon=1e-3,
+                      key=jax.random.PRNGKey(5))
+        res_j, (_, _, act_j) = refine_sweeps(sp, r0, fw, **kwargs)
+        res_k, (_, _, act_k) = refine_sweeps(sp, r0, fw, sweep_fn=fn,
+                                             **kwargs)
+        assert bool(res_j.converged) and bool(res_k.converged)
+        assert int(res_j.num_moves) == int(res_k.num_moves)
+        np.testing.assert_array_equal(np.asarray(res_k.assignment),
+                                      np.asarray(res_j.assignment))
+        np.testing.assert_array_equal(np.asarray(act_k), np.asarray(act_j))

@@ -17,12 +17,14 @@ import jax
 import jax.numpy as jnp
 
 from repro import sweeps
+from repro.core import costs
 from repro.core.batch import (batch_size, refine_batched,
                               refine_simultaneous_batched,
-                              refine_traced_batched, stack_problems,
-                              stack_pytrees, unstack_pytree)
+                              refine_sweeps_batched, refine_traced_batched,
+                              stack_problems, stack_pytrees, unstack_pytree)
 from repro.core.problem import make_problem
-from repro.core.refine import refine, refine_simultaneous, refine_traced
+from repro.core.refine import (refine, refine_simultaneous, refine_sweeps,
+                               refine_traced)
 from repro.des import scenarios
 from repro.des.engine import (DESConfig, make_initial_state, run_simulation,
                               run_simulation_batch)
@@ -168,6 +170,84 @@ def test_refine_simultaneous_batched_bitwise(framework):
 
 
 # ---------------------------------------------------------------------------
+# multi-move probabilistic sweeps (DESIGN.md §17): conformance suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("framework", ["c", "ct"])
+@pytest.mark.parametrize("theta", [None, 0.5])
+def test_refine_sweeps_degenerate_bitwise(framework, theta):
+    """moves_per_machine=1, move_prob=1, epsilon=0 stages the SAME program
+    as refine_simultaneous (no PRNG op, same election, same apply), so the
+    whole result — assignment, loads, move counts, the per-sweep potential
+    traces — must agree bitwise, not just within tolerance."""
+    problems, r0s = _mixed_problems(3, seed0=60)
+    for prob, r0 in zip(problems, r0s):
+        res_s, (c0_s, ct0_s, act_s) = refine_simultaneous(
+            prob, r0, framework, max_sweeps=48, theta=theta)
+        res_w, (c0_w, ct0_w, act_w) = refine_sweeps(
+            prob, r0, framework, max_sweeps=48, theta=theta)
+        for a, b in zip(jax.tree.leaves(res_s), jax.tree.leaves(res_w)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(act_s), np.asarray(act_w))
+        np.testing.assert_array_equal(np.asarray(c0_s), np.asarray(c0_w))
+        np.testing.assert_array_equal(np.asarray(ct0_s), np.asarray(ct0_w))
+
+
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_refine_sweeps_multimove_descends(framework):
+    """Elected multi-move sweeps (M=2, flat coin) under a fixed seed reach
+    an equilibrium below the starting potential — the §17.1 expected-drop
+    argument, checked empirically per DESIGN.md §17."""
+    problems, r0s = _mixed_problems(3, seed0=70)
+    for i, (prob, r0) in enumerate(zip(problems, r0s)):
+        res, (c0s, ct0s, active) = refine_sweeps(
+            prob, r0, framework, max_sweeps=256, moves_per_machine=2,
+            move_prob=0.5, epsilon=1e-3, key=jax.random.PRNGKey(100 + i))
+        assert bool(res.converged), f"element {i} did not converge"
+        pots = np.asarray(c0s if framework == "c" else ct0s, np.float64)
+        start = float(costs.global_cost(prob, r0, framework))
+        n_active = int(np.asarray(active).sum())
+        assert n_active >= 1
+        assert pots[n_active - 1] < start
+        # descent in expectation: the mean per-sweep drop over the active
+        # prefix is strictly negative (individual sweeps may ascend)
+        if n_active >= 2:
+            assert (pots[n_active - 1] - pots[0]) / (n_active - 1) < 0.0
+
+
+@pytest.mark.parametrize("framework", ["c", "ct"])
+def test_refine_sweeps_batched_bitwise(framework):
+    """Probabilistic multi-move fleets == looped per-element, coins
+    included: each element folds its own key, so the batched coin
+    sequences are the looped ones."""
+    problems, r0s = _mixed_problems(4, seed0=80)
+    stacked = stack_problems(problems)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    res_b, (c0_b, ct0_b, act_b) = refine_sweeps_batched(
+        stacked, jnp.stack(r0s), framework, max_sweeps=96,
+        moves_per_machine=2, move_prob=0.5, epsilon=1e-3, keys=keys)
+    for i in range(4):
+        res_l, (c0_l, ct0_l, act_l) = refine_sweeps(
+            problems[i], r0s[i], framework, max_sweeps=96,
+            moves_per_machine=2, move_prob=0.5, epsilon=1e-3, key=keys[i])
+        _tree_equal_at(res_l, res_b, i, f"sweeps[{framework}]")
+        np.testing.assert_array_equal(np.asarray(act_l),
+                                      np.asarray(act_b)[i])
+        for name, a, b in (("c0", c0_l, c0_b), ("ct0", ct0_l, ct0_b)):
+            aa = np.asarray(a, np.float64)
+            bb = np.asarray(b, np.float64)[i]
+            rel = np.max(np.abs(aa - bb) / np.maximum(np.abs(aa), 1e-9))
+            assert rel <= POTENTIAL_TOL, (name, i, rel)
+
+
+def test_refine_sweeps_batched_requires_keys():
+    problems, r0s = _mixed_problems(2, seed0=80)
+    stacked = stack_problems(problems)
+    with pytest.raises(ValueError, match="keys"):
+        refine_sweeps_batched(stacked, jnp.stack(r0s), "c", move_prob=0.5)
+
+
+# ---------------------------------------------------------------------------
 # the SweepSpec -> SweepResult runtime
 # ---------------------------------------------------------------------------
 
@@ -222,12 +302,39 @@ def test_run_sweep_simultaneous_mode_and_potentials():
     assert ct0.shape == (4,) and np.isfinite(ct0).all()
 
 
+def test_run_sweep_multimove_mode_matches_looped():
+    """Fleet multimove results == looped refine_sweeps with the per-case
+    fold_in key, regardless of how the runtime groups the cases."""
+    cases = _mixed_cases(4)
+    spec = sweeps.make_spec(cases, mode="multimove", max_turns=96,
+                            moves_per_machine=2, move_prob=0.5,
+                            epsilon=1e-3, seed=11)
+    res = sweeps.run_sweep(spec)
+    for i, case in enumerate(cases):
+        key = jax.random.fold_in(jax.random.PRNGKey(11), i)
+        res_l, _ = refine_sweeps(
+            case.problem, jnp.asarray(case.assignment, jnp.int32),
+            case.framework, max_sweeps=96, theta=case.theta,
+            moves_per_machine=2, move_prob=0.5, epsilon=1e-3, key=key)
+        np.testing.assert_array_equal(np.asarray(res_l.assignment),
+                                      np.asarray(res.results[i].assignment),
+                                      err_msg=case.label)
+        assert int(res_l.num_moves) == int(res.results[i].num_moves), \
+            case.label
+    c0, ct0 = res.final_potentials()
+    assert np.isfinite(c0).all() and np.isfinite(ct0).all()
+
+
 def test_sweep_spec_validation():
     cases = _mixed_cases(2)
     with pytest.raises(ValueError, match="unknown sweep mode"):
         sweeps.make_spec(cases, mode="bogus")
     with pytest.raises(ValueError, match="use_kernel"):
         sweeps.make_spec(cases, mode="traced", use_kernel=True)
+    with pytest.raises(ValueError, match="multimove"):
+        sweeps.make_spec(cases, mode="traced", move_prob=0.5)
+    with pytest.raises(ValueError, match="multimove"):
+        sweeps.make_spec(cases, mode="simultaneous", moves_per_machine=None)
 
 
 def test_sweep_metrics_cv_and_trace():
