@@ -1,53 +1,22 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
-import datetime
 import json
+import math
 import os
-import platform
-import subprocess
 import time
 
 import numpy as np
 
 import jax
 
+# the one shared provenance implementation — the analysis CLI stamps the
+# identical block into findings.json (DESIGN.md §14.5)
+from repro.provenance import provenance  # noqa: F401  (re-exported)
+
 # BENCH_*.json files land in the repo root so the perf trajectory is
 # tracked across PRs next to the sources that produced it.
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _git_sha() -> str | None:
-    try:
-        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
-                             capture_output=True, text=True, timeout=10)
-        return out.stdout.strip() or None
-    except (OSError, subprocess.SubprocessError):
-        return None
-
-
-def provenance() -> dict:
-    """What produced a BENCH file: code version + toolchain + hardware.
-
-    Stamped into every ``write_bench_json`` document so a perf number is
-    never compared against one from a different commit, jax version, or
-    device kind without noticing — the overwrite diff below prints
-    exactly which of these changed.
-    """
-    import jaxlib
-    dev = jax.devices()[0]
-    return {
-        "git_sha": _git_sha(),
-        "jax": jax.__version__,
-        "jaxlib": jaxlib.__version__,
-        "backend": jax.default_backend(),
-        "device_kind": dev.device_kind,
-        "device_count": jax.device_count(),
-        "platform": platform.platform(),
-        "python": platform.python_version(),
-        "timestamp_utc": datetime.datetime.now(
-            datetime.timezone.utc).isoformat(timespec="seconds"),
-    }
 
 
 def _provenance_diff(old: dict, new: dict) -> list[str]:
@@ -57,12 +26,59 @@ def _provenance_diff(old: dict, new: dict) -> list[str]:
             for k in sorted(keys) if old.get(k) != new.get(k)]
 
 
+class BenchPayloadError(ValueError):
+    """A BENCH document failed schema validation — nothing was written."""
+
+
+_REQUIRED_PROVENANCE = ("git_sha", "jax", "jaxlib", "backend",
+                        "device_kind")
+_LEAF_TYPES = (str, bool, int, float, type(None), np.integer, np.floating)
+
+
+def _walk_leaves(obj, path):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk_leaves(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from _walk_leaves(v, f"{path}[{i}]")
+    else:
+        yield path, obj
+
+
+def validate_bench_payload(doc: dict) -> None:
+    """Minimal schema gate before a BENCH_*.json file is (over)written.
+
+    A committed artifact with a NaN/Inf leaf or a missing provenance
+    block poisons every later cross-PR comparison, so refuse to write
+    one: the provenance block must carry the toolchain keys, and every
+    leaf must be a finite JSON-serializable scalar (json.dump would
+    happily emit a bare ``NaN`` token, which is not even legal JSON).
+    Raises :class:`BenchPayloadError`.
+    """
+    prov = doc.get("provenance")
+    if not isinstance(prov, dict):
+        raise BenchPayloadError("bench document has no provenance block")
+    missing = [k for k in _REQUIRED_PROVENANCE if k not in prov]
+    if missing:
+        raise BenchPayloadError(f"provenance block missing keys: {missing}")
+    for path, leaf in _walk_leaves(doc, "$"):
+        if not isinstance(leaf, _LEAF_TYPES):
+            raise BenchPayloadError(
+                f"non-JSON leaf at {path}: {type(leaf).__name__}")
+        if isinstance(leaf, (float, np.floating)) and not math.isfinite(leaf):
+            raise BenchPayloadError(f"non-finite value at {path}: {leaf}")
+
+
 def write_bench_json(name: str, payload) -> str:
     """Persist a suite's machine-readable results as BENCH_<name>.json.
 
-    Overwriting an existing file prints the provenance diff (commit,
-    toolchain, device) so a regressed-looking number that merely came
-    from different hardware or jax version is visible at a glance.
+    The document is schema-validated first (provenance present, every
+    leaf finite — :func:`validate_bench_payload`), so a bad run can
+    never clobber a committed artifact.  Overwriting an existing file
+    prints the provenance diff (commit, toolchain, device) so a
+    regressed-looking number that merely came from different hardware or
+    jax version is visible at a glance.
     """
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     prov = provenance()
@@ -83,6 +99,7 @@ def write_bench_json(name: str, payload) -> str:
         "provenance": prov,
         "results": payload,
     }
+    validate_bench_payload(doc)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")

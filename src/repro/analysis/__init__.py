@@ -19,12 +19,13 @@ from .registry import (AnalysisContext, FAMILIES, Finding, Rule,
                        registered_rules, rule, run_rules, split_findings)
 
 # importing the rule modules populates the registry
-from . import ast_rules, docs_rules, jaxpr_rules, wire_rules  # noqa: E402,F401
+from . import (ast_rules, complexity_rules, docs_rules,  # noqa: E402,F401
+               jaxpr_rules, wire_rules)
 from . import entrypoints  # noqa: E402,F401
 
 __all__ = [
     "AnalysisContext", "FAMILIES", "Finding", "Rule", "rule",
     "registered_rules", "run_rules", "load_baseline", "split_findings",
-    "default_baseline_path", "entrypoints", "ast_rules", "docs_rules",
-    "jaxpr_rules", "wire_rules",
+    "default_baseline_path", "entrypoints", "ast_rules", "complexity_rules",
+    "docs_rules", "jaxpr_rules", "wire_rules",
 ]

@@ -1,0 +1,519 @@
+"""complexity-family analyzers: static asymptotics certification (DESIGN.md §18).
+
+The paper's feasibility claim is that per-round exchange is independent
+of the simulated network's size (arXiv 1111.0875 §5), and the repo's
+scaling story rests on asymptotic promises — O(E) sparse aggregates,
+O(N*K) cost assembly, O(K) wire — that runtime benches only sample at a
+few sizes.  This family certifies them *at trace time*: every
+registered entry point is retraced over a geometric grid of problem
+sizes (nothing executes — ``jax.make_jaxpr`` is shape-symbolic), the
+jaxprs are walked recursively through scan/while/cond/pjit/shard_map
+sub-jaxprs, and
+
+  * **mem/ops budgets** — peak single-equation intermediate bytes and a
+    per-primitive op-count proxy are fitted to power laws in N, K and
+    (on sparse paths) degree; a fitted exponent above the budget the
+    owning module declares (``SPARSE_COMPLEXITY`` et al.) is a finding.
+    A stray dense ``(N, N)`` intermediate on a sparse path shows up as
+    an N-exponent near 2 against a budget of 1.
+  * **collective audit** — psum/all_gather-family primitives are
+    classified as recurring (inside the refinement loop) or setup, and
+    their per-shard operand bytes must be independent of N and equal to
+    the declared ledger constants (§9.2/§14.5) — generalizing
+    ``wire_rules`` from protocol buffers to the full traced program.
+  * **expectation table** — fitted exponents and collective schedules
+    are diffed against the checked-in ``complexity.json`` (analogous to
+    ``baseline.json``), making this a complexity-*regression* gate:
+    CI sees exponent drift even while it stays under budget.
+
+Findings functions take explicit inputs so the seeded-violation tests
+can drive them with deliberately quadratic fixtures, mirroring the
+other families (DESIGN.md §16.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from functools import lru_cache
+from typing import Callable
+
+import numpy as np
+
+import jax
+
+from .registry import AnalysisContext, Finding, rule
+from .jaxpr_rules import _sub_jaxprs, iter_eqns
+from ..launch.jaxpr_flops import _dot_flops as dot_flops
+from . import entrypoints
+
+__all__ = [
+    "Grid", "GRIDS", "EXPONENT_TOL", "EXPECTATION_TOL",
+    "Measurement", "measure_jaxpr", "collective_schedule", "fit_exponent",
+    "profile_trace", "profile_entry_point", "declared_budget",
+    "budget_findings", "exponent_findings", "collective_findings",
+    "expectation_findings", "default_table_path", "load_table",
+    "build_table_entry", "update_table", "all_profiles",
+]
+
+# A fitted exponent may exceed its declared budget by this much before
+# it is a finding: absorbs padding noise (EDGE_PAD_MULTIPLE=128 edge
+# rounding, DEGREE_PAD_MULTIPLE=8 max-degree growth under stitching)
+# while staying far below the +1.0 jump of a genuine dense
+# materialization on a sparse path.
+EXPONENT_TOL = 0.35
+
+# Allowed drift of a re-fitted exponent against the checked-in
+# complexity.json before the regression gate fires.  Fits are exact
+# shape arithmetic, so same-toolchain refits reproduce bit-identically;
+# the slack absorbs jaxpr changes across jax versions.
+EXPECTATION_TOL = 0.1
+
+_LOOP_PRIMS = frozenset({"while", "scan"})
+_COLLECTIVE_TOKENS = ("psum", "all_gather", "ppermute", "all_to_all",
+                      "pmax", "pmin", "pbroadcast", "reduce_scatter",
+                      "pgather", "pshuffle")
+
+
+# -- size grids -------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """One geometric sweep layout: N varied at fixed K (and fixed degree
+    on sparse paths), K varied at a fixed N, degree varied at a fixed N
+    (sparse only — it scales E independently of N)."""
+    name: str
+    n: tuple[int, ...]
+    k_fixed: int
+    k: tuple[int, ...]
+    n_for_k: int
+    degree: tuple[int, ...]
+    n_for_degree: int
+    degree_fixed: int = 8
+
+
+GRIDS = {
+    "full": Grid("full", n=(64, 256, 1024, 4096), k_fixed=4,
+                 k=(2, 4, 8), n_for_k=256,
+                 degree=(4, 8, 16), n_for_degree=1024),
+    "quick": Grid("quick", n=(32, 64, 128, 256), k_fixed=4,
+                  k=(2, 4, 8), n_for_k=64,
+                  degree=(4, 8, 16), n_for_degree=128),
+}
+
+
+# -- jaxpr measurement ------------------------------------------------------
+
+def _aval_bytes(aval) -> int:
+    dtype = getattr(aval, "dtype", None)
+    shape = getattr(aval, "shape", None)
+    if dtype is None or shape is None:
+        return 0
+    try:
+        if jax.dtypes.issubdtype(dtype, jax.dtypes.extended):
+            itemsize = 4              # PRNG key words
+        else:
+            itemsize = np.dtype(dtype).itemsize
+    except TypeError:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) * itemsize
+
+
+def _aval_elems(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64))
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Static byte/op profile of one traced program."""
+    peak_bytes: int          # largest single equation-output aval
+    peak_shape: tuple        # its shape (the "(N, N) intermediate" story)
+    peak_primitive: str
+    arg_bytes: int           # top-level inputs + closed-over constants
+    ops: int                 # element-count proxy; dot_general counted exactly
+
+
+def measure_jaxpr(closed) -> Measurement:
+    """Walk every equation (incl. nested sub-jaxprs, each body once) and
+    record the peak intermediate and the op-count proxy: dot_general
+    contributes exact FLOPs, everything else its output element count —
+    a scaling proxy, not a cost model (the fits only need exponents)."""
+    peak, peak_shape, peak_prim, ops = 0, (), "", 0
+    for eqn in iter_eqns(closed):
+        if eqn.primitive.name == "dot_general":
+            ops += dot_flops(eqn)
+        for v in eqn.outvars:
+            b = _aval_bytes(v.aval)
+            if eqn.primitive.name != "dot_general":
+                ops += _aval_elems(v.aval)
+            if b > peak:
+                peak = b
+                peak_shape = tuple(getattr(v.aval, "shape", ()))
+                peak_prim = eqn.primitive.name
+    jaxpr = getattr(closed, "jaxpr", closed)
+    consts = getattr(jaxpr, "constvars", ())
+    arg_bytes = sum(_aval_bytes(v.aval) for v in (*jaxpr.invars, *consts))
+    return Measurement(peak_bytes=peak, peak_shape=peak_shape,
+                       peak_primitive=peak_prim, arg_bytes=arg_bytes,
+                       ops=ops)
+
+
+def collective_schedule(closed) -> tuple[tuple[str, str, int], ...]:
+    """Every psum/all_gather-family equation as (primitive, phase,
+    per-shard operand bytes), phase = "recurring" when the equation sits
+    inside a while/scan body (once per refinement round) else "setup".
+    Operand avals inside shard_map bodies are per-shard by construction,
+    which is exactly the ledger's unit (§14.5)."""
+    out: list[tuple[str, str, int]] = []
+
+    def walk(jaxpr, in_loop: bool):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if any(tok in name for tok in _COLLECTIVE_TOKENS):
+                in_b = sum(_aval_bytes(getattr(v, "aval", None))
+                           for v in eqn.invars)
+                out.append((name, "recurring" if in_loop else "setup", in_b))
+            child_in_loop = in_loop or name in _LOOP_PRIMS
+            for sub in _sub_jaxprs(eqn.params):
+                walk(sub, child_in_loop)
+
+    jaxpr = getattr(closed, "jaxpr", closed)
+    walk(jaxpr, False)
+    return tuple(out)
+
+
+# -- power-law fitting ------------------------------------------------------
+
+def fit_exponent(sizes, values) -> float:
+    """Least-squares slope of log2(value) against log2(size): the fitted
+    exponent of the best power law through the grid points."""
+    xs = np.log2(np.asarray(sizes, dtype=np.float64))
+    ys = np.log2(np.maximum(np.asarray(values, dtype=np.float64), 1.0))
+    if xs.size < 2 or np.ptp(xs) == 0.0:
+        return 0.0
+    a = np.stack([xs, np.ones_like(xs)], axis=1)
+    slope = np.linalg.lstsq(a, ys, rcond=None)[0][0]
+    return float(slope)
+
+
+def profile_trace(trace_fn: Callable[..., object], grid: Grid, *,
+                  sparse: bool = False, max_n: int | None = None) -> dict:
+    """Fit the mem/ops exponents of ``trace_fn(n, k, degree)`` over a
+    grid, and summarize its collective schedule across the N sweep.
+
+    Returns ``{"fits": {"mem": {dim: exp}, "ops": {...}}, "peak_shape",
+    "peak_primitive", "collectives": {"n_independent", "recurring_bytes",
+    "setup_bytes", "schedule"}}``.  The seeded-violation tests call this
+    directly with fixture trace functions.
+    """
+    deg = grid.degree_fixed if sparse else None
+    ns = tuple(n for n in grid.n if max_n is None or n <= max_n)
+    n_traces = [trace_fn(n, grid.k_fixed, deg) for n in ns]
+    n_meas = [measure_jaxpr(tr) for tr in n_traces]
+    scheds = [collective_schedule(tr) for tr in n_traces]
+
+    n_for_k = min((grid.n_for_k, *(m for m in (max_n,) if m is not None)))
+    k_meas = [measure_jaxpr(trace_fn(n_for_k, k, deg)) for k in grid.k]
+
+    fits = {
+        "mem": {"n": fit_exponent(ns, [m.peak_bytes for m in n_meas]),
+                "k": fit_exponent(grid.k, [m.peak_bytes for m in k_meas])},
+        "ops": {"n": fit_exponent(ns, [m.ops for m in n_meas]),
+                "k": fit_exponent(grid.k, [m.ops for m in k_meas])},
+    }
+    if sparse:
+        n_for_d = min((grid.n_for_degree,
+                       *(m for m in (max_n,) if m is not None)))
+        d_meas = [measure_jaxpr(trace_fn(n_for_d, grid.k_fixed, d))
+                  for d in grid.degree]
+        fits["mem"]["e"] = fit_exponent(grid.degree,
+                                        [m.peak_bytes for m in d_meas])
+        fits["ops"]["e"] = fit_exponent(grid.degree,
+                                        [m.ops for m in d_meas])
+
+    top = n_meas[-1]
+    return {
+        "fits": fits,
+        "peak_shape": top.peak_shape,
+        "peak_primitive": top.peak_primitive,
+        "collectives": {
+            "n_independent": all(s == scheds[0] for s in scheds),
+            "recurring_bytes": sum(b for _, ph, b in scheds[-1]
+                                   if ph == "recurring"),
+            "setup_bytes": sum(b for _, ph, b in scheds[-1]
+                               if ph == "setup"),
+            "schedule": scheds[-1],
+        },
+    }
+
+
+@lru_cache(maxsize=None)
+def profile_entry_point(name: str, grid_name: str) -> dict:
+    """Grid profile of a registered entry point (cached per process —
+    the CLI, CI and the test suite share the tracing work)."""
+    ep = entrypoints.entry_point(name)
+    return profile_trace(
+        lambda n, k, degree: entrypoints.trace_entry_point_sized(
+            name, n, k, degree),
+        GRIDS[grid_name], sparse=(ep.rep == "sparse"), max_n=ep.max_n)
+
+
+# -- declared budgets -------------------------------------------------------
+
+_ZERO_COLLECTIVES = {"recurring_bytes": 0, "setup_bytes": 0}
+
+
+def _module_attr(modname: str, attr: str):
+    import importlib
+    return getattr(importlib.import_module(modname), attr, None)
+
+
+def declared_budget(ep) -> dict | None:
+    """The complexity budget the owning module declares for ``ep``, or
+    None when nothing is declared (a finding: every registered entry
+    point must carry a budget).
+
+    Budgets live next to the code they constrain — ``SPARSE_COMPLEXITY``
+    beside the COO layout, ``KERNEL_COMPLEXITY`` beside the Pallas
+    wrappers, ``DISTRIBUTED_COLLECTIVES`` beside the drivers — the same
+    ownership rule as the §16.4 dispatch arms.
+    """
+    kernel = _module_attr("repro.kernels.ops", "KERNEL_COMPLEXITY") or {}
+    if ep.name in kernel:
+        base = kernel[ep.name]
+    elif ep.runtime == "des":
+        base = _module_attr("repro.des.engine", "DES_COMPLEXITY")
+    elif ep.runtime == "distributed":
+        base = _module_attr("repro.distributed.runtime",
+                            "DISTRIBUTED_COMPLEXITY")
+    elif ep.rep == "sparse":
+        base = _module_attr("repro.core.sparse", "SPARSE_COMPLEXITY")
+    else:
+        base = _module_attr("repro.core.costs", "DENSE_COMPLEXITY")
+    if base is None:
+        return None
+    coll = _ZERO_COLLECTIVES
+    if ep.runtime == "distributed":
+        table = _module_attr("repro.distributed.runtime",
+                             "DISTRIBUTED_COLLECTIVES") or {}
+        coll = table.get(ep.name)
+        if coll is None:
+            return None
+    return {"mem": dict(base["mem"]), "ops": dict(base["ops"]),
+            "collectives": dict(coll)}
+
+
+# -- findings ---------------------------------------------------------------
+
+def budget_findings(eps, lookup: Callable = declared_budget) -> list[Finding]:
+    out = []
+    for ep in eps:
+        if lookup(ep) is None:
+            out.append(Finding(
+                "complexity-budget-declared", ep.name,
+                f"entry point {ep.name!r} ({ep.runtime}/{ep.rep}) has no "
+                f"declared complexity budget — add it to the owning "
+                f"module's *_COMPLEXITY registry (DESIGN.md §18)"))
+    return out
+
+
+def exponent_findings(name: str, profile: dict, budget: dict, metric: str,
+                      tol: float = EXPONENT_TOL) -> list[Finding]:
+    """Fitted exponents of ``metric`` ("mem" | "ops") against the budget."""
+    out = []
+    rule_name = f"complexity-{metric}-budget"
+    for dim, fitted in sorted(profile["fits"][metric].items()):
+        limit = budget[metric].get(dim)
+        if limit is None or fitted <= limit + tol:
+            continue
+        shape = profile.get("peak_shape", ())
+        prim = profile.get("peak_primitive", "")
+        hint = (f"; peak intermediate {tuple(shape)} from {prim!r}"
+                if metric == "mem" and shape else "")
+        out.append(Finding(
+            rule_name, f"{name}:{dim}",
+            f"{name}: fitted {metric} exponent {fitted:.2f} in {dim!r} "
+            f"exceeds declared budget {limit:.2f} (+{tol} tolerance)"
+            f"{hint}"))
+    return out
+
+
+def collective_findings(name: str, coll: dict, declared: dict) -> list[Finding]:
+    """The collective schedule against the declared per-round ledger:
+    N-independence plus exact recurring/setup per-shard byte totals."""
+    out = []
+    if not coll["n_independent"]:
+        out.append(Finding(
+            "complexity-collectives", f"{name}:n-dependent",
+            f"{name}: collective schedule changes across the N grid — "
+            f"per-round exchange must be independent of network size "
+            f"(arXiv 1111.0875 §5); top-size schedule: "
+            f"{list(coll['schedule'])}"))
+    for phase in ("recurring", "setup"):
+        got, want = coll[f"{phase}_bytes"], declared[f"{phase}_bytes"]
+        if got != want:
+            out.append(Finding(
+                "complexity-collectives", f"{name}:{phase}-bytes",
+                f"{name}: {phase} collective operand bytes {got} != "
+                f"declared ledger constant {want} (§9.2/§14.5); "
+                f"schedule: {list(coll['schedule'])}"))
+    return out
+
+
+# -- expectation table (complexity.json) ------------------------------------
+
+def default_table_path() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parent / "complexity.json"
+
+
+def load_table(path: pathlib.Path | str | None = None) -> dict:
+    p = pathlib.Path(path) if path else default_table_path()
+    if not p.is_file():
+        return {}
+    return json.loads(p.read_text())
+
+
+def build_table_entry(profile: dict) -> dict:
+    coll = profile["collectives"]
+    return {
+        "fits": {m: {d: round(v, 3) for d, v in sorted(dims.items())}
+                 for m, dims in sorted(profile["fits"].items())},
+        "peak_shape": list(profile["peak_shape"]),
+        "peak_primitive": profile["peak_primitive"],
+        "collectives": {
+            "n_independent": coll["n_independent"],
+            "recurring_bytes": coll["recurring_bytes"],
+            "setup_bytes": coll["setup_bytes"],
+            "schedule": [list(c) for c in coll["schedule"]],
+        },
+    }
+
+
+def expectation_findings(profiles: dict, table: dict, grid_name: str,
+                         tol: float = EXPECTATION_TOL) -> list[Finding]:
+    """Diff re-fitted exponents and collective schedules against the
+    checked-in expectation table — the cross-PR regression gate."""
+    out = []
+    grid_tab = table.get("grids", {}).get(grid_name)
+    if grid_tab is None:
+        out.append(Finding(
+            "complexity-expectations", f"table:{grid_name}",
+            f"complexity.json has no expectation entries for grid "
+            f"{grid_name!r} — regenerate with --update-complexity"))
+        return out
+    for name, prof in sorted(profiles.items()):
+        exp = grid_tab.get(name)
+        if exp is None:
+            out.append(Finding(
+                "complexity-expectations", f"missing:{name}",
+                f"{name}: no expectation entry for grid {grid_name!r} — "
+                f"regenerate with --update-complexity"))
+            continue
+        for metric, dims in sorted(prof["fits"].items()):
+            for dim, fitted in sorted(dims.items()):
+                want = exp.get("fits", {}).get(metric, {}).get(dim)
+                if want is None or abs(fitted - want) > tol:
+                    out.append(Finding(
+                        "complexity-expectations",
+                        f"{name}:{metric}.{dim}",
+                        f"{name}: fitted {metric} exponent in {dim!r} is "
+                        f"{fitted:.3f}, expectation table says {want} "
+                        f"(drift tolerance {tol})"))
+        got_c = build_table_entry(prof)["collectives"]
+        want_c = exp.get("collectives")
+        if got_c != want_c:
+            out.append(Finding(
+                "complexity-expectations", f"{name}:collectives",
+                f"{name}: collective schedule {got_c} != expectation "
+                f"table entry {want_c}"))
+    for name in sorted(set(grid_tab) - set(profiles)):
+        out.append(Finding(
+            "complexity-expectations", f"stale:{name}",
+            f"expectation table entry {name!r} matches no registered "
+            f"entry point — regenerate with --update-complexity"))
+    return out
+
+
+def update_table(grid_name: str,
+                 path: pathlib.Path | str | None = None) -> pathlib.Path:
+    """Re-fit every budgeted entry point on ``grid_name`` and rewrite
+    that grid's section of complexity.json (other grids preserved)."""
+    p = pathlib.Path(path) if path else default_table_path()
+    table = load_table(p)
+    table.setdefault("grids", {})
+    profiles = all_profiles(grid_name)
+    table["grids"][grid_name] = {name: build_table_entry(prof)
+                                 for name, prof in sorted(profiles.items())}
+    p.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    return p
+
+
+# -- rule wiring ------------------------------------------------------------
+
+def all_profiles(grid_name: str) -> dict:
+    """name -> grid profile for every entry point with a declared budget
+    (budget-less entries are the budget rule's findings, not crashes)."""
+    return {ep.name: profile_entry_point(ep.name, grid_name)
+            for ep in entrypoints.registered_entry_points()
+            if declared_budget(ep) is not None}
+
+
+def _ctx_profiles(ctx: AnalysisContext) -> tuple[str, dict]:
+    grid_name = getattr(ctx, "complexity_grid", "full")
+    profiles = all_profiles(grid_name)
+    ctx.reports.setdefault("complexity", {
+        "grid": grid_name,
+        "entry_points": {name: build_table_entry(prof)
+                         for name, prof in sorted(profiles.items())},
+    })
+    return grid_name, profiles
+
+
+@rule("complexity-budget-declared", "complexity")
+def complexity_budget_declared(ctx: AnalysisContext) -> list[Finding]:
+    """Every registered entry point must carry a declared budget."""
+    return budget_findings(entrypoints.registered_entry_points())
+
+
+@rule("complexity-mem-budget", "complexity")
+def complexity_mem_budget(ctx: AnalysisContext) -> list[Finding]:
+    """Peak-intermediate-bytes exponents within the declared budgets."""
+    _, profiles = _ctx_profiles(ctx)
+    out = []
+    for name, prof in sorted(profiles.items()):
+        budget = declared_budget(entrypoints.entry_point(name))
+        out.extend(exponent_findings(name, prof, budget, "mem"))
+    return out
+
+
+@rule("complexity-ops-budget", "complexity")
+def complexity_ops_budget(ctx: AnalysisContext) -> list[Finding]:
+    """Per-primitive op-count exponents within the declared budgets."""
+    _, profiles = _ctx_profiles(ctx)
+    out = []
+    for name, prof in sorted(profiles.items()):
+        budget = declared_budget(entrypoints.entry_point(name))
+        out.extend(exponent_findings(name, prof, budget, "ops"))
+    return out
+
+
+@rule("complexity-collectives", "complexity")
+def complexity_collectives(ctx: AnalysisContext) -> list[Finding]:
+    """Collective schedules: N-independent, matching ledger constants."""
+    _, profiles = _ctx_profiles(ctx)
+    out = []
+    for name, prof in sorted(profiles.items()):
+        budget = declared_budget(entrypoints.entry_point(name))
+        out.extend(collective_findings(name, prof["collectives"],
+                                       budget["collectives"]))
+    return out
+
+
+@rule("complexity-expectations", "complexity")
+def complexity_expectations(ctx: AnalysisContext) -> list[Finding]:
+    """Fitted exponents agree with the checked-in complexity.json."""
+    grid_name, profiles = _ctx_profiles(ctx)
+    return expectation_findings(profiles, load_table(), grid_name)

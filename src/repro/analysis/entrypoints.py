@@ -11,6 +11,14 @@ This replaces the single hand-written jaxpr pin that used to live in
 ``tests/test_obs.py`` with registry-driven coverage: a new driver gets
 the same guarantees by adding one entry here.
 
+Every thunk is *size-parameterized* (``n``, ``k``, and — on sparse
+paths — ``degree``): the complexity family (DESIGN.md §18) retraces each
+entry point over a geometric grid of problem sizes and fits byte/op
+power laws, so the same registry row yields both the canonical-size
+jaxpr pins and the asymptotics audit.  ``trace_entry_point`` keeps its
+historic meaning (the canonical small problem); sized traces go through
+:func:`trace_entry_point_sized`.
+
 Tracing is cached per process (``lru_cache``), so the CLI and the test
 suite share the work.
 """
@@ -25,9 +33,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["EntryPoint", "registered_entry_points", "trace_entry_point",
+__all__ = ["EntryPoint", "registered_entry_points", "entry_point",
+           "trace_entry_point", "trace_entry_point_sized",
            "trace_all", "canonical_problem", "canonical_sparse",
-           "canonical_batch", "canonical_assignment"]
+           "canonical_sparse_degree", "canonical_batch",
+           "canonical_assignment"]
 
 _N, _K = 16, 3
 _MAX_TURNS = 32
@@ -38,13 +48,24 @@ _MAX_SWEEPS = 12
 class EntryPoint:
     """One traced public execution path.
 
-    ``trace`` returns the ClosedJaxpr of the path on its canonical small
-    problem, with telemetry disabled — exactly the program the
-    ``recorder=None`` fast path stages.
+    ``trace`` returns the ClosedJaxpr of the path, with telemetry
+    disabled — exactly the program the ``recorder=None`` fast path
+    stages.  Called with no arguments it traces the canonical small
+    problem; the complexity analyzers call it as ``trace(n=..., k=...,
+    degree=...)`` to retrace at grid sizes (``degree`` only varies the
+    sparse representations and is ignored by dense paths).
+
+    ``rep`` records which representation the path consumes ("dense" or
+    "sparse") — the complexity registry keys its declared budgets on it.
+    ``max_n`` caps the N grid for paths whose *spec construction* is
+    quadratic-or-worse on the host (batched stacks, the DES scenario);
+    tracing itself never executes anything.
     """
     name: str
     runtime: str   # "controller" | "batched" | "distributed" | "des"
-    trace: Callable[[], object]
+    trace: Callable[..., object]
+    rep: str = "dense"
+    max_n: int | None = None
 
 
 @lru_cache(maxsize=None)
@@ -63,6 +84,25 @@ def canonical_sparse(n: int = _N, k: int = _K, seed: int = 3):
     return sparse_from_dense(canonical_problem(n, k, seed))
 
 
+@lru_cache(maxsize=None)
+def canonical_sparse_degree(n: int, k: int, degree: int, seed: int = 3):
+    """A sparse problem with controlled per-node degree, built on the
+    edge-list path (no (N, N) host array — the complexity N/E grids go
+    up to N=4096 and must not pay the dense floor just to trace)."""
+    from ..core.sparse import make_sparse_problem
+    from ..graphs.generators import (random_degree_graph_edges,
+                                     random_weights_edges)
+    s, r = random_degree_graph_edges(n, seed=seed, dmin=degree, dmax=degree)
+    b, w = random_weights_edges(n, s, seed=seed + 1, mean=5.0)
+    return make_sparse_problem(s, r, w, b, np.ones(k) / k, mu=8.0)
+
+
+def _sparse_problem(n: int, k: int, degree: int | None):
+    if degree is None:
+        return canonical_sparse(n, k)
+    return canonical_sparse_degree(n, k, degree)
+
+
 def canonical_assignment(n: int = _N, k: int = _K):
     return jnp.asarray(np.arange(n) % k, jnp.int32)
 
@@ -78,20 +118,21 @@ def canonical_batch(b: int = 2, n: int = _N, k: int = _K):
 
 
 @lru_cache(maxsize=None)
-def _canonical_des():
+def _canonical_des(n: int = 12, k: int = 2):
     """A tiny DES scenario (config, adjacency, initial state)."""
     from ..des.engine import DESConfig, make_initial_state
     from ..des.workload import flooded_packet_workload
     from ..graphs.generators import preferential_attachment
-    n, k, threads = 12, 2, 4
+    threads = 4
     adj = preferential_attachment(n, 5, m=2)
-    spec = flooded_packet_workload(adj, 9, num_threads=threads,
+    spec = flooded_packet_workload(adj, min(9, n - 1), num_threads=threads,
                                    num_windows=1, scope=2,
                                    window_sim_time=20.0, max_per_lp=2)
+    speeds = tuple(float(s) for s in np.linspace(1.0, 0.7, k).round(2))
     cfg = DESConfig(num_lps=n, num_machines=k, num_threads=threads,
                     event_capacity=32, history_capacity=64,
                     inter_delay=6, intra_delay=1, trace_stride=10,
-                    max_ticks=1_000, machine_speeds=(1.0, 0.7),
+                    max_ticks=1_000, machine_speeds=speeds,
                     refine_freq=40, refine_theta_scale=5.0,
                     migration_freeze=0.25)
     m0 = jnp.asarray(np.arange(n) % k, jnp.int32)
@@ -100,138 +141,156 @@ def _canonical_des():
 
 
 # -- the individual trace thunks (one per registered path) -----------------
+#
+# Each accepts (n, k, degree) so the complexity grids can retrace it at
+# any size; ``degree`` selects the controlled-degree sparse problem and
+# is ignored on dense paths.
 
-def _controller(fn_name: str, sparse: bool = False, **kwargs):
+def _controller(fn_name: str, sparse: bool = False, n: int = _N,
+                k: int = _K, degree: int | None = None, **kwargs):
     import importlib
     # attribute access would find the re-exported refine() function, not
     # the module, so resolve the submodule explicitly
     refine_mod = importlib.import_module("repro.core.refine")
     fn = getattr(refine_mod, fn_name)
-    prob = canonical_sparse() if sparse else canonical_problem()
+    prob = _sparse_problem(n, k, degree) if sparse else canonical_problem(n, k)
     return jax.make_jaxpr(lambda r: fn(prob, r, **kwargs))(
-        canonical_assignment())
+        canonical_assignment(n, k))
 
 
-def _kernel_dissat():
+def _kernel_dissat(n: int = _N, k: int = _K, degree: int | None = None):
     from ..core.refine import refine
     from ..kernels.ops import make_aggregate_dissat_fn
-    prob = canonical_problem()
+    prob = canonical_problem(n, k)
     dfn = make_aggregate_dissat_fn(interpret=True)
     return jax.make_jaxpr(
         lambda r: refine(prob, r, "c", max_turns=_MAX_TURNS, dissat_fn=dfn)
-    )(canonical_assignment())
+    )(canonical_assignment(n, k))
 
 
-def _edge_kernel_dissat():
+def _edge_kernel_dissat(n: int = _N, k: int = _K, degree: int | None = None):
     from ..core.refine import refine
     from ..kernels.ops import make_edge_dissat_fn
-    sp = canonical_sparse()
+    sp = _sparse_problem(n, k, degree)
     dfn = make_edge_dissat_fn(sp, interpret=True)
     return jax.make_jaxpr(
         lambda r: refine(sp, r, "c", max_turns=_MAX_TURNS, dissat_fn=dfn)
-    )(canonical_assignment())
+    )(canonical_assignment(n, k))
 
 
-def _sweeps_prob(sparse: bool = False, **kwargs):
+def _sweeps_prob(sparse: bool = False, n: int = _N, k: int = _K,
+                 degree: int | None = None, **kwargs):
     """Probabilistic refine_sweeps configs: the PRNG key rides as a
     traced argument (its extended key dtype is exempt from the f32
     dataflow rule, like every other key)."""
     import importlib
     refine_mod = importlib.import_module("repro.core.refine")
-    prob = canonical_sparse() if sparse else canonical_problem()
+    prob = _sparse_problem(n, k, degree) if sparse else canonical_problem(n, k)
     return jax.make_jaxpr(
-        lambda r, k: refine_mod.refine_sweeps(
-            prob, r, max_sweeps=_MAX_SWEEPS, key=k, **kwargs)
-    )(canonical_assignment(), jax.random.PRNGKey(0))
+        lambda r, key: refine_mod.refine_sweeps(
+            prob, r, max_sweeps=_MAX_SWEEPS, key=key, **kwargs)
+    )(canonical_assignment(n, k), jax.random.PRNGKey(0))
 
 
-def _batched(fn_name: str, **kwargs):
+def _batched(fn_name: str, n: int = _N, k: int = _K,
+             degree: int | None = None, **kwargs):
     from ..core import batch as batch_mod
     fn = getattr(batch_mod, fn_name)
-    probs, r0 = canonical_batch()
+    probs, r0 = canonical_batch(2, n, k)
     return jax.make_jaxpr(lambda r: fn(probs, r, "c", **kwargs))(r0)
 
 
-def _distributed(fn_name: str, **kwargs):
+def _distributed(fn_name: str, n: int = _N, k: int = _K,
+                 degree: int | None = None, **kwargs):
     from ..distributed import runtime as rt
     fn = getattr(rt, fn_name)
-    prob = canonical_problem()
+    prob = canonical_problem(n, k)
     return jax.make_jaxpr(
         lambda r: fn(prob, r, "c", num_shards=3, **kwargs)
-    )(canonical_assignment())
+    )(canonical_assignment(n, k))
 
 
-def _shard_map():
+def _shard_map(n: int = _N, k: int = _K, degree: int | None = None):
     from ..distributed.runtime import refine_distributed_shard_map
-    prob = canonical_problem()
+    prob = canonical_problem(n, k)
     # num_shards=1 so the real collective path traces on any host; the
     # mesh degenerates but the all_gather program is the same code path.
     return jax.make_jaxpr(
         lambda r: refine_distributed_shard_map(prob, r, "c", num_shards=1,
                                                max_turns=_MAX_TURNS)
-    )(canonical_assignment())
+    )(canonical_assignment(n, k))
 
 
-def _des_tick():
+def _des_tick(n: int = 12, k: int = 2, degree: int | None = None):
     from ..des.engine import des_tick
-    cfg, adj, state0 = _canonical_des()
+    cfg, adj, state0 = _canonical_des(n, k)
     return jax.make_jaxpr(lambda s: des_tick(cfg, adj, s))(state0)
+
+
+def _sized(fn: Callable[..., object], **fixed) -> Callable[..., object]:
+    """Bind an entry point's non-size arguments, leaving (n, k, degree)
+    open for the complexity grids (defaults = the canonical problem)."""
+    def thunk(n: int = _N, k: int = _K, degree: int | None = None):
+        return fn(n=n, k=k, degree=degree, **fixed)
+    return thunk
 
 
 _ENTRY_POINTS: tuple[EntryPoint, ...] = (
     EntryPoint("refine", "controller",
-               lambda: _controller("refine", max_turns=_MAX_TURNS)),
+               _sized(_controller, fn_name="refine", max_turns=_MAX_TURNS)),
     EntryPoint("refine.recompute", "controller",
-               lambda: _controller("refine", max_turns=_MAX_TURNS,
-                                   incremental=False)),
+               _sized(_controller, fn_name="refine", max_turns=_MAX_TURNS,
+                      incremental=False)),
     EntryPoint("refine.theta", "controller",
-               lambda: _controller("refine", framework="ct",
-                                   max_turns=_MAX_TURNS, theta=0.25)),
+               _sized(_controller, fn_name="refine", framework="ct",
+                      max_turns=_MAX_TURNS, theta=0.25)),
     EntryPoint("refine.kernel", "controller", _kernel_dissat),
     EntryPoint("refine_traced", "controller",
-               lambda: _controller("refine_traced", max_turns=_MAX_TURNS)),
+               _sized(_controller, fn_name="refine_traced",
+                      max_turns=_MAX_TURNS)),
     EntryPoint("refine_simultaneous", "controller",
-               lambda: _controller("refine_simultaneous",
-                                   max_sweeps=_MAX_SWEEPS)),
+               _sized(_controller, fn_name="refine_simultaneous",
+                      max_sweeps=_MAX_SWEEPS)),
     EntryPoint("refine.sparse", "controller",
-               lambda: _controller("refine", sparse=True,
-                                   max_turns=_MAX_TURNS)),
+               _sized(_controller, fn_name="refine", sparse=True,
+                      max_turns=_MAX_TURNS), rep="sparse"),
     EntryPoint("refine_traced.sparse", "controller",
-               lambda: _controller("refine_traced", sparse=True,
-                                   max_turns=_MAX_TURNS)),
+               _sized(_controller, fn_name="refine_traced", sparse=True,
+                      max_turns=_MAX_TURNS), rep="sparse"),
     EntryPoint("refine.sparse.edge_kernel", "controller",
-               _edge_kernel_dissat),
+               _edge_kernel_dissat, rep="sparse"),
     EntryPoint("refine_sweeps", "controller",
-               lambda: _controller("refine_sweeps",
-                                   max_sweeps=_MAX_SWEEPS)),
+               _sized(_controller, fn_name="refine_sweeps",
+                      max_sweeps=_MAX_SWEEPS)),
     EntryPoint("refine_sweeps.multi", "controller",
-               lambda: _sweeps_prob(moves_per_machine=2, move_prob=0.5,
-                                    epsilon=1e-3)),
+               _sized(_sweeps_prob, moves_per_machine=2, move_prob=0.5,
+                      epsilon=1e-3)),
     EntryPoint("refine_sweeps.sparse.unbounded", "controller",
-               lambda: _sweeps_prob(sparse=True, moves_per_machine=None,
-                                    move_prob=0.5, epsilon=1e-3)),
+               _sized(_sweeps_prob, sparse=True, moves_per_machine=None,
+                      move_prob=0.5, epsilon=1e-3), rep="sparse"),
     EntryPoint("batch.refine", "batched",
-               lambda: _batched("refine_batched", max_turns=_MAX_TURNS)),
+               _sized(_batched, fn_name="refine_batched",
+                      max_turns=_MAX_TURNS), max_n=1024),
     EntryPoint("batch.refine_traced", "batched",
-               lambda: _batched("refine_traced_batched",
-                                max_turns=_MAX_TURNS)),
+               _sized(_batched, fn_name="refine_traced_batched",
+                      max_turns=_MAX_TURNS), max_n=1024),
     EntryPoint("batch.refine_simultaneous", "batched",
-               lambda: _batched("refine_simultaneous_batched",
-                                max_sweeps=_MAX_SWEEPS)),
+               _sized(_batched, fn_name="refine_simultaneous_batched",
+                      max_sweeps=_MAX_SWEEPS), max_n=1024),
     EntryPoint("batch.refine_sweeps", "batched",
-               lambda: _batched("refine_sweeps_batched",
-                                max_sweeps=_MAX_SWEEPS)),
+               _sized(_batched, fn_name="refine_sweeps_batched",
+                      max_sweeps=_MAX_SWEEPS), max_n=1024),
     EntryPoint("distributed.refine", "distributed",
-               lambda: _distributed("refine_distributed",
-                                    max_turns=_MAX_TURNS)),
+               _sized(_distributed, fn_name="refine_distributed",
+                      max_turns=_MAX_TURNS)),
     EntryPoint("distributed.refine_traced", "distributed",
-               lambda: _distributed("refine_distributed_traced",
-                                    max_turns=_MAX_TURNS)),
+               _sized(_distributed, fn_name="refine_distributed_traced",
+                      max_turns=_MAX_TURNS)),
     EntryPoint("distributed.refine_simultaneous", "distributed",
-               lambda: _distributed("refine_distributed_simultaneous",
-                                    max_sweeps=_MAX_SWEEPS)),
+               _sized(_distributed, fn_name="refine_distributed_simultaneous",
+                      max_sweeps=_MAX_SWEEPS)),
     EntryPoint("distributed.shard_map", "distributed", _shard_map),
-    EntryPoint("des.tick", "des", _des_tick),
+    EntryPoint("des.tick", "des", _des_tick, max_n=1024),
 )
 
 
@@ -239,14 +298,27 @@ def registered_entry_points() -> tuple[EntryPoint, ...]:
     return _ENTRY_POINTS
 
 
+def entry_point(name: str) -> EntryPoint:
+    for ep in _ENTRY_POINTS:
+        if ep.name == name:
+            return ep
+    raise KeyError(f"unknown entry point {name!r}; registered: "
+                   f"{[e.name for e in _ENTRY_POINTS]}")
+
+
 @lru_cache(maxsize=None)
 def trace_entry_point(name: str):
     """ClosedJaxpr of the named entry point (cached per process)."""
-    for ep in _ENTRY_POINTS:
-        if ep.name == name:
-            return ep.trace()
-    raise KeyError(f"unknown entry point {name!r}; registered: "
-                   f"{[e.name for e in _ENTRY_POINTS]}")
+    return entry_point(name).trace()
+
+
+@lru_cache(maxsize=None)
+def trace_entry_point_sized(name: str, n: int, k: int,
+                            degree: int | None = None):
+    """ClosedJaxpr of the named entry point retraced at (n, k, degree)
+    — the complexity grids' workhorse (cached per process; nothing
+    executes, tracing cost is size-independent)."""
+    return entry_point(name).trace(n=n, k=k, degree=degree)
 
 
 def trace_all() -> dict[str, object]:

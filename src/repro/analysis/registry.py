@@ -1,6 +1,6 @@
 """Rule registry + analysis context for the contract linter (DESIGN.md §16).
 
-The linter is a flat registry of named rules grouped into four families:
+The linter is a flat registry of named rules grouped into five families:
 
   * ``jaxpr`` — trace the registered public entry points
     (:mod:`repro.analysis.entrypoints`) and walk the jaxprs: zero host
@@ -16,6 +16,10 @@ The linter is a flat registry of named rules grouped into four families:
     prove the per-round ledger bytes are independent of N.
   * ``docs``  — the DESIGN.md-§ and doc-file reference scans
     (formerly inlined in ``tests/test_docs.py``).
+  * ``complexity`` — retrace every entry point over a geometric size
+    grid, fit peak-bytes/op-count power laws against per-module declared
+    budgets, audit collective schedules, and diff fitted exponents
+    against the checked-in ``complexity.json`` (DESIGN.md §18).
 
 Findings carry a stable id ``rule:key``.  A checked-in baseline file
 (:func:`load_baseline`) absorbs *known* gaps — today exactly the
@@ -36,7 +40,7 @@ __all__ = [
     "FAMILIES",
 ]
 
-FAMILIES = ("jaxpr", "ast", "wire", "docs")
+FAMILIES = ("jaxpr", "ast", "wire", "docs", "complexity")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,13 +110,19 @@ class AnalysisContext:
     ``source_overrides`` maps repo-relative paths to replacement source
     text — the seeded-violation tests use it to lint a deliberately
     broken copy of a module without touching the tree on disk.
+
+    ``complexity_grid`` selects the size grid the complexity family
+    retraces on ("full" for CI/CLI, "quick" for the test suite — see
+    ``complexity_rules.GRIDS``).
     """
 
     def __init__(self, repo_root: pathlib.Path | str | None = None,
-                 source_overrides: dict[str, str] | None = None):
+                 source_overrides: dict[str, str] | None = None,
+                 complexity_grid: str = "full"):
         self.repo = pathlib.Path(repo_root) if repo_root else \
             _default_repo_root()
         self.source_overrides = dict(source_overrides or {})
+        self.complexity_grid = complexity_grid
         self._sources: dict[str, str] = {}
         self._trees: dict[str, ast.Module] = {}
         self._jaxprs = None

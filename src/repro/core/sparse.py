@@ -52,6 +52,18 @@ Array = jax.Array
 EDGE_PAD_MULTIPLE = 128     # padded E is a multiple of this (lane width)
 DEGREE_PAD_MULTIPLE = 8     # static max_degree rounds up to this
 
+# Declared asymptotic budgets for the sparse representation, consumed by
+# the complexity analyzers (DESIGN.md §18).  Sparse paths promise
+# O(E + N*K) memory and work: at most linear in N (at fixed degree),
+# linear in E (the degree sweep), linear in K.  A fitted N-exponent
+# near 2 means some equation materialized a dense (N, N)-shaped
+# intermediate — exactly the regression the sparse path exists to
+# prevent (ROADMAP items 1-2).
+SPARSE_COMPLEXITY = {
+    "mem": {"n": 1.0, "e": 1.0, "k": 1.0},
+    "ops": {"n": 1.0, "e": 1.0, "k": 1.0},
+}
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

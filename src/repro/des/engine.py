@@ -72,6 +72,16 @@ ROLLBACK = 1
 _INF = jnp.float32(3.0e38)
 _BIG_I = jnp.int32(0x3FFFFFFF)
 
+# Declared asymptotic budget for the DES tick, consumed by the
+# complexity analyzers (DESIGN.md §18).  The engine consumes the dense
+# (N, N) topology and the router scatters over (lp, slot, dest-lp)
+# windows, so the tick legitimately stages O(N^2)-shaped intermediates
+# (event_capacity is a static constant, not a problem dimension).
+DES_COMPLEXITY = {
+    "mem": {"n": 2.0, "k": 1.0},
+    "ops": {"n": 2.0, "k": 1.0},
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class DESConfig:

@@ -68,6 +68,33 @@ from .views import ShardViews, boundary_stats, build_views, shard_node_values
 
 Array = jax.Array
 
+# Declared asymptotic budgets for the distributed drivers, consumed by
+# the complexity analyzers (DESIGN.md §18).  The drivers shard the dense
+# representation, so per-driver memory/work carry the dense budget; the
+# paper's feasibility claim (§5 of arXiv 1111.0875) lives in the
+# collective schedule instead — see DISTRIBUTED_COLLECTIVES below.
+DISTRIBUTED_COMPLEXITY = {
+    "mem": {"n": 2.0, "k": 1.0},
+    "ops": {"n": 2.0, "k": 1.0},
+}
+
+# Per-driver collective budget: total per-shard operand bytes entering
+# psum/all_gather-family primitives, split into the per-round
+# ("recurring", inside the refinement while-loop) and one-off ("setup")
+# phases.  The emulated drivers exchange through staged buffers audited
+# by wire_rules (§9.2), so they must stage ZERO collectives; the mesh
+# driver gathers exactly one CandidateMsg per round — 4 scalar
+# all_gathers whose per-shard operands sum to protocol.CANDIDATE_BYTES
+# (§14.5), independent of N.
+DISTRIBUTED_COLLECTIVES = {
+    "distributed.refine": {"recurring_bytes": 0, "setup_bytes": 0},
+    "distributed.refine_traced": {"recurring_bytes": 0, "setup_bytes": 0},
+    "distributed.refine_simultaneous": {"recurring_bytes": 0,
+                                        "setup_bytes": 0},
+    "distributed.shard_map": {"recurring_bytes": protocol.CANDIDATE_BYTES,
+                              "setup_bytes": 0},
+}
+
 
 class WireMeasurement(NamedTuple):
     """Measured exchange bytes of one distributed run (DESIGN.md §14.5).

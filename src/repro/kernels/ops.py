@@ -21,6 +21,23 @@ from .dissatisfaction import (cost_matrix_pallas,
 
 Array = jax.Array
 
+# Declared asymptotic budgets for the kernel-reduction entry points,
+# consumed by the complexity analyzers (DESIGN.md §18) and keyed by
+# registered entry-point name.  The dense aggregate kernel consumes the
+# (N, N) adjacency (dense budget); the edge kernel streams fixed tiles
+# of the COO edge list, so its peak intermediate is O(E) and its work
+# O(E * K) — the same contract as the jnp sparse path it replaces.
+KERNEL_COMPLEXITY = {
+    "refine.kernel": {
+        "mem": {"n": 2.0, "k": 1.0},
+        "ops": {"n": 2.0, "k": 1.0},
+    },
+    "refine.sparse.edge_kernel": {
+        "mem": {"n": 1.0, "e": 1.0, "k": 1.0},
+        "ops": {"n": 1.0, "e": 1.0, "k": 1.0},
+    },
+}
+
 
 def _default_interpret() -> bool:
     return resolve_interpret(None)

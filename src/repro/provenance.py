@@ -1,0 +1,50 @@
+"""Run provenance: code version + toolchain + hardware (DESIGN.md §14.5).
+
+One shared implementation stamped into every machine-readable artifact
+the repo emits — BENCH_*.json (``benchmarks.common.write_bench_json``)
+and the analysis CLI's findings.json — so a number is never compared
+against one produced by a different commit, jax version, or device kind
+without noticing.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import platform
+import subprocess
+
+import jax
+
+__all__ = ["git_sha", "provenance", "REPO_ROOT"]
+
+# src/repro/provenance.py -> repo root is two levels above src
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def git_sha(root: str | None = None) -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             cwd=root or REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance(root: str | None = None) -> dict:
+    """What produced an artifact: code version + toolchain + hardware."""
+    import jaxlib
+    dev = jax.devices()[0]
+    return {
+        "git_sha": git_sha(root),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }

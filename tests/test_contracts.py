@@ -46,7 +46,7 @@ def _ctx(**kwargs) -> AnalysisContext:
 def test_registry_families_populated():
     rules = registered_rules()
     fams = {r.family for r in rules}
-    assert fams == {"jaxpr", "ast", "wire", "docs"}
+    assert fams == {"jaxpr", "ast", "wire", "docs", "complexity"}
     assert len(rules) >= 10
 
 
@@ -410,7 +410,7 @@ def test_seeded_n_dependent_ledger_fires():
 # ---------------------------------------------------------------------------
 
 def test_full_run_has_only_baselined_findings():
-    findings = run_rules(_ctx())
+    findings = run_rules(_ctx(complexity_grid="quick"))
     new, known, stale = split_findings(findings, load_baseline())
     assert new == [], [f.id for f in new]
     assert [f.id for f in known] == ["dispatch-coverage:sparse-distributed"]
@@ -421,7 +421,8 @@ def test_cli_check_passes_and_writes_json(tmp_path, capsys):
     from repro.analysis.__main__ import main
 
     out = tmp_path / "findings.json"
-    assert main(["--check", "--json", str(out)]) == 0
+    assert main(["--check", "--json", str(out),
+                 "--complexity-grid", "quick"]) == 0
     report = json.loads(out.read_text())
     assert report["new"] == []
     assert report["baselined"] == ["dispatch-coverage:sparse-distributed"]
